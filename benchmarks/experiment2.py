@@ -1,0 +1,105 @@
+"""Experiment 2 (paper §V-C): isolate length, in-degree and out-degree.
+
+Pipelines:
+  * length-L:    1 source -> chain of L composites -> sink
+  * in-degree-N: N sources -> 1 composite (N operands)
+  * out-degree-N: 1 source -> N subscribing composites
+
+The paper finds all three grow linearly, with length by far the steepest
+(sequential data dependencies).  In this engine, one round advances every
+live SU one hop, so:
+  * length: drain time = L rounds           (linear — the paper's floor),
+  * in/out-degree: ONE round; cost grows only with the vectorized gather/
+    fan-out width — the batched-XLA adaptation flattens the paper's
+    linear per-event overhead (reported as the beyond-paper win).
+
+Two capacity modes per degree sweep:
+  * fit   — engine capacity sized to the pipeline (recompiles per point;
+            shows the true capacity-cost slope),
+  * fixed — one engine config for the whole sweep (the multi-tenant
+            deployment mode: zero recompiles, flat cost).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.topologies import build_registry
+from repro.core import EngineConfig, StreamEngine
+
+
+def _drain_time(eng, src, ts, reps=3):
+    best = []
+    for r in range(reps):
+        eng.post(src, [1.0 + r], ts=ts + r)
+        t0 = time.perf_counter()
+        n = len(eng.drain(max_rounds=512))
+        best.append((time.perf_counter() - t0, n))
+    dt = float(np.median([b[0] for b in best]))
+    return dt, best[-1][1]
+
+
+def bench_length(sizes: List[int]) -> List[Dict]:
+    rows = []
+    for L in sizes:
+        inputs = [[]] + [[i] for i in range(L)]
+        reg, nodes, _ = build_registry(inputs)
+        eng = StreamEngine(reg)
+        eng.post(nodes[0], [0.0], ts=1)
+        eng.drain(max_rounds=512)             # warm-up
+        dt, rounds = _drain_time(eng, nodes[0], ts=10)
+        rows.append({"kind": "length", "n": L, "ms": dt * 1e3,
+                     "rounds": rounds})
+    return rows
+
+
+def bench_degree(kind: str, sizes: List[int], fixed_cap: bool) -> List[Dict]:
+    rows = []
+    cap = max(sizes)
+    for N in sizes:
+        if kind == "in":
+            inputs = [[] for _ in range(N)] + [list(range(N))]
+        else:
+            inputs = [[]] + [[0] for _ in range(N)]
+        cfg = None
+        if fixed_cap:
+            cfg = EngineConfig(
+                n_streams=cap + 2, batch=64, queue=max(1024, 4 * cap),
+                max_in=cap if kind == "in" else 1,
+                max_out=cap if kind == "out" else 1,
+                prog_len=max(16, 3 * cap + 4) if kind == "in" else 16,
+                n_temps=max(16, cap + 4))
+        reg, nodes, _ = build_registry(inputs, cfg=cfg)
+        eng = StreamEngine(reg)
+        src = nodes[0] if kind == "out" else nodes[0]
+        eng.post(src, [0.0], ts=1)
+        eng.drain(max_rounds=64)
+        dt, rounds = _drain_time(eng, src, ts=10)
+        rows.append({"kind": f"{kind}-degree-{'fixed' if fixed_cap else 'fit'}",
+                     "n": N, "ms": dt * 1e3, "rounds": rounds})
+    return rows
+
+
+def main(lengths=(1, 5, 10, 25, 50, 100),
+         degrees=(1, 5, 10, 25, 50, 100)) -> List[Dict]:
+    rows = []
+    rows += bench_length(list(lengths))
+    for fixed in (False, True):
+        rows += bench_degree("in", list(degrees), fixed)
+        rows += bench_degree("out", list(degrees), fixed)
+    print("kind,n,ms,rounds")
+    for r in rows:
+        print(f"{r['kind']},{r['n']},{r['ms']:.3f},{r['rounds']}", flush=True)
+    # linear fits (the paper's claim: slopes; ours: length slope >> degree)
+    for kind in sorted({r["kind"] for r in rows}):
+        xs = np.array([r["n"] for r in rows if r["kind"] == kind], float)
+        ys = np.array([r["ms"] for r in rows if r["kind"] == kind], float)
+        slope = np.polyfit(xs, ys, 1)[0]
+        print(f"# slope {kind}: {slope:.4f} ms/unit")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --------------------------------------------------------------------------
+# §Perf hillclimbing driver: runs the three chosen cells' variants and dumps
+# before/after records into experiments/perf/.  Each variant corresponds to
+# one hypothesis->change->measure iteration documented in EXPERIMENTS.md.
+#
+#   PYTHONPATH=src python -m benchmarks.perf_iterations [--only jamba,gemma,engine]
+# --------------------------------------------------------------------------
+import argparse
+import json
+import time
+
+from repro.launch import dryrun as DR
+
+OUT = "experiments/perf"
+
+# variant name -> lower_cell kwargs
+VARIANTS = {
+    # ---- jamba train_4k (memory-bound baseline: tm 45.5s, frac 5.7%) ----
+    "jamba__base": dict(arch="jamba-v0.1-52b", shape_name="train_4k",
+                        multi_pod=False),
+    # I1: sequential-in-chunk SSM + chunk-recompute custom VJP
+    "jamba__seqscan": dict(arch="jamba-v0.1-52b", shape_name="train_4k",
+                           multi_pod=False, override={"ssm_mode": "seq"}),
+    # I2: + fewer/larger chunks (1024): fewer boundary states, same math
+    "jamba__seqscan_ck1024": dict(arch="jamba-v0.1-52b", shape_name="train_4k",
+                                  multi_pod=False,
+                                  override={"ssm_mode": "seq",
+                                            "ssm_chunk": 1024}),
+
+    # ---- gemma3-1b train_4k (collective-bound: tx 2.66s vs tc 0.19s) ----
+    "gemma1b__base": dict(arch="gemma3-1b", shape_name="train_4k",
+                          multi_pod=False),
+    # I1: TP is overkill for 1B params -> re-axis the same 256 chips (64,4)
+    "gemma1b__dp64_tp4": dict(arch="gemma3-1b", shape_name="train_4k",
+                              multi_pod=False, mesh_shape=(64, 4)),
+    # I2: pure DP (256,1): no TP collectives at all, grads-only sync
+    "gemma1b__dp256": dict(arch="gemma3-1b", shape_name="train_4k",
+                           multi_pod=False, mesh_shape=(256, 1)),
+    # I3: (64,4) with accum=1 (one grad sync per step)
+    "gemma1b__dp64_tp4_accum1": dict(arch="gemma3-1b", shape_name="train_4k",
+                                     multi_pod=False, mesh_shape=(64, 4),
+                                     override={"grad_accum": 1}),
+
+    # ---- engine pubsub (paper-representative, collective-bound) ---------
+    "engine__base_sharded_64k": dict(arch="engine", shape_name="pubsub",
+                                     multi_pod=False, engine_mode="sharded"),
+    # I1: replicate state below the sharding crossover
+    "engine__replicated_64k": dict(arch="engine", shape_name="pubsub",
+                                   multi_pod=False, engine_mode="replicated"),
+    # I2: the honest scale-out point: 1M streams, sharded
+    "engine__sharded_1m": dict(arch="engine", shape_name="pubsub",
+                               multi_pod=False, engine_mode="sharded",
+                               engine_streams=1 << 20),
+    "engine__replicated_1m": dict(arch="engine", shape_name="pubsub",
+                                  multi_pod=False, engine_mode="replicated",
+                                  engine_streams=1 << 20),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated variant-name substrings")
+    args = ap.parse_args()
+    os.makedirs(OUT, exist_ok=True)
+    names = list(VARIANTS)
+    if args.only:
+        keys = args.only.split(",")
+        names = [n for n in names if any(k in n for k in keys)]
+    for name in names:
+        path = os.path.join(OUT, f"{name}.json")
+        if os.path.exists(path):
+            print(f"[skip existing] {name}", flush=True)
+            continue
+        t0 = time.time()
+        try:
+            rec = DR.lower_cell(**VARIANTS[name])
+            rec["variant"] = name
+        except Exception as e:
+            import traceback
+            rec = {"variant": name, "error": traceback.format_exc()}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+        dt = time.time() - t0
+        if "error" in rec:
+            print(f"[FAIL {dt:6.1f}s] {name}: "
+                  f"{rec['error'].splitlines()[-1]}", flush=True)
+        else:
+            r = rec["roofline"]
+            print(f"[ok   {dt:6.1f}s] {name:28s} bound={r['bottleneck']:10s} "
+                  f"tc={r['t_compute_s']:.3e} tm={r['t_memory_s']:.3e} "
+                  f"tx={r['t_collective_s']:.3e} frac={r['compute_fraction']:.3f}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

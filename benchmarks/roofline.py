@@ -1,0 +1,63 @@
+"""Roofline table: renders experiments/dryrun/*.json into the §Roofline
+markdown table for EXPERIMENTS.md (single-pod cells; the multi-pod pass is
+the compile/sharding proof)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load(out_dir: str = "experiments/dryrun") -> List[Dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_table(recs: List[Dict], multi_pod: bool = False) -> str:
+    rows = []
+    head = ("| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | bound | "
+            "roofline frac | model/HLO flops | mem/dev (GiB) | notes |")
+    sep = "|" + "---|" * 10
+    for r in recs:
+        if r.get("multi_pod") != multi_pod:
+            continue
+        if "skipped" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | "
+                        f"— | — | SKIPPED: {r['skipped'][:60]} |")
+            continue
+        if "error" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | "
+                        f"— | — | ERROR |")
+            continue
+        t = r.get("roofline")
+        if not t:
+            continue
+        mem = r["exec"]["memory_analysis"].get("total_hbm_bytes", 0) / 2 ** 30
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {t['t_compute_s']:.3e} | "
+            f"{t['t_memory_s']:.3e} | {t['t_collective_s']:.3e} | "
+            f"{t['bottleneck']} | {t['compute_fraction']:.3f} | "
+            f"{r.get('model_flops_ratio', 0):.2f} | {mem:.2f} | |")
+    return "\n".join([head, sep] + rows)
+
+
+def main():
+    recs = load()
+    ok = sum(1 for r in recs if "roofline" in r)
+    sk = sum(1 for r in recs if "skipped" in r)
+    er = sum(1 for r in recs if "error" in r)
+    print(f"# dry-run records: {len(recs)} ({ok} ok, {sk} skipped, {er} error)")
+    print()
+    print("## single-pod (16x16)")
+    print(fmt_table(recs, multi_pod=False))
+    print()
+    print("## multi-pod (2x16x16) — compile/sharding proof")
+    print(fmt_table(recs, multi_pod=True))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Random Data-Processing-Pipeline generator — the paper's §V-A tool.
+
+Control knobs mirror the paper's: number of streams, number of composite
+streams, operands (in-degree) per stream and how operands distribute
+across streams.  ``PAPER_TABLE1`` parameterizes six topologies matched to
+Table I (small/medium/big pairs); ``generate`` reproduces their structure
+statistically (geometric in-degree mix, preferential attachment for the
+out-degree skew the paper's dark/big nodes show).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import EngineConfig, PipelineGraph, Registry
+
+
+@dataclasses.dataclass(frozen=True)
+class TopoSpec:
+    name: str
+    n_nodes: int
+    n_sources: int
+    mean_in: float          # mean operands per composite
+    max_in: int
+    seed: int = 0
+
+
+# matched to paper Table I (id: nodes/sources/mean-in/max-in)
+PAPER_TABLE1 = [
+    TopoSpec("t1-small", 21, 11, 1.42, 9, seed=1),
+    TopoSpec("t2-small", 19, 9, 1.94, 8, seed=2),
+    TopoSpec("t3-medium", 42, 17, 3.54, 14, seed=3),
+    TopoSpec("t4-medium", 43, 18, 3.51, 16, seed=4),
+    TopoSpec("t5-big", 80, 30, 5.28, 29, seed=5),
+    TopoSpec("t6-big", 74, 24, 6.18, 24, seed=6),
+]
+
+
+def generate(spec: TopoSpec) -> List[List[int]]:
+    """Returns per-node input lists (sources first, acyclic by construction
+    — the engine handles cycles, but Table I topologies are DAGs)."""
+    rng = np.random.default_rng(spec.seed)
+    n_comp = spec.n_nodes - spec.n_sources
+    inputs: List[List[int]] = [[] for _ in range(spec.n_sources)]
+    # preferential attachment over existing nodes -> skewed out-degree
+    weights = np.ones(spec.n_nodes)
+    for ci in range(n_comp):
+        v = spec.n_sources + ci
+        # geometric operand count with the target mean, clipped
+        p = 1.0 / spec.mean_in
+        k = int(np.clip(rng.geometric(p), 1, min(spec.max_in, v)))
+        w = weights[:v] / weights[:v].sum()
+        ins = rng.choice(v, size=k, replace=False, p=w)
+        inputs.append(sorted(int(i) for i in ins))
+        weights[list(ins)] += 1.0
+        weights[v] = 1.0
+    return inputs
+
+
+def build_registry(inputs: List[List[int]], cfg: Optional[EngineConfig] = None,
+                   transform: str = "sum"
+                   ) -> Tuple[Registry, List, EngineConfig]:
+    n = len(inputs)
+    max_in = max((len(i) for i in inputs), default=1)
+    out_deg = np.zeros(n, int)
+    for ins in inputs:
+        for u in ins:
+            out_deg[u] += 1
+    if cfg is None:
+        cfg = EngineConfig(
+            n_streams=max(n + 1, 2), batch=64,
+            queue=max(1024, 4 * n), max_in=max(max_in, 1),
+            max_out=max(int(out_deg.max(initial=1)), 1),
+            prog_len=max(16, 3 * max_in + 4),
+            n_temps=max(16, max_in + 4))
+    reg = Registry(cfg)
+    t = reg.create_tenant("bench")
+    nodes = []
+    for v, ins in enumerate(inputs):
+        if not ins:
+            nodes.append(reg.create_stream(t, f"s{v}", ["v"]))
+        else:
+            srcs = [nodes[u] for u in ins]
+            expr = " + ".join(f"in{j}.v" for j in range(len(srcs)))
+            nodes.append(reg.create_composite(
+                t, f"c{v}", ["v"], srcs, transform={"v": expr}))
+    return reg, nodes, cfg
+
+
+def table1_row(inputs: List[List[int]]) -> Dict[str, float]:
+    return PipelineGraph(n=len(inputs), inputs=inputs).table1_metrics()

@@ -1,0 +1,73 @@
+"""Static configuration of the stream engine.
+
+Everything here is a *compile-time* constant of the one static XLA program
+(the analogue of the STORM topology's worker/executor counts).  Tenants'
+pipelines live entirely in device arrays sized by these capacities, so the
+program is compiled once per EngineConfig and never again as pipelines are
+created, rewired or destroyed.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    n_streams: int = 256        # stream-id capacity (rows of the state table)
+    n_tenants: int = 16
+    channels: int = 4           # max channels per Sensor Update
+    max_in: int = 16            # max in-degree (subscriptions per composite)
+    max_out: int = 16           # max out-degree (subscribers per stream)
+    batch: int = 64             # events popped per engine round
+    queue: int = 2048           # pending-SU slots
+    prog_len: int = 48          # bytecode instructions per stream program
+    n_consts: int = 16          # constant-pool entries per stream
+    n_temps: int = 16           # VM temporary registers
+    sink_buffer: int = 256      # per-round external-emission buffer rows
+
+    # ---- register file layout ------------------------------------------
+    @property
+    def reg_inputs(self) -> int:        # input slot i, channel c -> i*C + c
+        return 0
+
+    @property
+    def reg_prev(self) -> int:          # previous self value, C regs
+        return self.max_in * self.channels
+
+    @property
+    def reg_ts(self) -> int:            # trigger timestamp (as f32)
+        return self.reg_prev + self.channels
+
+    @property
+    def reg_trigger(self) -> int:       # trigger slot index (as f32)
+        return self.reg_ts + 1
+
+    @property
+    def reg_result(self) -> int:        # transform result, C regs
+        return self.reg_trigger + 1
+
+    @property
+    def reg_pref(self) -> int:          # pre-filter boolean
+        return self.reg_result + self.channels
+
+    @property
+    def reg_postf(self) -> int:         # post-filter boolean
+        return self.reg_pref + 1
+
+    @property
+    def reg_tmp(self) -> int:
+        return self.reg_postf + 1
+
+    @property
+    def n_regs(self) -> int:
+        return self.reg_tmp + self.n_temps
+
+    @property
+    def work(self) -> int:              # work items per round
+        return self.batch * self.max_out
+
+    def validate(self) -> "EngineConfig":
+        assert self.n_streams >= 2 and self.channels >= 1
+        assert self.max_in >= 1 and self.max_out >= 1
+        assert self.queue >= self.batch
+        return self

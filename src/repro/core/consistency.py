@@ -1,0 +1,67 @@
+"""Chronological-consistency rules (paper §IV-D, Listing 2), vectorized.
+
+The paper's algorithm, per triggering Sensor Update:
+
+    previousSelf = last update of the composite stream itself
+    if received.ts <= previousSelf.ts:  return null          (discard)
+    queried      = last updates of the remaining input streams
+    ts_out       = max(ts of received, previousSelf, queried...)
+    emit f(inputs) with timestamp ts_out
+
+The *relaxed* restriction (only the triggering element is checked) is what
+makes the model lock-free: nothing ever waits for co-inputs, stale
+deliveries are simply discarded, and duplicate deliveries of the same
+logical update collapse the DAG into execution trees (§IV-E).
+
+All functions operate on whole work-item batches.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def keep_mask(ts_recv: jnp.ndarray, ts_prev_self: jnp.ndarray) -> jnp.ndarray:
+    """Listing 2 discard rule: keep iff the trigger is strictly newer than
+    the stream's own last emission.  (W,) bool."""
+    return ts_recv > ts_prev_self
+
+
+def output_timestamp(
+    ts_recv: jnp.ndarray,          # (W,)
+    ts_prev_self: jnp.ndarray,     # (W,)
+    ts_inputs: jnp.ndarray,        # (W, M) timestamps of gathered co-inputs
+    input_valid: jnp.ndarray,      # (W, M) bool — real subscription slots
+) -> jnp.ndarray:
+    """ts_out = max over {received, previousSelf, queried co-inputs}."""
+    masked = jnp.where(input_valid, ts_inputs, jnp.iinfo(ts_inputs.dtype).min)
+    return jnp.maximum(jnp.maximum(ts_recv, ts_prev_self), masked.max(axis=-1))
+
+
+def resolve_winners(
+    targets: jnp.ndarray,      # (W,) int32 target stream id (may repeat)
+    ts_out: jnp.ndarray,       # (W,) proposed output timestamps
+    keep: jnp.ndarray,         # (W,) bool — passed the discard rule + filters
+    n_streams: int,
+) -> jnp.ndarray:
+    """Intra-round coalescing.
+
+    The sequential runtime of the paper processes work items one at a time;
+    a batched round may contain several items for the same target.  Under
+    the paper's rule the earliest would emit and later ones with equal
+    timestamps be discarded.  We coalesce: per target the item with the
+    *newest* ts_out wins (ties -> lowest work index), everything else is
+    discarded — the same SUs a sequential order [winner first] would keep.
+    Returns (W,) bool winner mask.
+    """
+    W = targets.shape[0]
+    idx = jnp.arange(W, dtype=jnp.int32)
+    tgt = jnp.where(keep, targets, n_streams)           # parked row for losers
+    big_neg = jnp.iinfo(ts_out.dtype).min
+
+    best_ts = jnp.full((n_streams + 1,), big_neg, ts_out.dtype)
+    best_ts = best_ts.at[tgt].max(jnp.where(keep, ts_out, big_neg))
+    is_best = keep & (ts_out == best_ts[tgt])
+
+    first_idx = jnp.full((n_streams + 1,), W, jnp.int32)
+    first_idx = first_idx.at[tgt].min(jnp.where(is_best, idx, W))
+    return is_best & (idx == first_idx[tgt])

@@ -1,0 +1,388 @@
+"""The static stream-processing topology (paper §IV-B / §IV-F).
+
+One jit-compiled step implements the four stages common to every pipeline:
+
+    1. subscriber dispatching   (fan-out via the routing tables)
+    2. data fetching            (gather co-input last values — lock-free)
+    3. transformation & filtering (bytecode VM + Listing-2 consistency)
+    4. store, trigger actions and emit
+
+The compiled program is *fixed*; tenants' pipelines — routing tables,
+bytecode, constants — are arguments, so creating/rewiring/destroying
+pipelines or injecting new user code never recompiles (the paper's core
+technique, ported from STORM to XLA).
+
+Batched-round semantics: STORM processes one tuple per bolt invocation; an
+XLA program is static dataflow, so each step ingests/pops a *batch* of SUs
+and advances every live SU by exactly one hop.  A pipeline of length L
+drains in L rounds — preserving the paper's observation (§V-C) that length
+is the non-parallelizable dimension while in/out-degree work is parallel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import consistency, program as pvm
+from repro.core.config import EngineConfig
+from repro.core.registry import EngineTables, Registry
+
+INT_MIN = np.iinfo(np.int32).min + 1
+INT_MAX = np.iinfo(np.int32).max
+
+
+class DeviceTables(NamedTuple):
+    in_table: jnp.ndarray
+    in_count: jnp.ndarray
+    out_table: jnp.ndarray
+    out_count: jnp.ndarray
+    progs: jnp.ndarray
+    consts: jnp.ndarray
+    is_composite: jnp.ndarray
+    tenant: jnp.ndarray
+    priority: jnp.ndarray
+    n_channels: jnp.ndarray
+    model_backed: jnp.ndarray
+
+    @classmethod
+    def from_host(cls, t: EngineTables) -> "DeviceTables":
+        return cls(**{f: jnp.asarray(getattr(t, f)) for f in cls._fields})
+
+
+class EngineState(NamedTuple):
+    values: jnp.ndarray        # (N, C) last value per stream
+    timestamps: jnp.ndarray    # (N,) int32 last emission ts (INT_MIN = never)
+    q_sid: jnp.ndarray         # (Q,)
+    q_vals: jnp.ndarray        # (Q, C)
+    q_ts: jnp.ndarray          # (Q,)
+    q_seq: jnp.ndarray         # (Q,) FIFO tiebreaker
+    q_valid: jnp.ndarray       # (Q,) bool
+    seq: jnp.ndarray           # scalar int32
+    tenant_emitted: jnp.ndarray  # (n_tenants,)
+    stats: Dict[str, jnp.ndarray]
+
+
+class IngestBatch(NamedTuple):
+    sid: jnp.ndarray           # (B,)
+    vals: jnp.ndarray          # (B, C)
+    ts: jnp.ndarray            # (B,)
+    valid: jnp.ndarray         # (B,) bool
+
+
+class SinkBatch(NamedTuple):
+    """Per-round external emissions (push to MQTT/STOMP subscribers,
+    model-plane bridge, ...)."""
+    sid: jnp.ndarray           # (S,)
+    vals: jnp.ndarray          # (S, C)
+    ts: jnp.ndarray            # (S,)
+    valid: jnp.ndarray         # (S,) bool
+
+
+STAT_KEYS = (
+    "ingested", "ingest_stale", "ingest_coalesced",
+    "processed", "discarded_stale", "filtered", "coalesced",
+    "emitted", "enqueued", "dropped_overflow", "nonfinite",
+)
+
+
+def init_state(cfg: EngineConfig) -> EngineState:
+    N, C, Q = cfg.n_streams, cfg.channels, cfg.queue
+    return EngineState(
+        values=jnp.zeros((N, C), jnp.float32),
+        timestamps=jnp.full((N,), INT_MIN, jnp.int32),
+        q_sid=jnp.zeros((Q,), jnp.int32),
+        q_vals=jnp.zeros((Q, C), jnp.float32),
+        q_ts=jnp.zeros((Q,), jnp.int32),
+        q_seq=jnp.zeros((Q,), jnp.int32),
+        q_valid=jnp.zeros((Q,), bool),
+        seq=jnp.zeros((), jnp.int32),
+        tenant_emitted=jnp.zeros((cfg.n_tenants,), jnp.int32),
+        stats={k: jnp.zeros((), jnp.int32) for k in STAT_KEYS},
+    )
+
+
+# --------------------------------------------------------------------------
+# queue helpers
+# --------------------------------------------------------------------------
+
+def _enqueue(state: EngineState, sid, vals, ts, mask) -> Tuple[EngineState, jnp.ndarray]:
+    """Append masked items into free queue slots; returns #dropped."""
+    Q = state.q_valid.shape[0]
+    X = sid.shape[0]
+    free = jnp.nonzero(~state.q_valid, size=X, fill_value=Q)[0]  # first X free
+    rank = jnp.cumsum(mask.astype(jnp.int32)) - 1               # slot per item
+    dest = jnp.where(mask, free[jnp.clip(rank, 0, X - 1)], Q)   # Q -> dropped
+    ok = mask & (dest < Q)
+    dest = jnp.where(ok, dest, Q)
+    seq_nos = state.seq + jnp.cumsum(mask.astype(jnp.int32))
+    new = state._replace(
+        q_sid=state.q_sid.at[dest].set(sid, mode="drop"),
+        q_vals=state.q_vals.at[dest].set(vals, mode="drop"),
+        q_ts=state.q_ts.at[dest].set(ts, mode="drop"),
+        q_seq=state.q_seq.at[dest].set(seq_nos, mode="drop"),
+        q_valid=state.q_valid.at[dest].set(True, mode="drop"),
+        seq=state.seq + mask.sum(dtype=jnp.int32),
+    )
+    dropped = (mask & ~ok).sum(dtype=jnp.int32)
+    return new, dropped
+
+
+def _pop(state: EngineState, tables: DeviceTables, batch: int):
+    """Priority pop: lowest (priority, seq) first — §IV-E novelty/§V-C
+    near-source prioritization; priority table all-zero == plain FIFO."""
+    key = jnp.where(state.q_valid, tables.priority[state.q_sid], INT_MAX)
+    order = jnp.lexsort((state.q_seq, key))
+    take = order[:batch]
+    pvalid = state.q_valid[take]
+    popped = (state.q_sid[take], state.q_vals[take], state.q_ts[take], pvalid)
+    state = state._replace(q_valid=state.q_valid.at[take].set(False))
+    return state, popped
+
+
+# --------------------------------------------------------------------------
+# stage 1 — subscriber dispatching (jnp reference; Pallas kernel optional)
+# --------------------------------------------------------------------------
+
+def fanout_reference(
+    sid: jnp.ndarray,        # (B,)
+    ts: jnp.ndarray,         # (B,)
+    pvalid: jnp.ndarray,     # (B,)
+    out_table: jnp.ndarray,  # (N, F)
+    timestamps: jnp.ndarray, # (N,)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Expand each event to its subscribers; early stale-check against the
+    targets' last-emission timestamps (saves fetching for obvious discards).
+    Returns targets (B, F) and early-keep mask (B, F)."""
+    targets = out_table[jnp.clip(sid, 0, out_table.shape[0] - 1)]
+    tvalid = (targets >= 0) & pvalid[:, None]
+    t_safe = jnp.clip(targets, 0, timestamps.shape[0] - 1)
+    early = tvalid & (ts[:, None] > timestamps[t_safe])
+    return jnp.where(tvalid, targets, -1), early
+
+
+# --------------------------------------------------------------------------
+# the step
+# --------------------------------------------------------------------------
+
+def make_step(
+    cfg: EngineConfig,
+    fanout_fn: Callable = fanout_reference,
+    donate: bool = True,
+    jit: bool = True,
+) -> Callable:
+    """Build the jitted engine round.  ``fanout_fn`` may be swapped for the
+    Pallas `stream_dispatch` kernel; both compute stage 1.  ``jit=False``
+    returns the raw step (the dry-run jits it with explicit shardings)."""
+    N, C, M, F = cfg.n_streams, cfg.channels, cfg.max_in, cfg.max_out
+    B, W = cfg.batch, cfg.work
+    R = cfg.n_regs
+
+    def step(tables: DeviceTables, state: EngineState, ingest: IngestBatch
+             ) -> Tuple[EngineState, SinkBatch]:
+        stats = dict(state.stats)
+
+        # ---- phase 0: ingest external SUs (store + enqueue) -------------
+        i_sid = jnp.clip(ingest.sid, 0, N - 1)
+        i_keep = ingest.valid & (ingest.ts > state.timestamps[i_sid])
+        i_win = consistency.resolve_winners(i_sid, ingest.ts, i_keep, N)
+        i_dest = jnp.where(i_win, i_sid, N)
+        state = state._replace(
+            values=state.values.at[i_dest].set(ingest.vals, mode="drop"),
+            timestamps=state.timestamps.at[i_dest].set(ingest.ts, mode="drop"),
+        )
+        stats["ingested"] += ingest.valid.sum(dtype=jnp.int32)
+        stats["ingest_stale"] += (ingest.valid & ~i_keep).sum(dtype=jnp.int32)
+        stats["ingest_coalesced"] += (i_keep & ~i_win).sum(dtype=jnp.int32)
+        state, dropped = _enqueue(state, i_sid, ingest.vals, ingest.ts, i_win)
+        stats["dropped_overflow"] += dropped
+
+        # ---- pop this round's events ------------------------------------
+        state, (e_sid, e_vals, e_ts, e_valid) = _pop(state, tables, B)
+
+        # ---- stage 1: subscriber dispatching ----------------------------
+        targets, early = fanout_fn(e_sid, e_ts, e_valid,
+                                   tables.out_table, state.timestamps)
+        wi_t = targets.reshape(W)
+        wi_keep0 = early.reshape(W)
+        wi_valid = (wi_t >= 0) & jnp.repeat(e_valid, F)
+        wi_src = jnp.repeat(e_sid, F)
+        wi_vals = jnp.repeat(e_vals, F, axis=0)
+        wi_ts = jnp.repeat(e_ts, F)
+        t = jnp.clip(wi_t, 0, N - 1)
+
+        # ---- stage 2: data fetching (lock-free gathers) ------------------
+        in_row = tables.in_table[t]                      # (W, M)
+        in_valid = in_row >= 0
+        src_safe = jnp.clip(in_row, 0, N - 1)
+        vals_in = state.values[src_safe]                 # (W, M, C)
+        ts_in = jnp.where(in_valid, state.timestamps[src_safe], INT_MIN)
+        trig = jnp.argmax((in_row == wi_src[:, None]) & in_valid, axis=1)
+        rows = jnp.arange(W)
+        vals_in = vals_in.at[rows, trig].set(wi_vals)    # fresh SU overrides
+        ts_in = ts_in.at[rows, trig].set(wi_ts)
+        prev_vals = state.values[t]
+        prev_ts = state.timestamps[t]
+
+        # ---- stage 3: transformation & filtering -------------------------
+        regs = jnp.zeros((W, R), jnp.float32)
+        flat_in = jnp.where(in_valid[..., None], vals_in, 0.0).reshape(W, M * C)
+        regs = regs.at[:, cfg.reg_inputs:cfg.reg_inputs + M * C].set(flat_in)
+        regs = regs.at[:, cfg.reg_prev:cfg.reg_prev + C].set(prev_vals)
+        regs = regs.at[:, cfg.reg_ts].set(wi_ts.astype(jnp.float32))
+        regs = regs.at[:, cfg.reg_trigger].set(trig.astype(jnp.float32))
+        regs_out = pvm.execute_batch(tables.progs[t], tables.consts[t], regs)
+        new_vals = regs_out[:, cfg.reg_result:cfg.reg_result + C]
+        finite = jnp.isfinite(new_vals)
+        stats["nonfinite"] = stats["nonfinite"] + (
+            (~finite).any(axis=-1) & wi_valid).sum(dtype=jnp.int32)
+        new_vals = jnp.where(finite, new_vals, 0.0)
+        pref = regs_out[:, cfg.reg_pref] != 0.0
+        postf = regs_out[:, cfg.reg_postf] != 0.0
+
+        keep_ts = consistency.keep_mask(wi_ts, prev_ts) & wi_keep0
+        ts_out = consistency.output_timestamp(wi_ts, prev_ts, ts_in, in_valid)
+        live = wi_valid & tables.is_composite[t]
+        keep = live & keep_ts & pref & postf
+
+        stats["processed"] += live.sum(dtype=jnp.int32)
+        stats["discarded_stale"] += (live & ~keep_ts).sum(dtype=jnp.int32)
+        stats["filtered"] += (live & keep_ts & ~(pref & postf)).sum(dtype=jnp.int32)
+
+        # ---- stage 4: store, trigger actions and emit ---------------------
+        win = consistency.resolve_winners(t, ts_out, keep, N)
+        stats["coalesced"] += (keep & ~win).sum(dtype=jnp.int32)
+        stats["emitted"] += win.sum(dtype=jnp.int32)
+        dest = jnp.where(win, t, N)
+        state = state._replace(
+            values=state.values.at[dest].set(new_vals, mode="drop"),
+            timestamps=state.timestamps.at[dest].set(ts_out, mode="drop"),
+            tenant_emitted=state.tenant_emitted.at[
+                jnp.where(win, tables.tenant[t], cfg.n_tenants)
+            ].add(1, mode="drop"),
+        )
+
+        # re-dispatch winners that themselves have subscribers
+        fanout_more = win & (tables.out_count[t] > 0)
+        state, dropped = _enqueue(state, t, new_vals, ts_out, fanout_more)
+        stats["dropped_overflow"] += dropped
+        stats["enqueued"] += fanout_more.sum(dtype=jnp.int32)
+
+        # external sink buffer: first `sink_buffer` winners this round
+        S = cfg.sink_buffer
+        sink_rank = jnp.cumsum(win.astype(jnp.int32)) - 1
+        sdest = jnp.where(win & (sink_rank < S), sink_rank, S)
+        sink = SinkBatch(
+            sid=jnp.zeros((S,), jnp.int32).at[sdest].set(t, mode="drop"),
+            vals=jnp.zeros((S, C), jnp.float32).at[sdest].set(new_vals, mode="drop"),
+            ts=jnp.zeros((S,), jnp.int32).at[sdest].set(ts_out, mode="drop"),
+            valid=jnp.zeros((S,), bool).at[sdest].set(True, mode="drop"),
+        )
+        state = state._replace(stats=stats)
+        return state, sink
+
+    if not jit:
+        return step
+    return jax.jit(step, donate_argnums=(1,) if donate else ())
+
+
+# --------------------------------------------------------------------------
+# host-side wrapper
+# --------------------------------------------------------------------------
+
+class StreamEngine:
+    """Convenience wrapper owning tables, state and the compiled step."""
+
+    def __init__(self, registry: Registry, *, fanout_fn: Callable = fanout_reference,
+                 priority: Optional[np.ndarray] = None):
+        self.cfg = registry.cfg
+        self.registry = registry
+        self.tables = DeviceTables.from_host(registry.build_tables(priority))
+        self.state = init_state(self.cfg)
+        self._step = make_step(self.cfg, fanout_fn)
+        self._pending: List[Tuple[int, np.ndarray, int]] = []
+
+    # -------------------------------------------------------------- ingest
+    def post(self, stream, values: Sequence[float], ts: int) -> None:
+        """API ingress: a Web Object posts a Sensor Update (paper §III)."""
+        sid = stream.sid if hasattr(stream, "sid") else int(stream)
+        v = np.zeros((self.cfg.channels,), np.float32)
+        v[: len(values)] = values
+        self._pending.append((sid, v, int(ts)))
+
+    def _take_ingest(self) -> IngestBatch:
+        """At most one pending SU *per stream* per round (preserving order),
+        so successive updates of one device are processed per-SU like the
+        paper's runtime; same-stream bursts forced into one batch would be
+        coalesced to the newest (counted in ``coalesced``)."""
+        B, C = self.cfg.batch, self.cfg.channels
+        sid = np.zeros((B,), np.int32)
+        vals = np.zeros((B, C), np.float32)
+        ts = np.zeros((B,), np.int32)
+        valid = np.zeros((B,), bool)
+        take, rest, seen = [], [], set()
+        for item in self._pending:
+            if len(take) < B and item[0] not in seen:
+                take.append(item)
+                seen.add(item[0])
+            else:
+                rest.append(item)
+        self._pending = rest
+        for i, (s, v, t) in enumerate(take):
+            sid[i], vals[i], ts[i], valid[i] = s, v, t, True
+        return IngestBatch(jnp.asarray(sid), jnp.asarray(vals),
+                           jnp.asarray(ts), jnp.asarray(valid))
+
+    # --------------------------------------------------------------- rounds
+    def round(self) -> SinkBatch:
+        self.state, sink = self._step(self.tables, self.state, self._take_ingest())
+        return sink
+
+    def drain(self, max_rounds: int = 256) -> List[SinkBatch]:
+        """Run rounds until the queue (and host backlog) is empty."""
+        sinks = []
+        for _ in range(max_rounds):
+            busy_host = bool(self._pending)
+            sinks.append(self.round())
+            if not busy_host and not bool(self.state.q_valid.any()):
+                break
+        return sinks
+
+    # ----------------------------------------------------- code injection
+    def inject_code(self, stream, transform: Dict[str, str],
+                    pre_filter: Optional[str] = None,
+                    post_filter: Optional[str] = None) -> None:
+        """Replace a composite stream's user code *live* — the tables are
+        data, the compiled step is untouched (paper §IV-F)."""
+        s = self.registry.streams[stream.sid if hasattr(stream, "sid") else int(stream)]
+        if not s.composite:
+            raise ValueError("only composite streams carry user code")
+        s.transform = dict(transform)
+        s.pre_filter = pre_filter
+        s.post_filter = post_filter
+        prog, consts = self.registry._compile_stream(s)
+        self.tables = self.tables._replace(
+            progs=self.tables.progs.at[s.sid].set(jnp.asarray(prog)),
+            consts=self.tables.consts.at[s.sid].set(jnp.asarray(consts)),
+        )
+
+    def rewire(self) -> None:
+        """Re-lower the registry after subscribe()/new streams — still no
+        recompilation (same-shaped tables)."""
+        prio = np.asarray(self.tables.priority)
+        self.tables = DeviceTables.from_host(self.registry.build_tables(prio))
+
+    # ------------------------------------------------------------- readback
+    def value_of(self, stream) -> np.ndarray:
+        sid = stream.sid if hasattr(stream, "sid") else int(stream)
+        return np.asarray(self.state.values[sid])
+
+    def ts_of(self, stream) -> int:
+        sid = stream.sid if hasattr(stream, "sid") else int(stream)
+        return int(self.state.timestamps[sid])
+
+    def counters(self) -> Dict[str, int]:
+        return {k: int(v) for k, v in self.state.stats.items()}

@@ -1,0 +1,460 @@
+"""User-code injection: tensor bytecode for composite-stream transforms.
+
+ServIoTicy lets tenants attach JavaScript snippets (run in Rhino) to
+composite streams; the snippets use "basic operators and functions from the
+Math object ... as well as shorthand conditional expressions" (paper §IV-A).
+Arbitrary JS cannot execute on a TPU, and recompiling the XLA program per
+tenant would defeat the paper's static-topology insight.  We therefore map
+the same closed expression language onto a tiny register VM whose programs
+are *data*: an ``(L, 4)`` int32 instruction table plus an ``(K,)`` float32
+constant pool per stream.  Injecting new user code mutates these tables on
+device and never triggers recompilation — the exact analogue of ServIoTicy
+injecting Rhino snippets into a running STORM topology.
+
+The VM is interpreted inside the compiled engine step with
+``jax.lax.switch`` over opcodes, vmapped across the event batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --------------------------------------------------------------------------
+# Instruction set
+# --------------------------------------------------------------------------
+# Encoding: (op, dst, a, b).  `a`/`b` index the register file except for
+# CONST where `a` indexes the per-stream constant pool.
+
+OP_NOP = 0
+OP_MOV = 1      # dst = r[a]
+OP_CONST = 2    # dst = consts[a]
+OP_ADD = 3      # dst = r[a] + r[b]
+OP_SUB = 4
+OP_MUL = 5
+OP_DIV = 6      # safe: r[b]==0 -> 0
+OP_MIN = 7
+OP_MAX = 8
+OP_NEG = 9
+OP_ABS = 10
+OP_EXP = 11
+OP_LOG = 12     # safe: log(max(x, tiny))
+OP_SQRT = 13    # safe: sqrt(max(x, 0))
+OP_SIN = 14
+OP_COS = 15
+OP_FLOOR = 16
+OP_POW = 17     # sign-safe |a|^b * sign(a) when b integral-ish; plain otherwise
+OP_LT = 18
+OP_LE = 19
+OP_EQ = 20
+OP_NE = 21
+OP_AND = 22     # boolean (nonzero) and
+OP_OR = 23
+OP_NOT = 24
+OP_SELECT = 25  # dst = r[a] != 0 ? r[b] : r[dst]
+OP_ROUND = 26
+OP_SIGN = 27
+OP_TANH = 28
+
+N_OPS = 29
+
+_EPS = 1e-30
+
+
+def _b_nop(r, a, b, c, d):
+    return r[d]
+
+
+def _b_mov(r, a, b, c, d):
+    return r[a]
+
+
+def _b_const(r, a, b, c, d):
+    return c[a]
+
+
+def _binary(fn):
+    return lambda r, a, b, c, d: fn(r[a], r[b])
+
+
+def _unary(fn):
+    return lambda r, a, b, c, d: fn(r[a])
+
+
+def _safe_div(x, y):
+    return jnp.where(jnp.abs(y) < _EPS, 0.0, x / jnp.where(jnp.abs(y) < _EPS, 1.0, y))
+
+
+def _safe_log(x):
+    return jnp.log(jnp.maximum(x, _EPS))
+
+
+def _safe_sqrt(x):
+    return jnp.sqrt(jnp.maximum(x, 0.0))
+
+
+def _bool(x):
+    return (x != 0.0).astype(jnp.float32)
+
+
+_BRANCHES: List[Callable] = [None] * N_OPS
+_BRANCHES[OP_NOP] = _b_nop
+_BRANCHES[OP_MOV] = _b_mov
+_BRANCHES[OP_CONST] = _b_const
+_BRANCHES[OP_ADD] = _binary(jnp.add)
+_BRANCHES[OP_SUB] = _binary(jnp.subtract)
+_BRANCHES[OP_MUL] = _binary(jnp.multiply)
+_BRANCHES[OP_DIV] = _binary(_safe_div)
+_BRANCHES[OP_MIN] = _binary(jnp.minimum)
+_BRANCHES[OP_MAX] = _binary(jnp.maximum)
+_BRANCHES[OP_NEG] = _unary(jnp.negative)
+_BRANCHES[OP_ABS] = _unary(jnp.abs)
+_BRANCHES[OP_EXP] = _unary(jnp.exp)
+_BRANCHES[OP_LOG] = _unary(_safe_log)
+_BRANCHES[OP_SQRT] = _unary(_safe_sqrt)
+_BRANCHES[OP_SIN] = _unary(jnp.sin)
+_BRANCHES[OP_COS] = _unary(jnp.cos)
+_BRANCHES[OP_FLOOR] = _unary(jnp.floor)
+_BRANCHES[OP_POW] = _binary(lambda x, y: jnp.sign(x) * jnp.power(jnp.abs(x) + _EPS, y))
+_BRANCHES[OP_LT] = _binary(lambda x, y: (x < y).astype(jnp.float32))
+_BRANCHES[OP_LE] = _binary(lambda x, y: (x <= y).astype(jnp.float32))
+_BRANCHES[OP_EQ] = _binary(lambda x, y: (x == y).astype(jnp.float32))
+_BRANCHES[OP_NE] = _binary(lambda x, y: (x != y).astype(jnp.float32))
+_BRANCHES[OP_AND] = _binary(lambda x, y: _bool(x) * _bool(y))
+_BRANCHES[OP_OR] = _binary(lambda x, y: jnp.maximum(_bool(x), _bool(y)))
+_BRANCHES[OP_NOT] = _unary(lambda x: 1.0 - _bool(x))
+_BRANCHES[OP_SELECT] = lambda r, a, b, c, d: jnp.where(r[a] != 0.0, r[b], r[d])
+_BRANCHES[OP_ROUND] = _unary(lambda x: jnp.round(x))
+_BRANCHES[OP_SIGN] = _unary(jnp.sign)
+_BRANCHES[OP_TANH] = _unary(jnp.tanh)
+
+
+def execute(prog: jnp.ndarray, consts: jnp.ndarray, regs: jnp.ndarray) -> jnp.ndarray:
+    """Run one bytecode program.
+
+    prog:   (L, 4) int32 — (op, dst, a, b); NOP-padded.
+    consts: (K,) float32 constant pool.
+    regs:   (R,) float32 initial register file.
+    Returns the final register file.
+    """
+
+    def body(i, regs):
+        op, dst, a, b = prog[i, 0], prog[i, 1], prog[i, 2], prog[i, 3]
+        val = jax.lax.switch(
+            jnp.clip(op, 0, N_OPS - 1),
+            _BRANCHES,
+            regs, a, b, consts, dst,
+        )
+        return regs.at[dst].set(val)
+
+    return jax.lax.fori_loop(0, prog.shape[0], body, regs)
+
+
+# vmapped over a batch of events, each with its own program (gathered by
+# stream id from the program table).
+execute_batch = jax.vmap(execute, in_axes=(0, 0, 0))
+
+
+# --------------------------------------------------------------------------
+# Expression compiler:  "(\$temp - 32) * 5 / 9"  →  bytecode
+# --------------------------------------------------------------------------
+
+_TOKEN_RE = re.compile(
+    r"\s*(?:(?P<num>\d+\.?\d*(?:[eE][+-]?\d+)?)"
+    r"|(?P<name>[A-Za-z_$][A-Za-z0-9_.\[\]$]*)"
+    r"|(?P<op>\*\*|<=|>=|==|!=|&&|\|\||[-+*/%(),?:<>!]))"
+)
+
+_FUNCS1 = {
+    "abs": OP_ABS, "exp": OP_EXP, "log": OP_LOG, "sqrt": OP_SQRT,
+    "sin": OP_SIN, "cos": OP_COS, "floor": OP_FLOOR, "round": OP_ROUND,
+    "sign": OP_SIGN, "tanh": OP_TANH, "neg": OP_NEG,
+}
+_FUNCS2 = {"min": OP_MIN, "max": OP_MAX, "pow": OP_POW}
+
+
+class CompileError(ValueError):
+    pass
+
+
+def _tokenize(src: str) -> List[Tuple[str, str]]:
+    out, pos = [], 0
+    while pos < len(src):
+        m = _TOKEN_RE.match(src, pos)
+        if not m or m.end() == pos:
+            if src[pos:].strip() == "":
+                break
+            raise CompileError(f"bad token at {src[pos:pos+12]!r}")
+        pos = m.end()
+        for kind in ("num", "name", "op"):
+            if m.group(kind) is not None:
+                out.append((kind, m.group(kind)))
+                break
+    out.append(("eof", ""))
+    return out
+
+
+@dataclasses.dataclass
+class _Ctx:
+    toks: List[Tuple[str, str]]
+    i: int
+    env: Dict[str, int]          # identifier -> register index
+    consts: List[float]
+    code: List[Tuple[int, int, int, int]]
+    next_tmp: int
+    tmp_hi: int
+
+    def peek(self):
+        return self.toks[self.i]
+
+    def eat(self, val=None):
+        kind, tok = self.toks[self.i]
+        if val is not None and tok != val:
+            raise CompileError(f"expected {val!r}, got {tok!r}")
+        self.i += 1
+        return kind, tok
+
+    def tmp(self) -> int:
+        if self.next_tmp >= self.tmp_hi:
+            raise CompileError("out of temporary registers")
+        r = self.next_tmp
+        self.next_tmp += 1
+        return r
+
+    def const(self, v: float) -> int:
+        for j, c in enumerate(self.consts):
+            if c == v:
+                return j
+        self.consts.append(v)
+        return len(self.consts) - 1
+
+    def emit(self, op, dst, a=0, b=0):
+        self.code.append((op, dst, a, b))
+
+
+# precedence-climbing parser ------------------------------------------------
+
+_BINOPS = {
+    "||": (1, OP_OR), "&&": (2, OP_AND),
+    "==": (3, OP_EQ), "!=": (3, OP_NE),
+    "<": (4, OP_LT), "<=": (4, OP_LE), ">": (4, None), ">=": (4, None),
+    "+": (5, OP_ADD), "-": (5, OP_SUB),
+    "*": (6, OP_MUL), "/": (6, OP_DIV), "%": (6, None),
+    "**": (8, OP_POW),
+}
+
+
+def _parse_primary(ctx: _Ctx) -> int:
+    kind, tok = ctx.peek()
+    if tok == "(":
+        ctx.eat("(")
+        r = _parse_expr(ctx, 0)
+        ctx.eat(")")
+        return r
+    if tok == "-":
+        ctx.eat("-")
+        r = _parse_primary(ctx)
+        d = ctx.tmp()
+        ctx.emit(OP_NEG, d, r)
+        return d
+    if tok == "!":
+        ctx.eat("!")
+        r = _parse_primary(ctx)
+        d = ctx.tmp()
+        ctx.emit(OP_NOT, d, r)
+        return d
+    if kind == "num":
+        ctx.eat()
+        d = ctx.tmp()
+        ctx.emit(OP_CONST, d, ctx.const(float(tok)))
+        return d
+    if kind == "name":
+        ctx.eat()
+        if ctx.peek()[1] == "(":  # function call
+            name = tok.lstrip("$")
+            ctx.eat("(")
+            args = [_parse_expr(ctx, 0)]
+            while ctx.peek()[1] == ",":
+                ctx.eat(",")
+                args.append(_parse_expr(ctx, 0))
+            ctx.eat(")")
+            d = ctx.tmp()
+            if name in _FUNCS1 and len(args) == 1:
+                ctx.emit(_FUNCS1[name], d, args[0])
+            elif name in _FUNCS2 and len(args) == 2:
+                ctx.emit(_FUNCS2[name], d, args[0], args[1])
+            else:
+                raise CompileError(f"unknown function {name}/{len(args)}")
+            return d
+        key = tok.lstrip("$")
+        if key not in ctx.env:
+            raise CompileError(f"unknown identifier {tok!r}; env={sorted(ctx.env)}")
+        return ctx.env[key]
+    raise CompileError(f"unexpected token {tok!r}")
+
+
+def _parse_expr(ctx: _Ctx, min_prec: int) -> int:
+    lhs = _parse_primary(ctx)
+    while True:
+        kind, tok = ctx.peek()
+        if tok == "?":  # ternary, lowest precedence, right-assoc
+            if min_prec > 0:
+                return lhs
+            ctx.eat("?")
+            t_val = _parse_expr(ctx, 0)
+            ctx.eat(":")
+            f_val = _parse_expr(ctx, 0)
+            d = ctx.tmp()
+            ctx.emit(OP_MOV, d, f_val)
+            ctx.emit(OP_SELECT, d, lhs, t_val)
+            lhs = d
+            continue
+        if tok not in _BINOPS:
+            return lhs
+        prec, op = _BINOPS[tok]
+        if prec < min_prec:
+            return lhs
+        ctx.eat()
+        rhs = _parse_expr(ctx, prec + 1)
+        d = ctx.tmp()
+        if tok == ">":
+            ctx.emit(OP_LT, d, rhs, lhs)
+        elif tok == ">=":
+            ctx.emit(OP_LE, d, rhs, lhs)
+        elif tok == "%":
+            # a % b  ==  a - floor(a/b)*b
+            q = ctx.tmp()
+            ctx.emit(OP_DIV, q, lhs, rhs)
+            ctx.emit(OP_FLOOR, q, q)
+            ctx.emit(OP_MUL, q, q, rhs)
+            ctx.emit(OP_SUB, d, lhs, q)
+        else:
+            ctx.emit(op, d, lhs, rhs)
+        lhs = d
+
+
+def compile_expr(
+    src: str,
+    env: Dict[str, int],
+    *,
+    result_reg: int,
+    tmp_base: int,
+    tmp_count: int,
+) -> Tuple[List[Tuple[int, int, int, int]], List[float]]:
+    """Compile one expression to bytecode leaving its value in ``result_reg``.
+
+    env maps bare identifier names (channel refs, ``prev``, ``ts`` ...) to
+    register indices.  Temporaries are allocated in
+    [tmp_base, tmp_base + tmp_count).
+    """
+    ctx = _Ctx(
+        toks=_tokenize(src), i=0, env=dict(env), consts=[],
+        code=[], next_tmp=tmp_base, tmp_hi=tmp_base + tmp_count,
+    )
+    r = _parse_expr(ctx, 0)
+    if ctx.peek()[0] != "eof":
+        raise CompileError(f"trailing input at {ctx.peek()[1]!r}")
+    ctx.emit(OP_MOV, result_reg, r)
+    return ctx.code, ctx.consts
+
+
+def assemble(
+    code: Sequence[Tuple[int, int, int, int]],
+    consts: Sequence[float],
+    max_len: int,
+    max_consts: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Pad bytecode and constants to the engine's static tables."""
+    if len(code) > max_len:
+        raise CompileError(f"program too long: {len(code)} > {max_len}")
+    if len(consts) > max_consts:
+        raise CompileError(f"too many constants: {len(consts)} > {max_consts}")
+    prog = np.zeros((max_len, 4), np.int32)
+    for i, ins in enumerate(code):
+        prog[i] = ins
+    cst = np.zeros((max_consts,), np.float32)
+    cst[: len(consts)] = consts
+    return prog, cst
+
+
+# --------------------------------------------------------------------------
+# Pure-python oracle (used by tests / hypothesis)
+# --------------------------------------------------------------------------
+
+def execute_py(prog: np.ndarray, consts: np.ndarray, regs: np.ndarray) -> np.ndarray:
+    regs = np.asarray(regs, np.float32).copy()
+    consts = np.asarray(consts, np.float32)
+
+    def booly(x):
+        return 1.0 if x != 0 else 0.0
+
+    for op, dst, a, b in np.asarray(prog, np.int64):
+        r = regs
+        if op == OP_NOP:
+            continue
+        elif op == OP_MOV:
+            v = r[a]
+        elif op == OP_CONST:
+            v = consts[a]
+        elif op == OP_ADD:
+            v = r[a] + r[b]
+        elif op == OP_SUB:
+            v = r[a] - r[b]
+        elif op == OP_MUL:
+            v = r[a] * r[b]
+        elif op == OP_DIV:
+            v = 0.0 if abs(r[b]) < _EPS else r[a] / r[b]
+        elif op == OP_MIN:
+            v = min(r[a], r[b])
+        elif op == OP_MAX:
+            v = max(r[a], r[b])
+        elif op == OP_NEG:
+            v = -r[a]
+        elif op == OP_ABS:
+            v = abs(r[a])
+        elif op == OP_EXP:
+            v = math.exp(min(r[a], 80.0)) if r[a] < 80 else math.exp(80.0)
+            v = np.float32(np.exp(np.float32(r[a])))
+        elif op == OP_LOG:
+            v = np.float32(np.log(max(np.float32(r[a]), _EPS)))
+        elif op == OP_SQRT:
+            v = math.sqrt(max(r[a], 0.0))
+        elif op == OP_SIN:
+            v = np.float32(np.sin(np.float32(r[a])))
+        elif op == OP_COS:
+            v = np.float32(np.cos(np.float32(r[a])))
+        elif op == OP_FLOOR:
+            v = math.floor(r[a])
+        elif op == OP_POW:
+            v = np.sign(r[a]) * np.power(np.abs(np.float32(r[a])) + np.float32(_EPS), np.float32(r[b]))
+        elif op == OP_LT:
+            v = 1.0 if r[a] < r[b] else 0.0
+        elif op == OP_LE:
+            v = 1.0 if r[a] <= r[b] else 0.0
+        elif op == OP_EQ:
+            v = 1.0 if r[a] == r[b] else 0.0
+        elif op == OP_NE:
+            v = 1.0 if r[a] != r[b] else 0.0
+        elif op == OP_AND:
+            v = booly(r[a]) * booly(r[b])
+        elif op == OP_OR:
+            v = max(booly(r[a]), booly(r[b]))
+        elif op == OP_NOT:
+            v = 1.0 - booly(r[a])
+        elif op == OP_SELECT:
+            v = r[b] if r[a] != 0 else r[dst]
+        elif op == OP_ROUND:
+            v = np.float32(np.round(np.float32(r[a])))
+        elif op == OP_SIGN:
+            v = np.sign(r[a])
+        elif op == OP_TANH:
+            v = np.float32(np.tanh(np.float32(r[a])))
+        else:
+            raise ValueError(f"bad opcode {op}")
+        regs[dst] = np.float32(v)
+    return regs

@@ -1,0 +1,253 @@
+"""Multi-tenant registry of Service Objects, streams and subscriptions.
+
+This is the host-side control plane — the analogue of ServIoTicy's REST API
+(§II-1) plus the Couchbase documents describing Service Objects.  It owns:
+
+  * tenants (multi-tenancy: every stream belongs to a tenant; provenance of
+    every emission is attributable to the owning tenant),
+  * Service Objects grouping streams,
+  * simple streams (device-fed) and composite streams (user code + inputs),
+  * the compilation of user code (paper Listing 1) into VM bytecode,
+  * the lowering of the whole subscription graph into the dense device
+    tables consumed by the static engine program.
+
+Everything the engine needs at runtime is produced by :meth:`build_tables`;
+re-running it after pipeline changes yields new *data* for the same compiled
+engine — user-code injection without recompilation (§IV-F).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import program as pvm
+from repro.core.config import EngineConfig
+
+
+@dataclasses.dataclass
+class Tenant:
+    tid: int
+    name: str
+    quota_streams: int = 1_000_000
+
+
+@dataclasses.dataclass
+class Stream:
+    sid: int
+    tenant: int
+    name: str
+    channels: List[str]                      # channel names, len <= cfg.channels
+    composite: bool = False
+    inputs: List[int] = dataclasses.field(default_factory=list)
+    # user code (expression strings), per output channel:
+    transform: Dict[str, str] = dataclasses.field(default_factory=dict)
+    pre_filter: Optional[str] = None
+    post_filter: Optional[str] = None
+    model_backed: bool = False               # serviced by the model plane
+    service_object: Optional[str] = None
+
+
+@dataclasses.dataclass
+class EngineTables:
+    """Dense device-table images (numpy; moved to device by the engine)."""
+    in_table: np.ndarray       # (N, M) int32, input stream ids, -1 pad
+    in_count: np.ndarray       # (N,) int32
+    out_table: np.ndarray      # (N, F) int32, subscriber ids, -1 pad
+    out_count: np.ndarray      # (N,) int32
+    progs: np.ndarray          # (N, L, 4) int32
+    consts: np.ndarray         # (N, K) float32
+    is_composite: np.ndarray   # (N,) bool
+    tenant: np.ndarray         # (N,) int32
+    priority: np.ndarray       # (N,) int32  (lower = served first)
+    n_channels: np.ndarray     # (N,) int32
+    model_backed: np.ndarray   # (N,) bool
+
+
+class Registry:
+    def __init__(self, cfg: EngineConfig):
+        self.cfg = cfg.validate()
+        self.tenants: List[Tenant] = []
+        self.streams: List[Stream] = []
+
+    # ------------------------------------------------------------- tenants
+    def create_tenant(self, name: str, quota_streams: int = 1_000_000) -> Tenant:
+        if len(self.tenants) >= self.cfg.n_tenants:
+            raise ValueError("tenant capacity exhausted")
+        t = Tenant(len(self.tenants), name, quota_streams)
+        self.tenants.append(t)
+        return t
+
+    # ------------------------------------------------------------- streams
+    def _alloc_sid(self, tenant: Tenant) -> int:
+        if len(self.streams) >= self.cfg.n_streams:
+            raise ValueError("stream capacity exhausted")
+        owned = sum(1 for s in self.streams if s.tenant == tenant.tid)
+        if owned >= tenant.quota_streams:
+            raise ValueError(f"tenant {tenant.name} exceeded stream quota")
+        return len(self.streams)
+
+    def create_stream(
+        self, tenant: Tenant, name: str, channels: Sequence[str],
+        service_object: Optional[str] = None,
+    ) -> Stream:
+        """A *simple* stream: fed by a device (Web Object) via ingest."""
+        if len(channels) > self.cfg.channels:
+            raise ValueError("too many channels")
+        s = Stream(self._alloc_sid(tenant), tenant.tid, name, list(channels),
+                   service_object=service_object)
+        self.streams.append(s)
+        return s
+
+    def create_composite(
+        self, tenant: Tenant, name: str, channels: Sequence[str],
+        inputs: Sequence[Stream],
+        transform: Dict[str, str],
+        pre_filter: Optional[str] = None,
+        post_filter: Optional[str] = None,
+        service_object: Optional[str] = None,
+        model_backed: bool = False,
+    ) -> Stream:
+        """A *composite* stream (paper §IV): subscribes to ``inputs`` and
+        runs user ``transform`` code on every triggering Sensor Update.
+
+        Subscriptions may cross tenants — that is the paper's headline
+        multi-tenancy: tenants share data streams between them.
+        """
+        if len(inputs) > self.cfg.max_in:
+            raise ValueError(f"in-degree {len(inputs)} > max_in {self.cfg.max_in}")
+        if len(channels) > self.cfg.channels:
+            raise ValueError("too many channels")
+        for ch in channels:
+            if ch not in transform and not model_backed:
+                raise ValueError(f"no transform for channel {ch!r}")
+        s = Stream(self._alloc_sid(tenant), tenant.tid, name, list(channels),
+                   composite=True, inputs=[i.sid for i in inputs],
+                   transform=dict(transform), pre_filter=pre_filter,
+                   post_filter=post_filter, service_object=service_object,
+                   model_backed=model_backed)
+        self.streams.append(s)
+        # fan-out capacity check on the sources
+        for src in inputs:
+            subs = sum(1 for t in self.streams
+                       if t.composite and src.sid in t.inputs)
+            if subs > self.cfg.max_out:
+                raise ValueError(
+                    f"out-degree of {src.name} exceeds max_out {self.cfg.max_out}")
+        return s
+
+    def subscribe(self, stream: Stream, new_input: Stream) -> None:
+        """Dynamically rewire: add a subscription to an existing composite."""
+        if not stream.composite:
+            raise ValueError("can only subscribe composite streams")
+        if len(stream.inputs) >= self.cfg.max_in:
+            raise ValueError("in-degree capacity reached")
+        stream.inputs.append(new_input.sid)
+
+    # ---------------------------------------------------------- code->VM
+    def _env_for(self, s: Stream) -> Dict[str, int]:
+        """Identifier environment for stream ``s``'s expressions.
+
+        ``in<i>.<ch>`` / ``<src_name>.<ch>`` — input slot values,
+        ``prev.<ch>`` — previous self value, ``out.<ch>`` — result channels
+        (post-filter only), ``ts`` / ``trigger`` — metadata registers.
+        """
+        cfg = self.cfg
+        env: Dict[str, int] = {"ts": cfg.reg_ts, "trigger": cfg.reg_trigger}
+        for i, sid in enumerate(s.inputs):
+            src = self.streams[sid]
+            for c, ch in enumerate(src.channels):
+                reg = cfg.reg_inputs + i * cfg.channels + c
+                env[f"in{i}.{ch}"] = reg
+                env.setdefault(f"{src.name}.{ch}", reg)
+            env[f"in{i}"] = cfg.reg_inputs + i * cfg.channels  # 1-channel shorthand
+            env.setdefault(src.name, cfg.reg_inputs + i * cfg.channels)
+        for c, ch in enumerate(s.channels):
+            env[f"prev.{ch}"] = cfg.reg_prev + c
+            env[f"out.{ch}"] = cfg.reg_result + c
+        env["prev"] = cfg.reg_prev
+        return env
+
+    def _compile_stream(self, s: Stream) -> Tuple[np.ndarray, np.ndarray]:
+        cfg = self.cfg
+        env = self._env_for(s)
+        code: List[Tuple[int, int, int, int]] = []
+        consts: List[float] = [1.0]
+
+        def add(expr: str, result_reg: int):
+            c, k = pvm.compile_expr(
+                expr, env, result_reg=result_reg,
+                tmp_base=cfg.reg_tmp, tmp_count=cfg.n_temps)
+            # remap constant-pool indices into the shared pool
+            remap = {}
+            for j, v in enumerate(k):
+                if v in consts:
+                    remap[j] = consts.index(v)
+                else:
+                    remap[j] = len(consts)
+                    consts.append(v)
+            for (op, d, a, b) in c:
+                if op == pvm.OP_CONST:
+                    a = remap[a]
+                code.append((op, d, a, b))
+
+        if s.pre_filter:
+            add(s.pre_filter, cfg.reg_pref)
+        else:
+            code.append((pvm.OP_CONST, cfg.reg_pref, 0, 0))   # consts[0] == 1.0
+        for c, ch in enumerate(s.channels):
+            if s.model_backed:
+                # placeholder passthrough; real output supplied by model plane
+                code.append((pvm.OP_MOV, cfg.reg_result + c, cfg.reg_inputs + c, 0))
+            else:
+                add(s.transform[ch], cfg.reg_result + c)
+        if s.post_filter:
+            add(s.post_filter, cfg.reg_postf)
+        else:
+            code.append((pvm.OP_CONST, cfg.reg_postf, 0, 0))
+        return pvm.assemble(code, consts, cfg.prog_len, cfg.n_consts)
+
+    # ---------------------------------------------------------- lowering
+    def build_tables(self, priority: Optional[np.ndarray] = None) -> EngineTables:
+        cfg, N = self.cfg, self.cfg.n_streams
+        in_table = np.full((N, cfg.max_in), -1, np.int32)
+        in_count = np.zeros((N,), np.int32)
+        out_lists: List[List[int]] = [[] for _ in range(N)]
+        progs = np.zeros((N, cfg.prog_len, 4), np.int32)
+        consts = np.zeros((N, cfg.n_consts), np.float32)
+        is_comp = np.zeros((N,), bool)
+        tenant = np.zeros((N,), np.int32)
+        n_ch = np.ones((N,), np.int32)
+        model_backed = np.zeros((N,), bool)
+
+        for s in self.streams:
+            tenant[s.sid] = s.tenant
+            n_ch[s.sid] = len(s.channels)
+            model_backed[s.sid] = s.model_backed
+            if s.composite:
+                is_comp[s.sid] = True
+                in_count[s.sid] = len(s.inputs)
+                in_table[s.sid, : len(s.inputs)] = s.inputs
+                for src in s.inputs:
+                    if s.sid not in out_lists[src]:
+                        out_lists[src].append(s.sid)
+                progs[s.sid], consts[s.sid] = self._compile_stream(s)
+
+        out_table = np.full((N, cfg.max_out), -1, np.int32)
+        out_count = np.zeros((N,), np.int32)
+        for sid, lst in enumerate(out_lists):
+            if len(lst) > cfg.max_out:
+                raise ValueError(f"stream {sid} out-degree {len(lst)} > {cfg.max_out}")
+            out_count[sid] = len(lst)
+            out_table[sid, : len(lst)] = lst
+
+        if priority is None:
+            priority = np.zeros((N,), np.int32)
+        return EngineTables(
+            in_table=in_table, in_count=in_count,
+            out_table=out_table, out_count=out_count,
+            progs=progs, consts=consts, is_composite=is_comp,
+            tenant=tenant, priority=np.asarray(priority, np.int32),
+            n_channels=n_ch, model_backed=model_backed,
+        )

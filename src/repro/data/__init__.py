@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticCorpus, SensorUpdateGenerator
+
+__all__ = ["SyntheticCorpus", "SensorUpdateGenerator"]

@@ -1,0 +1,4 @@
+from repro.distributed.sharding import (Policy, make_policy, param_shardings,
+                                        tree_shardings)
+
+__all__ = ["Policy", "make_policy", "param_shardings", "tree_shardings"]

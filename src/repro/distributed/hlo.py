@@ -1,0 +1,128 @@
+"""HLO post-SPMD analysis: collective-bytes accounting + roofline terms.
+
+``compiled.cost_analysis()`` gives FLOPs / bytes of the *per-device*
+partitioned module but no collective traffic, so we parse the optimized
+HLO text and sum wire bytes per collective with ring-algorithm factors:
+
+  all-gather          (g-1)/g * out_bytes
+  all-reduce        2*(g-1)/g * bytes
+  reduce-scatter      (g-1)   * out_bytes      (= (g-1)/g * in_bytes)
+  all-to-all          (g-1)/g * bytes
+  collective-permute  1       * bytes
+
+Hardware constants (TPU v5e, per assignment): 197 TFLOP/s bf16 per chip,
+819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(\(?[\w\[\],\s{}:#*]+?\)?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(s: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(s):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_V2_RE.search(line)
+    if m:                                 # [num_groups, group_size]<=[N]
+        return int(m.group(2))
+    return 2
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    data_bytes: Dict[str, float]          # payload bytes per device
+    wire_bytes: Dict[str, float]          # ring-algorithm wire bytes per device
+
+    @property
+    def total_wire(self) -> float:
+        return sum(self.wire_bytes.values())
+
+    @property
+    def total_data(self) -> float:
+        return sum(self.data_bytes.values())
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    counts = {c: 0 for c in _COLLECTIVES}
+    data = {c: 0.0 for c in _COLLECTIVES}
+    wire = {c: 0.0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-done" in line or "fusion" in line.split("=")[-1][:30]:
+            pass
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        shape_s, op = m.group(1), m.group(2)
+        b = _shape_bytes(shape_s)
+        if b == 0:
+            continue
+        g = _group_size(line)
+        counts[op] += 1
+        data[op] += b
+        if op == "all-gather":
+            wire[op] += b * (g - 1) / g
+        elif op == "all-reduce":
+            wire[op] += 2 * b * (g - 1) / g
+        elif op == "reduce-scatter":
+            wire[op] += b * (g - 1)
+        elif op == "all-to-all":
+            wire[op] += b * (g - 1) / g
+        else:                              # collective-permute
+            wire[op] += b
+    return CollectiveStats(counts, data, wire)
+
+
+def roofline_terms(flops_per_dev: float, hbm_bytes_per_dev: float,
+                   wire_bytes_per_dev: float) -> Dict[str, float]:
+    """The three roofline times (seconds) for the per-device program."""
+    t_c = flops_per_dev / PEAK_FLOPS
+    t_m = hbm_bytes_per_dev / HBM_BW
+    t_x = wire_bytes_per_dev / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    bound = max(t_c, t_m, t_x)
+    return {
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "bottleneck": dom,
+        "roofline_s": bound,
+        # fraction of the bound that is useful MXU time — the score
+        "compute_fraction": (t_c / bound) if bound > 0 else 0.0,
+    }

@@ -1,0 +1,165 @@
+"""Sharding policy: logical axis names -> mesh axes, with divisibility guards.
+
+Parallelism mapping on the production mesh (pod, data, model):
+
+  * DP   — ``batch`` over (pod, data)
+  * TP   — ``vocab / d_ff / heads_dh / kv_dh / d_inner* / d_expert /
+           mlstm_dh`` over ``model`` (Megatron-style column/row splits)
+  * EP   — ``experts`` over ``model`` when the expert count divides it,
+           otherwise TP inside experts (``d_expert``) — per-arch fallback
+  * FSDP — ``d_model`` over ``data`` (ZeRO-style parameter + optimizer
+           sharding *within* a pod; cross-pod traffic stays gradient-only,
+           which is what the int8 compression targets)
+  * SP   — ``seq`` over ``data`` for long-context decode caches
+           (flash-decoding style split-KV)
+
+Every rule is guarded: an axis is only applied when the dimension is
+divisible by the mesh axis size and the axis is not already used by the
+same tensor, so any (pods, data, model) mesh shape works — elastic
+rescale = rebuild the policy and reshard the checkpoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+import jax
+
+from repro.models.params import ParamSpec, Path
+
+
+def _mesh_axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+@dataclasses.dataclass
+class Policy:
+    mesh: Mesh
+    rules: Dict[str, Tuple[str, ...]]
+
+    def spec(self, axes: Tuple[Optional[str], ...],
+             shape: Tuple[int, ...]) -> PartitionSpec:
+        sizes = _mesh_axis_sizes(self.mesh)
+        used = set()
+        parts = []
+        for dim, name in zip(shape, axes):
+            take = []
+            prod = 1
+            for ax in self.rules.get(name, ()) if name else ():
+                if ax is None or ax in used or ax not in sizes:
+                    continue
+                if dim % (prod * sizes[ax]) != 0:
+                    continue
+                take.append(ax)
+                prod *= sizes[ax]
+            used.update(take)
+            if not take:
+                parts.append(None)
+            elif len(take) == 1:
+                parts.append(take[0])
+            else:
+                parts.append(tuple(take))
+        return PartitionSpec(*parts)
+
+    def sharding(self, axes, shape) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(axes, shape))
+
+    # ---- activation constraint -----------------------------------------
+    def make_constrain(self, cfg):
+        """Callable applied to the residual stream / logits inside the
+        compiled step — pins batch to (pod, data) and vocab to model so
+        XLA never materializes a replicated (B, L, V) tensor."""
+        mesh = self.mesh
+
+        def constrain(x):
+            if x.ndim == 4:                                  # (B, L, K, V)
+                spec = self.spec(("batch", "seq_act", None, "vocab"), x.shape)
+            elif x.ndim == 3 and cfg is not None and x.shape[-1] == cfg.vocab \
+                    and cfg.vocab != cfg.d_model:
+                spec = self.spec(("batch", "seq_act", "vocab"), x.shape)
+            elif x.ndim == 3:
+                spec = self.spec(("batch", "seq_act", None), x.shape)
+            else:
+                return x
+            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+        return constrain
+
+
+def make_policy(mesh: Mesh, cfg=None, *, fsdp: bool = True,
+                seq_shard: bool = False, act_seq_shard: bool = False) -> Policy:
+    sizes = _mesh_axis_sizes(mesh)
+    model = "model" if "model" in sizes else None
+    batch_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    m = (model,) if model else ()
+    # FSDP shards the *TP output dims* further over data (never d_model,
+    # the contraction dim: sharding that makes XLA reduce full-activation
+    # partials over the data axis — measured 25x collective blow-up).
+    fa = ("data",) if (fsdp and "data" in sizes) else ()
+    tp = m + fa
+    rules: Dict[str, Tuple[str, ...]] = {
+        "batch": batch_axes,
+        "vocab": tp,
+        "d_ff": tp,
+        "heads_dh": tp,
+        "kv_dh": tp,
+        "kv_heads": m,
+        "d_inner": tp,
+        "d_inner2": tp,
+        "mlstm_dh": tp,
+        "d_model": (),
+        "layers": (),
+        "heads": (),
+        "codebooks": (),
+        "seq": ("data",) if seq_shard else (),
+        "seq_act": ("data",) if act_seq_shard else (),
+        "d_head": (),
+        "streams": tuple(a for a in ("pod", "data", "model") if a in sizes),
+    }
+    # MoE: EP when expert count divides the model axis, else TP in experts
+    if cfg is not None and getattr(cfg, "n_experts", 0) and model:
+        if cfg.n_experts % sizes[model] == 0:
+            rules["experts"] = (model,)
+            rules["d_expert"] = fa
+        else:
+            rules["experts"] = ()
+            rules["d_expert"] = tp
+    else:
+        rules["experts"] = m
+        rules["d_expert"] = fa
+    # GQA fallback: if kv heads can't shard, shard within d_head
+    if cfg is not None and model and getattr(cfg, "n_kv_heads", 0):
+        if cfg.n_kv_heads % sizes[model] != 0:
+            rules["d_head"] = (model,)
+    return Policy(mesh, rules)
+
+
+# --------------------------------------------------------------------------
+# Tree helpers
+# --------------------------------------------------------------------------
+
+def param_shardings(policy: Policy, specs: Dict[Path, ParamSpec]):
+    """Nested dict of NamedSharding mirroring a spec table."""
+    from repro.models.params import unflatten
+    return unflatten({p: policy.sharding(s.axes, s.shape)
+                      for p, s in specs.items()})
+
+
+def tree_shardings(policy: Policy, tree, axes_fn):
+    """Shardings for an arbitrary pytree: axes_fn(path_leaf) -> axes."""
+    return jax.tree.map(lambda leaf: policy.sharding(axes_fn(leaf), leaf.shape), tree)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, PartitionSpec())
+
+
+def batch_shardings(policy: Policy, batch_specs: Dict):
+    """Shardings for input batches: leading dim is batch, rest replicated."""
+    def one(leaf):
+        axes = ("batch",) + (None,) * (len(leaf.shape) - 1)
+        return policy.sharding(axes, leaf.shape)
+    return jax.tree.map(one, batch_specs)

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical layers.
+
+Five kernels, each with kernel.py (pl.pallas_call + explicit BlockSpec
+VMEM tiling), ops.py (jit wrapper; interpret mode on non-TPU backends)
+and ref.py (pure jnp/numpy oracle):
+
+  stream_dispatch — the paper's dispatch/fetch hot path as one-hot MXU
+                    gathers (engine drop-in via ops.make_fanout)
+  flash_attention — causal/sliding-window GQA, online softmax, block skip
+  selective_scan  — Mamba chunk recurrence, VMEM-resident state
+  mlstm_chunk     — chunkwise-parallel mLSTM, matrix memory in VMEM
+  window_agg      — fused sliding-window aggregates over SU ring buffers
+"""

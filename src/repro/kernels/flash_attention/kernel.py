@@ -1,0 +1,115 @@
+"""Pallas TPU flash attention: causal / sliding-window, GQA.
+
+IO-aware tiling restated for VMEM/MXU (not a CUDA port): the grid is
+(batch*heads, q-blocks, k-blocks) with the k dimension innermost; running
+(max, sum, acc) online-softmax state lives in VMEM scratch across k steps;
+q/k tiles are MXU-aligned (block sizes multiples of 128 on the contraction
+dims).  Sliding-window/causal structure skips out-of-range k blocks with
+``pl.when`` (no wasted MXU work), and GQA is expressed in the k/v
+index_map (kv head = q head // group) so no k/v duplication is staged.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  blk_q: int, blk_k: int, n_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[:] = jnp.full_like(m_scr, NEG)
+        l_scr[:] = jnp.zeros_like(l_scr)
+        acc_scr[:] = jnp.zeros_like(acc_scr)
+
+    q0 = qi * blk_q
+    k0 = ki * blk_k
+    # block-level structure skip: any overlap with the causal/window band?
+    need = True
+    if causal:
+        need = jnp.asarray(k0 <= q0 + blk_q - 1)
+    if window is not None:
+        need = need & jnp.asarray(k0 + blk_k - 1 > q0 - window)
+
+    @pl.when(need)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                  # (blk_q, Dh)
+        k = k_ref[0].astype(jnp.float32)                  # (blk_k, Dh)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+        mask = jnp.ones((blk_q, blk_k), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG)
+        m_prev = m_scr[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_scr[:, 0] + p.sum(axis=-1)
+        acc = acc_scr[:] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[:, 0] = m_new
+        l_scr[:, 0] = l_new
+        acc_scr[:] = acc
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[:, 0], 1e-30)
+        o_ref[0] = (acc_scr[:] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    blk_q: int = 128, blk_k: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, Lq, Dh); k/v: (B, KV, S, Dh) -> (B, H, Lq, Dh) (q dtype)."""
+    B, H, Lq, Dh = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = Dh ** -0.5 if scale is None else scale
+    bq = min(blk_q, Lq)
+    bk = min(blk_k, S)
+    assert Lq % bq == 0 and S % bk == 0, (Lq, bq, S, bk)
+    grid = (B * H, Lq // bq, S // bk)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        blk_q=bq, blk_k=bk, n_k=S // bk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, Dh), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, Dh), lambda bh, qi, ki, G=G, H=H:
+                         ((bh // H) * KV + (bh % H) // G, ki, 0)),
+            pl.BlockSpec((1, bk, Dh), lambda bh, qi, ki, G=G, H=H:
+                         ((bh // H) * KV + (bh % H) // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, Dh), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Lq, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq, 1), jnp.float32),   # running sum
+            pltpu.VMEM((bq, Dh), jnp.float32),  # accumulator
+        ],
+        interpret=interpret,
+    )(q.reshape(B * H, Lq, Dh),
+      k.reshape(B * KV, S, Dh),
+      v.reshape(B * KV, S, Dh)).reshape(B, H, Lq, Dh)

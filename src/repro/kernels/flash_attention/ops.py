@@ -1,0 +1,36 @@
+"""Jitted flash-attention wrapper matching the model plane's layout.
+
+The model plane uses (B, L, H, Dh) activations; the kernel wants
+(B, H, L, Dh).  On non-TPU backends the wrapper transparently runs the
+kernel in interpret mode (correctness) — production TPU runs compile the
+real Mosaic kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "blk_q",
+                                             "blk_k", "interpret"))
+def flash_attention_blhd(q, k, v, *, causal: bool = True,
+                         window: Optional[int] = None,
+                         blk_q: int = 128, blk_k: int = 128,
+                         interpret: Optional[bool] = None) -> jnp.ndarray:
+    """q: (B, L, H, Dh); k/v: (B, S, KV, Dh) -> (B, L, H*Dh)."""
+    interp = _interpret_default() if interpret is None else interpret
+    B, L, H, Dh = q.shape
+    o = flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal, window=window,
+        blk_q=min(blk_q, L), blk_k=min(blk_k, k.shape[1]), interpret=interp)
+    return o.transpose(0, 2, 1, 3).reshape(B, L, H * Dh)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for flash attention (causal / sliding-window GQA)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  scale: Optional[float] = None) -> jnp.ndarray:
+    """q: (B, H, Lq, Dh); k/v: (B, KV, S, Dh).  Returns (B, H, Lq, Dh) f32."""
+    B, H, Lq, Dh = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = Dh ** -0.5 if scale is None else scale
+    qg = q.reshape(B, KV, G, Lq, Dh).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Lq)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((Lq, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Lq, Dh)

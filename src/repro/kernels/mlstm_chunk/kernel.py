@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: chunkwise-parallel mLSTM.
+
+The intra-chunk decay matrix D and score matrix S = q k^T are dense
+(ck, ck) MXU tiles; the (C, n, m) state is carried across chunk steps in
+VMEM scratch (C is (Dh, Dh) — the matrix memory stays on-chip for the
+whole sequence).  Grid: (B*H, n_chunks), chunks innermost/sequential.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, i_ref, f_ref, h_ref,
+                  cout_ref, nout_ref, mout_ref,
+                  c_scr, n_scr, m_scr, *, ck: int, dh: int, n_c: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        c_scr[:] = jnp.zeros_like(c_scr)
+        n_scr[:] = jnp.zeros_like(n_scr)
+        m_scr[:] = jnp.full_like(m_scr, NEG)
+
+    q = q_ref[0].astype(jnp.float32) * (dh ** -0.5)       # (ck, Dh)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    ic = i_ref[0].astype(jnp.float32)                     # (ck, 1)... (ck,)
+    fc = f_ref[0].astype(jnp.float32)
+    C0 = c_scr[:]
+    n0 = n_scr[:, 0]
+    m0 = m_scr[0, 0]
+
+    lf = jax.nn.log_sigmoid(fc)
+    b = jnp.cumsum(lf)                                    # (ck,)
+    a = b[:, None] - b[None, :] + ic[None, :]
+    tril = jax.lax.broadcasted_iota(jnp.int32, (ck, ck), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (ck, ck), 1)
+    a = jnp.where(tril, a, NEG)
+    m_intra = jnp.max(a, axis=-1)
+    m_t = jnp.maximum(b + m0, m_intra)                    # (ck,)
+    D = jnp.exp(a - m_t[:, None])
+    S = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    SD = S * D
+    num = jnp.dot(SD, v, preferred_element_type=jnp.float32)
+    inter = jnp.exp(b + m0 - m_t)                         # (ck,)
+    num = num + inter[:, None] * jnp.dot(q, C0.T,
+                                         preferred_element_type=jnp.float32)
+    den = SD.sum(axis=-1) + inter * jnp.dot(q, n0,
+                                            preferred_element_type=jnp.float32)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[:, None]
+    h_ref[0] = h.astype(h_ref.dtype)
+
+    # ---- state to end of chunk
+    m_new = m_t[-1]
+    wj = jnp.exp(b[-1] - b + ic - m_new)                  # (ck,)
+    cscale = jnp.exp(b[-1] + m0 - m_new)
+    C1 = cscale * C0 + jax.lax.dot_general(
+        v * wj[:, None], k, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (Dh_v, Dh_k)
+    n1 = cscale * n0 + jnp.sum(k * wj[:, None], axis=0)
+    c_scr[:] = C1
+    n_scr[:, 0] = n1
+    m_scr[0, 0] = m_new
+
+    @pl.when(ci == n_c - 1)
+    def _finish():
+        cout_ref[0] = C1.astype(cout_ref.dtype)
+        nout_ref[0] = n1.astype(nout_ref.dtype)
+        mout_ref[0, 0] = m_new.astype(mout_ref.dtype)
+
+
+def mlstm_chunkwise(q, k, v, i_raw, f_raw, *, chunk: int = 128,
+                    interpret: bool = False):
+    """q/k/v: (B, H, L, Dh); i_raw/f_raw: (B, H, L) — zero initial state.
+    Returns (h (B, H, L, Dh) f32, (C, n, m) final)."""
+    B, H, L, Dh = q.shape
+    ck = min(chunk, L)
+    assert L % ck == 0, (L, ck)
+    n_c = L // ck
+    BH = B * H
+    r3 = lambda x: x.reshape(BH, L, Dh)
+    r2 = lambda x: x.reshape(BH, L)
+    kernel = functools.partial(_mlstm_kernel, ck=ck, dh=Dh, n_c=n_c)
+    h, C, n, m = pl.pallas_call(
+        kernel,
+        grid=(BH, n_c),
+        in_specs=[
+            pl.BlockSpec((1, ck, Dh), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, ck, Dh), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, ck, Dh), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, ck), lambda bh, c: (bh, c)),
+            pl.BlockSpec((1, ck), lambda bh, c: (bh, c)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, ck, Dh), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, Dh, Dh), lambda bh, c: (bh, 0, 0)),
+            pl.BlockSpec((1, Dh), lambda bh, c: (bh, 0)),
+            pl.BlockSpec((1, 1), lambda bh, c: (bh, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, L, Dh), jnp.float32),
+            jax.ShapeDtypeStruct((BH, Dh, Dh), jnp.float32),
+            jax.ShapeDtypeStruct((BH, Dh), jnp.float32),
+            jax.ShapeDtypeStruct((BH, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((Dh, Dh), jnp.float32),
+            pltpu.VMEM((Dh, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(r3(q), r3(k), r3(v), r2(i_raw), r2(f_raw))
+    return (h.reshape(B, H, L, Dh),
+            (C.reshape(B, H, Dh, Dh), n.reshape(B, H, Dh), m.reshape(B, H)))

@@ -1,0 +1,25 @@
+"""Jitted mLSTM chunkwise wrapper (drop-in for repro.models.xlstm)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mlstm_chunk.kernel import mlstm_chunkwise
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm_pallas(q, k, v, i_raw, f_raw, *, chunk: int = 128,
+                 interpret: Optional[bool] = None):
+    interp = _interpret_default() if interpret is None else interpret
+    L = q.shape[2]
+    ck = min(chunk, L)
+    while L % ck:
+        ck -= 1
+    return mlstm_chunkwise(q, k, v, i_raw, f_raw, chunk=ck, interpret=interp)

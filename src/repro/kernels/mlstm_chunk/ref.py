@@ -1,0 +1,41 @@
+"""Pure-jnp/numpy oracle for the mLSTM cell: sequential stabilized
+recurrence (Beck et al. 2024, eqs. 19-27)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def mlstm_ref(q, k, v, i_raw, f_raw, C0, n0, m0
+              ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, ...]]:
+    """q/k/v: (B, H, L, Dh); i_raw/f_raw: (B, H, L);
+    C0: (B, H, Dh, Dh); n0: (B, H, Dh); m0: (B, H).
+    Returns h (B, H, L, Dh) f32 and final (C, n, m)."""
+    q = np.asarray(q, np.float64)
+    k = np.asarray(k, np.float64)
+    v = np.asarray(v, np.float64)
+    i_raw = np.asarray(i_raw, np.float64)
+    f_raw = np.asarray(f_raw, np.float64)
+    B, H, L, Dh = q.shape
+    C = np.asarray(C0, np.float64).copy()
+    n = np.asarray(n0, np.float64).copy()
+    m = np.asarray(m0, np.float64).copy()
+    qs = q / np.sqrt(Dh)
+    h = np.zeros((B, H, L, Dh), np.float64)
+    for t in range(L):
+        lf = -np.log1p(np.exp(-f_raw[:, :, t]))          # log sigmoid
+        m1 = np.maximum(lf + m, i_raw[:, :, t])
+        ip = np.exp(i_raw[:, :, t] - m1)
+        fp = np.exp(lf + m - m1)
+        C = fp[..., None, None] * C + ip[..., None, None] * np.einsum(
+            "bhv,bhk->bhvk", v[:, :, t], k[:, :, t])
+        n = fp[..., None] * n + ip[..., None] * k[:, :, t]
+        m = m1
+        den = np.maximum(np.abs(np.einsum("bhk,bhk->bh", qs[:, :, t], n)),
+                         np.exp(-m))
+        h[:, :, t] = np.einsum("bhk,bhvk->bhv", qs[:, :, t], C) / den[..., None]
+    return (jnp.asarray(h.astype(np.float32)),
+            (jnp.asarray(C.astype(np.float32)), jnp.asarray(n.astype(np.float32)),
+             jnp.asarray(m.astype(np.float32))))

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: Mamba selective-scan chunk recurrence.
+
+GPU implementations run one thread block per channel with warp-level
+scans; the TPU-native shape keeps a (d_inner-block, d_state) carry
+resident in VMEM scratch while time blocks stream through, with the
+output contraction against C fused into the same kernel (the (L, Di, S)
+state tensor never leaves VMEM).  Grid: (B, Di-blocks, T-blocks), time
+innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(a_ref, bx_ref, c_ref, h0_ref, y_ref, hout_ref, h_scr, *,
+                 blk_t: int, n_t: int):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        h_scr[:] = h0_ref[0].astype(jnp.float32)
+
+    a = a_ref[0].astype(jnp.float32)       # (blk_t, Dib, S)
+    bx = bx_ref[0].astype(jnp.float32)
+    c = c_ref[0].astype(jnp.float32)       # (blk_t, S)
+
+    def step(i, h):
+        h = a[i] * h + bx[i]               # (Dib, S)
+        y = jnp.sum(h * c[i][None, :], axis=-1)          # (Dib,)
+        pl.store(y_ref, (0, pl.dslice(i, 1), slice(None)), y[None, :])
+        return h
+
+    h = jax.lax.fori_loop(0, blk_t, step, h_scr[:])
+    h_scr[:] = h
+
+    @pl.when(ti == n_t - 1)
+    def _finish():
+        hout_ref[0] = h_scr[:].astype(hout_ref.dtype)
+
+
+def selective_scan(a: jnp.ndarray, bx: jnp.ndarray, c: jnp.ndarray,
+                   h0: jnp.ndarray, *, blk_t: int = 64, blk_d: int = 512,
+                   interpret: bool = False):
+    """a, bx: (B, L, Di, S) f32; c: (B, L, S) f32; h0: (B, Di, S) f32.
+    Returns (y (B, L, Di) f32, h_final (B, Di, S) f32)."""
+    B, L, Di, S = a.shape
+    bt = min(blk_t, L)
+    bd = min(blk_d, Di)
+    assert L % bt == 0 and Di % bd == 0, (L, bt, Di, bd)
+    grid = (B, Di // bd, L // bt)
+    kernel = functools.partial(_scan_kernel, blk_t=bt, n_t=L // bt)
+    y, hout = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt, bd, S), lambda b, d, t: (b, t, d, 0)),
+            pl.BlockSpec((1, bt, bd, S), lambda b, d, t: (b, t, d, 0)),
+            pl.BlockSpec((1, bt, S), lambda b, d, t: (b, t, 0)),
+            pl.BlockSpec((1, bd, S), lambda b, d, t: (b, d, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bt, bd), lambda b, d, t: (b, t, d)),
+            pl.BlockSpec((1, bd, S), lambda b, d, t: (b, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L, Di), jnp.float32),
+            jax.ShapeDtypeStruct((B, Di, S), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bd, S), jnp.float32)],
+        interpret=interpret,
+    )(a, bx, c, h0)
+    return y, hout

@@ -1,0 +1,31 @@
+"""Jitted selective-scan wrapper (drop-in for repro.models.ssm.ssm_scan)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.selective_scan.kernel import selective_scan
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("blk_t", "blk_d", "interpret"))
+def ssm_scan_pallas(a, bx, c, h0, *, blk_t: int = 64, blk_d: int = 512,
+                    interpret: Optional[bool] = None
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    interp = _interpret_default() if interpret is None else interpret
+    B, L, Di, S = a.shape
+    bt = min(blk_t, L)
+    while L % bt:
+        bt -= 1
+    bd = min(blk_d, Di)
+    while Di % bd:
+        bd -= 1
+    return selective_scan(a.astype(jnp.float32), bx.astype(jnp.float32),
+                          c.astype(jnp.float32), h0.astype(jnp.float32),
+                          blk_t=bt, blk_d=bd, interpret=interp)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the Mamba selective-scan chunk recurrence."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def selective_scan_ref(a: jnp.ndarray, bx: jnp.ndarray, c: jnp.ndarray,
+                       h0: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential oracle.  a, bx: (B, L, Di, S); c: (B, L, S);
+    h0: (B, Di, S).  Returns y (B, L, Di) f32 and final state."""
+    a = np.asarray(a, np.float32)
+    bx = np.asarray(bx, np.float32)
+    c = np.asarray(c, np.float32)
+    h = np.asarray(h0, np.float32).copy()
+    B, L, Di, S = a.shape
+    y = np.zeros((B, L, Di), np.float32)
+    for t in range(L):
+        h = a[:, t] * h + bx[:, t]
+        y[:, t] = np.einsum("bds,bs->bd", h, c[:, t])
+    return jnp.asarray(y), jnp.asarray(h)

@@ -1,0 +1,61 @@
+"""Jitted wrappers: Pallas stream-dispatch, drop-in for the engine stage 1.
+
+``make_fanout()`` returns a function with the exact signature of
+``repro.core.engine.fanout_reference`` so the engine can swap it in
+(`StreamEngine(reg, fanout_fn=make_fanout())`).
+
+Exactness notes: the one-hot gather runs on the MXU in float32, so gathered
+integers must fit the 24-bit mantissa.  Stream ids are biased by +1
+(0 == "no subscriber") and are < 2^24 by engine capacity.  int32
+timestamps are gathered as a (hi = t >> 12, lo = t & 0xfff) pair — each
+component is exact in float32 — and recombined.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.stream_dispatch.kernel import onehot_gather
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def stream_dispatch(sid, ts, valid, out_table, timestamps, *,
+                    interpret: Optional[bool] = None
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused subscriber fan-out + early stale filter (Pallas).
+
+    sid/ts/valid: (B,); out_table: (N, F) int32 (-1 pad);
+    timestamps: (N,) int32.  Returns (targets (B, F) int32 with -1 = none,
+    early-keep (B, F) bool).
+    """
+    interp = _interpret_default() if interpret is None else interpret
+    B = sid.shape[0]
+    N, F = out_table.shape
+    # stage 1: gather subscriber rows; +1 bias disambiguates "no row" == 0
+    biased = onehot_gather((out_table + 1).astype(jnp.int32),
+                           jnp.where(valid, sid, -1), interpret=interp)
+    targets = jnp.round(biased).astype(jnp.int32) - 1         # -1 = none/pad
+    tvalid = targets >= 0
+    # stage 2: gather target last-emission timestamps (hi/lo split, exact)
+    ts_tab = jnp.stack([timestamps >> 12, timestamps & 0xFFF], axis=1)
+    hilo = onehot_gather(ts_tab.astype(jnp.int32),
+                         jnp.where(tvalid, targets, -1).reshape(-1),
+                         interpret=interp).reshape(B, F, 2)
+    tts = (jnp.round(hilo[..., 0]).astype(jnp.int32) << 12) | \
+        jnp.round(hilo[..., 1]).astype(jnp.int32)
+    early = tvalid & (ts[:, None] > tts)
+    return jnp.where(tvalid, targets, -1), early
+
+
+def make_fanout(interpret: Optional[bool] = None):
+    def fanout(sid, ts, pvalid, out_table, timestamps):
+        return stream_dispatch(sid, ts, pvalid, out_table, timestamps,
+                               interpret=interpret)
+    return fanout

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the stream-dispatch stage (paper §IV-B stages 1-2).
+
+Identical math to ``repro.core.engine.fanout_reference`` plus the raw
+row-gather primitive the kernel accelerates.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def onehot_gather_ref(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """rows = table[ids]; ids < 0 or >= N produce zero rows.  (M, F) f32."""
+    N = table.shape[0]
+    ok = (ids >= 0) & (ids < N)
+    safe = jnp.clip(ids, 0, N - 1)
+    rows = table[safe].astype(jnp.float32)
+    return jnp.where(ok[:, None], rows, 0.0)
+
+
+def stream_dispatch_ref(sid, ts, valid, out_table, timestamps
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Subscriber fan-out + early stale filter.
+
+    sid/ts/valid: (B,), out_table: (N, F) int32 (-1 pad),
+    timestamps: (N,) int32.  Returns targets (B, F) int32 (-1 = none) and
+    early-keep mask (B, F) bool."""
+    N = timestamps.shape[0]
+    targets = out_table[jnp.clip(sid, 0, N - 1)]
+    tvalid = (targets >= 0) & valid[:, None]
+    t_safe = jnp.clip(targets, 0, N - 1)
+    early = tvalid & (ts[:, None] > timestamps[t_safe])
+    return jnp.where(tvalid, targets, -1), early

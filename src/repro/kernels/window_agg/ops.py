@@ -1,0 +1,24 @@
+"""Jitted window-aggregation wrapper."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.window_agg.kernel import window_agg
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def window_agg_op(values, count, *, block_n: int = 256,
+                  interpret: Optional[bool] = None) -> dict:
+    interp = _interpret_default() if interpret is None else interpret
+    N = values.shape[0]
+    bn = min(block_n, N)
+    while N % bn:
+        bn -= 1
+    return window_agg(values, count, block_n=bn, interpret=interp)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for sliding-window aggregation over SU ring buffers."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+BIG = 3.0e38
+
+
+def window_agg_ref(values: jnp.ndarray, count: jnp.ndarray) -> dict:
+    """values: (N, W, C) ring buffers; count: (N,) valid entries (<= W).
+    Returns dict of (N, C) aggregates over the valid window entries."""
+    N, W, C = values.shape
+    valid = (jnp.arange(W)[None, :] < count[:, None])[..., None]   # (N, W, 1)
+    vf = values.astype(jnp.float32)
+    s = jnp.where(valid, vf, 0.0).sum(axis=1)
+    cnt = jnp.maximum(count.astype(jnp.float32), 1.0)[:, None]
+    mean = s / cnt
+    mx = jnp.where(valid, vf, -BIG).max(axis=1)
+    mn = jnp.where(valid, vf, BIG).min(axis=1)
+    has = count[:, None] > 0
+    return {
+        "sum": s,
+        "mean": jnp.where(has, mean, 0.0),
+        "max": jnp.where(has, mx, 0.0),
+        "min": jnp.where(has, mn, 0.0),
+        "count": jnp.broadcast_to(count[:, None].astype(jnp.float32), (N, C)),
+    }

@@ -1,0 +1,467 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --------------------------------------------------------------------------
+# Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+# on the production mesh (16,16) and the 2-pod (2,16,16) mesh, and extract
+# memory / cost / collective statistics for the roofline analysis.
+#
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+#
+# The two os.environ lines above MUST stay the first statements: jax locks
+# the device count on first init.
+#
+# Two lowerings per cell:
+#   * EXEC     — lax.scan over layer periods + real grad-accumulation:
+#                the deployable program.  Proves compilation + sharding and
+#                provides memory_analysis() (per-device HBM fit).
+#   * ANALYSIS — layers python-unrolled, inner chunk loops widened, one
+#                microbatch: XLA's HLO cost analysis counts while-loop
+#                bodies ONCE, so roofline FLOPs/bytes/collectives come from
+#                this loop-free variant, scaled back by grad_accum.  sLSTM
+#                stays a time scan (unrollable only at absurd HLO size);
+#                its recurrence FLOPs are added analytically.
+# --------------------------------------------------------------------------
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.distributed import hlo as hlolib
+from repro.distributed.sharding import make_policy, param_shardings
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.models.config import SHAPES, SLSTM
+from repro.models.params import abstract_params
+from repro import optim
+
+
+# Production compute dtype is bf16; the dry-run lowers f32 (see lower_cell)
+# and scales byte-denominated roofline terms by this factor.
+DTYPE_SCALE = 0.5
+
+
+def _dp_size(mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("pod", 1) * sizes.get("data", 1)
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def _batch_shardings(mesh, policy, batch_abs):
+    def one(leaf):
+        axes = ("batch",) + (None,) * (len(leaf.shape) - 1)
+        return policy.sharding(axes, leaf.shape)
+    return jax.tree.map(one, batch_abs)
+
+
+def _opt_abstract(params_abs):
+    f32 = lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32)
+    return optim.AdamWState(
+        mu=jax.tree.map(f32, params_abs), nu=jax.tree.map(f32, params_abs),
+        count=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def _opt_shardings(mesh, params_sh):
+    return optim.AdamWState(mu=params_sh, nu=params_sh, count=_replicated(mesh))
+
+
+def _mem_record(compiled) -> Dict:
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "code_bytes": int(ma.generated_code_size_in_bytes),
+            "alias_bytes": int(getattr(ma, "alias_size_in_bytes", 0)),
+        }
+        mem["total_hbm_bytes"] = (mem["argument_bytes"] + mem["output_bytes"]
+                                  + mem["temp_bytes"] - mem["alias_bytes"])
+        return mem
+    except Exception as e:                                    # pragma: no cover
+        return {"error": repr(e)}
+
+
+def _cost_record(compiled, scale: float = 1.0, extra_flops: float = 0.0) -> Dict:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0)) * scale + extra_flops
+    hbm = float(cost.get("bytes accessed", 0.0)) * scale
+    text = compiled.as_text()
+    coll = hlolib.collective_stats(text)
+    return {
+        "flops_per_device": flops,
+        "hbm_bytes_per_device": hbm,
+        "scale": scale,
+        "extra_flops": extra_flops,
+        "collective": {
+            "counts": coll.counts,
+            "wire_bytes": {k: v * scale for k, v in coll.wire_bytes.items()},
+            "total_wire_bytes": coll.total_wire * scale,
+        },
+        "hlo_bytes": len(text),
+    }
+
+
+def _slstm_extra_flops(cfg, B: int, L: int, train: bool) -> float:
+    """Analytic FLOPs of the sLSTM time recurrence (kept as a scan even in
+    the analysis lowering; cost analysis counts its body once)."""
+    n_sl = sum(1 for m, _ in cfg.layer_specs if m == SLSTM)
+    if not n_sl or L <= 1:
+        return 0.0
+    D, H = cfg.d_model, cfg.n_heads
+    dh = D // H
+    per_step = B * (2 * 4 * H * dh * dh + 14 * D)
+    return float(n_sl * (L - 1) * per_step) * (3.0 if train else 1.0)
+
+
+# --------------------------------------------------------------------------
+# LM cells
+# --------------------------------------------------------------------------
+
+def _lower_lm(cfg, shape, mesh, policy, *, analysis: bool):
+    """Build (jitted_fn, lower_args, model_flops, scale) for one cell."""
+    constrain = policy.make_constrain(cfg)
+    accum = cfg.grad_accum
+    # long sequences: scale recurrent chunk sizes so chunk count stays <= 32
+    # (larger VMEM tiles are the right TPU shape at 32k+, and 100+-iteration
+    # chunk loops nested in the layer scan blow up XLA-CPU compile time)
+    L = shape.seq_len
+    if L >= 16384 and shape.kind != "decode":
+        cfg = dataclasses.replace(cfg,
+                                  ssm_chunk=max(cfg.ssm_chunk, L // 32),
+                                  mlstm_chunk=max(cfg.mlstm_chunk, L // 32))
+    if analysis:
+        cfg = dataclasses.replace(cfg, unroll_layers=True, unroll_inner=True,
+                                  grad_accum=1)
+        if shape.is_train:
+            shape = dataclasses.replace(
+                shape, global_batch=shape.global_batch // accum)
+    pspecs = M.param_specs(cfg)
+    params_abs = abstract_params(pspecs)
+    params_sh = param_shardings(policy, pspecs)
+    ins = M.input_specs(cfg, shape)
+    B, L = shape.global_batch, shape.seq_len
+    nact = M.count_params(cfg, active_only=True, exclude_embed=True)
+
+    if shape.kind == "train":
+        lr_fn = lambda s: optim.cosine_schedule(s, peak_lr=3e-4, warmup=100,
+                                                total=10000)
+        step = M.make_train_step(cfg, lr_fn=lr_fn, constrain=constrain)
+        opt_abs = _opt_abstract(params_abs)
+        opt_sh = _opt_shardings(mesh, params_sh)
+        batch_sh = _batch_shardings(mesh, policy, ins["batch"])
+        metrics_sh = {k: _replicated(mesh)
+                      for k in ("grad_norm", "clip_scale", "loss")}
+        jf = jax.jit(step,
+                     in_shardings=(params_sh, opt_sh, batch_sh, _replicated(mesh)),
+                     out_shardings=(params_sh, opt_sh, metrics_sh),
+                     donate_argnums=(0, 1))
+        args = (params_abs, opt_abs, ins["batch"], ins["step"])
+        mf = 6.0 * nact * B * L
+    elif shape.kind == "prefill":
+        step = M.make_prefill_step(cfg, constrain)
+        batch_sh = _batch_shardings(mesh, policy, ins["batch"])
+        cache_sh = param_shardings(policy, M.cache_specs(cfg, B, L))
+        last_shape = ((B, cfg.n_codebooks, cfg.vocab) if cfg.n_codebooks > 1
+                      else (B, cfg.vocab))
+        last_sh = policy.sharding(("batch",) + (None,) * (len(last_shape) - 2)
+                                  + ("vocab",), last_shape)
+        jf = jax.jit(step, in_shardings=(params_sh, batch_sh),
+                     out_shardings=(last_sh, cache_sh))
+        args = (params_abs, ins["batch"])
+        mf = 2.0 * nact * B * L
+    else:  # decode
+        step = M.make_decode_step(cfg, constrain)
+        batch_sh = _batch_shardings(mesh, policy, ins["batch"])
+        cache_sh = param_shardings(policy, M.cache_specs(cfg, B, L))
+        pos_sh = policy.sharding(("batch",), (B,))
+        lg_shape = ((B, 1, cfg.n_codebooks, cfg.vocab) if cfg.n_codebooks > 1
+                    else (B, 1, cfg.vocab))
+        lg_sh = policy.sharding(("batch",) + (None,) * (len(lg_shape) - 2)
+                                + ("vocab",), lg_shape)
+        jf = jax.jit(step,
+                     in_shardings=(params_sh, cache_sh, batch_sh, pos_sh),
+                     out_shardings=(lg_sh, cache_sh), donate_argnums=(1,))
+        args = (params_abs, ins["caches"], ins["batch"], ins["pos"])
+        mf = 2.0 * nact * B
+    xtra = _slstm_extra_flops(cfg, B, L if shape.kind != "decode" else 1,
+                              shape.is_train) / mesh.devices.size
+    return jf, args, mf, (accum if shape.is_train else 1), xtra, cfg
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               override: Optional[Dict] = None,
+               skip_analysis: bool = False,
+               mesh_shape=None, mesh_axes=None,
+               engine_mode: str = "sharded",
+               engine_streams: int = 1 << 16) -> Dict:
+    if mesh_shape is not None:
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh(mesh_shape, mesh_axes or ("data", "model"))
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    if arch == "engine":
+        return _lower_engine(mesh, mode=engine_mode, n_streams=engine_streams)
+
+    cfg = configs.get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.long_context_ok:
+        return {"skipped": "pure full-attention arch; long_500k needs "
+                           "sub-quadratic attention (see DESIGN.md)"}
+    dp = _dp_size(mesh)
+    if shape.is_train:
+        accum = min(cfg.grad_accum, max(1, shape.global_batch // dp))
+        cfg = dataclasses.replace(cfg, grad_accum=accum)
+    # Lower in float32: the CPU backend lowers bf16 with per-op converts and
+    # broken fusion (measured 4.4x inflated bytes-accessed), which is an
+    # artifact — TPU fuses bf16 natively.  The roofline instead applies an
+    # explicit DTYPE_SCALE=0.5 to the memory/collective byte terms
+    # (production compute dtype is bf16; see EXPERIMENTS.md for the caveat
+    # on f32 gradient all-reduces, which this slightly flatters).
+    cfg = dataclasses.replace(cfg, compute_dtype="float32")
+    if override:
+        cfg = dataclasses.replace(cfg, **override)
+    policy = make_policy(mesh, cfg, seq_shard=(shape_name == "long_500k"))
+    chips = mesh.devices.size
+
+    # ---- EXEC lowering: the deployable scan program ----------------------
+    jf, args, mf, accum, _, _ = _lower_lm(cfg, shape, mesh, policy, analysis=False)
+    t0 = time.time()
+    lowered = jf.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    exec_rec = {"t_lower_s": t_lower, "t_compile_s": t_compile,
+                "memory_analysis": _mem_record(compiled)}
+    exec_rec.update(_cost_record(compiled))
+
+    rec = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+           "chips": chips, "mesh": list(mesh.devices.shape),
+           "axis_names": list(mesh.axis_names),
+           "grad_accum": accum, "exec": exec_rec,
+           "model_flops_per_step": mf}
+
+    # ---- ANALYSIS lowering: loop-free roofline ---------------------------
+    # Unrolling all layers is too slow to compile for deep archs; periods
+    # are homogeneous, so lower 1-period and 2-period unrolled variants and
+    # extrapolate linearly in n_scan (embed/head/loss counted exactly once
+    # in both, so the extrapolation is exact for them too).
+    if not skip_analysis:
+        t0 = time.time()
+        costs = []
+        for k in (1, 2):
+            cfg_k = dataclasses.replace(
+                cfg, n_layers=len(cfg.prefix) + k * cfg.period)
+            jfa, argsa, _, _, _, _ = _lower_lm(cfg_k, shape, mesh, policy,
+                                               analysis=True)
+            compiled_a = jfa.lower(*argsa).compile()
+            costs.append(_cost_record(compiled_a))
+        t_ana = time.time() - t0
+        c1, c2 = costs
+        n = cfg.n_scan
+
+        def extrap(a, b):
+            return a + (b - a) * (n - 1)
+
+        xtra = _slstm_extra_flops(
+            cfg, shape.global_batch // (accum if shape.is_train else 1),
+            shape.seq_len if shape.kind != "decode" else 1,
+            shape.is_train) / chips
+        flops = extrap(c1["flops_per_device"], c2["flops_per_device"]) \
+            * accum + xtra
+        hbm = extrap(c1["hbm_bytes_per_device"], c2["hbm_bytes_per_device"]) \
+            * accum
+        wire_by_op = {
+            k: extrap(c1["collective"]["wire_bytes"][k],
+                      c2["collective"]["wire_bytes"][k]) * accum
+            for k in c1["collective"]["wire_bytes"]}
+        wire = sum(wire_by_op.values())
+        counts = {k: int(extrap(c1["collective"]["counts"][k],
+                                c2["collective"]["counts"][k]))
+                  for k in c1["collective"]["counts"]}
+        ana = {"flops_per_device": flops, "hbm_bytes_per_device": hbm,
+               "collective": {"counts": counts, "wire_bytes": wire_by_op,
+                              "total_wire_bytes": wire},
+               "slstm_extra_flops": xtra, "scale": accum,
+               "depth_extrapolated_from": [c1, c2], "t_total_s": t_ana}
+        rec["analysis"] = ana
+        rec["dtype_scale"] = DTYPE_SCALE
+        terms = hlolib.roofline_terms(flops, hbm * DTYPE_SCALE,
+                                      wire * DTYPE_SCALE)
+        rec["roofline"] = terms
+        rec["model_flops_ratio"] = (mf / chips / flops) if flops else 0.0
+    return rec
+
+
+# --------------------------------------------------------------------------
+# Stream-engine cell (the paper's own workload on the production mesh)
+# --------------------------------------------------------------------------
+
+def _lower_engine(mesh, mode: str = "sharded",
+                  n_streams: int = 1 << 16) -> Dict:
+    """``mode``: 'sharded' shards stream state/tables by id over every mesh
+    axis (scale-out posture); 'replicated' keeps state replicated and lets
+    each device serve the full table (the right call below ~10^5 streams —
+    see EXPERIMENTS.md §Perf engine iterations)."""
+    from repro.core import EngineConfig, engine as eng
+
+    ecfg = EngineConfig(n_streams=n_streams, n_tenants=64, channels=8,
+                        max_in=16, max_out=16, batch=4096, queue=1 << 15,
+                        prog_len=32, n_consts=16, sink_buffer=1024)
+    N, C, Q, B = ecfg.n_streams, ecfg.channels, ecfg.queue, ecfg.batch
+    i32, f32, b_ = jnp.int32, jnp.float32, jnp.bool_
+    sds = jax.ShapeDtypeStruct
+    stream_axes = tuple(a for a in ("pod", "data", "model")
+                        if a in mesh.axis_names)
+    rep = NamedSharding(mesh, P())
+    row = NamedSharding(mesh, P(stream_axes)) if mode == "sharded" else rep
+
+    tables_abs = eng.DeviceTables(
+        in_table=sds((N, ecfg.max_in), i32), in_count=sds((N,), i32),
+        out_table=sds((N, ecfg.max_out), i32), out_count=sds((N,), i32),
+        progs=sds((N, ecfg.prog_len, 4), i32), consts=sds((N, ecfg.n_consts), f32),
+        is_composite=sds((N,), b_), tenant=sds((N,), i32),
+        priority=sds((N,), i32), n_channels=sds((N,), i32),
+        model_backed=sds((N,), b_))
+    tables_sh = eng.DeviceTables(*([row] * len(eng.DeviceTables._fields)))
+
+    state_abs = eng.EngineState(
+        values=sds((N, C), f32), timestamps=sds((N,), i32),
+        q_sid=sds((Q,), i32), q_vals=sds((Q, C), f32), q_ts=sds((Q,), i32),
+        q_seq=sds((Q,), i32), q_valid=sds((Q,), b_), seq=sds((), i32),
+        tenant_emitted=sds((ecfg.n_tenants,), i32),
+        stats={k: sds((), i32) for k in eng.STAT_KEYS})
+    state_sh = eng.EngineState(
+        values=row, timestamps=row, q_sid=rep, q_vals=rep, q_ts=rep,
+        q_seq=rep, q_valid=rep, seq=rep, tenant_emitted=rep,
+        stats={k: rep for k in eng.STAT_KEYS})
+
+    ingest_abs = eng.IngestBatch(sid=sds((B,), i32), vals=sds((B, C), f32),
+                                 ts=sds((B,), i32), valid=sds((B,), b_))
+    ingest_sh = eng.IngestBatch(*([NamedSharding(mesh, P(stream_axes))] * 4))
+    sink_sh = eng.SinkBatch(rep, rep, rep, rep)
+
+    step = eng.make_step(ecfg, jit=False)
+    jf = jax.jit(step, in_shardings=(tables_sh, state_sh, ingest_sh),
+                 out_shardings=(state_sh, sink_sh), donate_argnums=(1,))
+    t0 = time.time()
+    lowered = jf.lower(tables_abs, state_abs, ingest_abs)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    exec_rec = {"t_lower_s": t_lower, "t_compile_s": t_compile,
+                "memory_analysis": _mem_record(compiled)}
+    exec_rec.update(_cost_record(compiled))
+    # engine is gather/scatter bound; VM fori-loop flops are negligible,
+    # so exec == analysis for the engine cell.
+    terms = hlolib.roofline_terms(
+        exec_rec["flops_per_device"], exec_rec["hbm_bytes_per_device"],
+        exec_rec["collective"]["total_wire_bytes"])
+    mf = float(ecfg.work * ecfg.prog_len)
+    return {"arch": "engine", "shape": f"pubsub_{N >> 10}k",
+            "engine_mode": mode,
+            "multi_pod": "pod" in mesh.axis_names,
+            "chips": mesh.devices.size, "mesh": list(mesh.devices.shape),
+            "axis_names": list(mesh.axis_names), "grad_accum": None,
+            "exec": exec_rec, "analysis": exec_rec, "roofline": terms,
+            "model_flops_per_step": mf,
+            "model_flops_ratio": (mf / mesh.devices.size /
+                                  exec_rec["flops_per_device"]
+                                  if exec_rec["flops_per_device"] else 0.0)}
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+
+def run_cells(archs, shapes, meshes, out_dir, skip_existing=False):
+    os.makedirs(out_dir, exist_ok=True)
+    results = []
+    for multi in meshes:
+        tag = "multi" if multi else "single"
+        for arch in archs:
+            cell_shapes = shapes or (["pubsub_64k"] if arch == "engine"
+                                     else configs.cells(arch))
+            for shp in cell_shapes:
+                name = f"{tag}__{arch}__{shp}.json"
+                path = os.path.join(out_dir, name)
+                if skip_existing and os.path.exists(path):
+                    print(f"[skip existing] {name}", flush=True)
+                    continue
+                t0 = time.time()
+                try:
+                    # roofline table is single-pod (per assignment); the
+                    # multi-pod pass proves the pod axis shards (exec only)
+                    rec = lower_cell(arch, shp, multi, skip_analysis=multi)
+                except Exception:
+                    rec = {"arch": arch, "shape": shp, "multi_pod": multi,
+                           "error": traceback.format_exc()}
+                rec.setdefault("arch", arch)
+                rec.setdefault("shape", shp)
+                rec.setdefault("multi_pod", multi)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1, default=str)
+                dt = time.time() - t0
+                if "error" in rec:
+                    print(f"[FAIL {dt:6.1f}s] {tag} {arch} {shp}", flush=True)
+                    print("   " + rec["error"].splitlines()[-1], flush=True)
+                elif "skipped" in rec:
+                    print(f"[skip {dt:6.1f}s] {tag} {arch} {shp}: "
+                          f"{rec['skipped']}", flush=True)
+                else:
+                    r = rec.get("roofline", {})
+                    mem = rec["exec"]["memory_analysis"].get("total_hbm_bytes", 0)
+                    print(f"[ok   {dt:6.1f}s] {tag:6s} {arch:20s} {shp:12s} "
+                          f"bound={r.get('bottleneck', '?'):10s} "
+                          f"tc={r.get('t_compute_s', 0):.3e} "
+                          f"tm={r.get('t_memory_s', 0):.3e} "
+                          f"tx={r.get('t_collective_s', 0):.3e} "
+                          f"useful={rec.get('model_flops_ratio', 0):.2f} "
+                          f"mem/dev={mem/2**30:.2f}GiB", flush=True)
+                results.append(rec)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="arch id, 'engine', or omit with --all")
+    ap.add_argument("--shape", default=None,
+                    help="shape name (default: all assigned cells)")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true", help="all archs (+engine)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        archs = configs.list_archs() + ["engine"]
+    elif args.arch:
+        archs = [args.arch]
+    else:
+        ap.error("--arch or --all required")
+    shapes = [args.shape] if args.shape else None
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    run_cells(archs, shapes, meshes, args.out, args.skip_existing)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (required so smoke tests see 1 CPU device while
+the dry-run sees 512 forced host devices)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devices)} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (elastic scaling: any (pods, data, model) works —
+    the sharding policy re-derives divisibility-guarded rules)."""
+    n = int(np.prod(shape))
+    return jax.make_mesh(tuple(shape), tuple(axes), devices=jax.devices()[:n])

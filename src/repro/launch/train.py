@@ -1,0 +1,44 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b --smoke \
+        --steps 50 --batch 4 --seq 64
+
+``--smoke`` selects the reduced same-family config (CPU-runnable); the
+full configs are exercised via the dry-run (`repro.launch.dryrun`) and on
+real fleets via the same Trainer with a pjit mesh.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro import configs
+from repro.training import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.list_archs())
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (required on CPU hosts)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--compress", action="store_true",
+                    help="int8 error-feedback gradient compression")
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke(args.arch) if args.smoke \
+        else configs.get_config(args.arch)
+    tc = TrainConfig(steps=args.steps, seq_len=args.seq,
+                     global_batch=args.batch, peak_lr=args.lr,
+                     ckpt_dir=args.ckpt_dir, compress_grads=args.compress)
+    out = Trainer(cfg, tc).run()
+    h = out["history"]
+    print(f"final loss {h[-1]['loss']:.4f} after {out['final_step']} steps; "
+          f"stragglers={out['straggler_steps']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,203 @@
+"""GQA attention: global/sliding-window, train/prefill/decode, KV caches.
+
+The jnp implementation here is the *reference/dry-run* path (what XLA
+lowers for the roofline); ``repro.kernels.flash_attention`` is the
+TPU-optimized Pallas path, numerically validated against this module.
+
+Conventions
+-----------
+q: (B, L, H, Dh), k/v: (B, S, KV, Dh); grouped heads G = H // KV.
+Softmax statistics in float32.  Sliding-window caches are ring buffers of
+``window`` slots; slot of absolute position p is ``p % window``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def qkv_project(x, p, *, n_heads, n_kv, d_head, qk_norm_eps=None):
+    """x: (B, L, D) -> q (B,L,H,Dh), k,v (B,L,KV,Dh)."""
+    B, L, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, L, n_heads, d_head)
+    k = (x @ p["wk"]).reshape(B, L, n_kv, d_head)
+    v = (x @ p["wv"]).reshape(B, L, n_kv, d_head)
+    if "q_norm" in p:
+        q = layers.rms_norm(q, p["q_norm"], qk_norm_eps or 1e-6)
+        k = layers.rms_norm(k, p["k_norm"], qk_norm_eps or 1e-6)
+    return q, k, v
+
+
+def _attend(q, k, v, mask, *, softcap=None, scale=None):
+    """Grouped attention over explicit mask.
+
+    q: (B, Lq, H, Dh); k/v: (B, S, KV, Dh); mask: broadcastable to
+    (B, KV, G, Lq, S) (True = attend).  Returns (B, Lq, H*Dh).
+    """
+    B, Lq, H, Dh = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else Dh ** -0.5
+    qg = q.reshape(B, Lq, KV, G, Dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = _softcap(scores, softcap)
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+    return out.reshape(B, Lq, H * Dh)
+
+
+def attend_causal(q, k, v, *, window: Optional[int] = None,
+                  softcap: Optional[float] = None,
+                  q_offset: int = 0, chunk: int = 1024,
+                  unroll: bool = False) -> jnp.ndarray:
+    """Causal (optionally sliding-window) attention, q-chunked.
+
+    Processes queries in chunks of ``chunk`` so the live score tensor is
+    (B, KV, G, chunk, S) instead of (B, KV, G, L, L) — the jnp analogue of
+    flash attention's IO shape discipline.  ``q_offset`` is the absolute
+    position of q[0] (cached prefill continuation).
+    """
+    B, Lq, H, Dh = q.shape
+    S = k.shape[1]
+    kpos = jnp.arange(S)
+
+    def block(qc, qpos0, lq):
+        qpos = qpos0 + jnp.arange(lq) + q_offset
+        m = kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            m &= kpos[None, :] > qpos[:, None] - window
+        return _attend(qc, k, v, m[None, None, None], softcap=softcap)
+
+    if Lq <= chunk or Lq % chunk != 0:
+        return block(q, 0, Lq)
+
+    nc = Lq // chunk
+    qs = q.reshape(B, nc, chunk, H, Dh)
+
+    if unroll:
+        outs = [block(qs[:, i], i * chunk, chunk) for i in range(nc)]
+        return jnp.concatenate(outs, axis=1)
+
+    def body(i):
+        return block(qs[:, i], i * chunk, chunk)
+
+    out = jax.lax.map(body, jnp.arange(nc))              # (nc, B, chunk, H*Dh)
+    return jnp.moveaxis(out, 0, 1).reshape(B, Lq, H * Dh)
+
+
+# --------------------------------------------------------------------------
+# KV cache (decode)
+# --------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray        # (B, S, KV, Dh)  S = max_len (global) or window (local)
+    v: jnp.ndarray
+
+
+def init_kv_cache(B, S, n_kv, d_head, dtype, *, window: Optional[int] = None
+                  ) -> KVCache:
+    slots = min(S, window) if window else S
+    z = jnp.zeros((B, slots, n_kv, d_head), dtype)
+    return KVCache(z, z)
+
+
+def cache_from_prefill(k, v, *, window: Optional[int] = None,
+                       pad_to: Optional[int] = None) -> KVCache:
+    """Build a decode cache from full prefill k/v (post-RoPE).
+
+    ``pad_to``: target capacity for decode continuation.  A global cache
+    sized exactly L would wrap at the first decode step (slot = pos % L
+    == 0) and evict token 0 — callers that decode further must pass the
+    serving max_len here."""
+    L = k.shape[1]
+    target = max(L, pad_to) if pad_to is not None else L
+    slots = min(window, target) if window is not None else target
+    if L >= slots:
+        kw = jnp.roll(k[:, -slots:], shift=L % slots, axis=1)
+        vw = jnp.roll(v[:, -slots:], shift=L % slots, axis=1)
+        return KVCache(kw, vw)
+    pad = [(0, 0), (0, slots - L), (0, 0), (0, 0)]
+    return KVCache(jnp.pad(k, pad), jnp.pad(v, pad))
+
+
+def decode_attend(q, cache: KVCache, k_new, v_new, pos, *,
+                  softcap: Optional[float] = None
+                  ) -> Tuple[jnp.ndarray, KVCache]:
+    """One-token decode: insert (k_new, v_new) at ``pos`` and attend.
+
+    q: (B, 1, H, Dh); k_new/v_new: (B, 1, KV, Dh); pos: (B,) int32 absolute
+    position of the new token.  Slot is ``pos % S``: the identity for a
+    full-length cache (pos < S by construction) and ring-buffer wrap-around
+    for a sliding-window cache.  Returns ((B, 1, H*Dh), new cache).
+    """
+    B, _, H, Dh = q.shape
+    S = cache.k.shape[1]
+    slot = pos % S
+
+    def put(buf, new, s):
+        return jax.lax.dynamic_update_slice_in_dim(buf, new, s, axis=0)
+
+    k = jax.vmap(put)(cache.k, k_new, slot)
+    v = jax.vmap(put)(cache.v, v_new, slot)
+    n_valid = jnp.minimum(pos + 1, S)                    # (B,)
+    mask = jnp.arange(S)[None, :] < n_valid[:, None]     # (B, S)
+    out = _attend(q, k, v, mask[:, None, None, None, :], softcap=softcap)
+    return out, KVCache(k, v)
+
+
+# --------------------------------------------------------------------------
+# Block wrapper used by model.py
+# --------------------------------------------------------------------------
+
+def attention_block(cfg, p, x, positions, *, local: bool, cache=None,
+                    decode_pos=None, cache_pad_to: Optional[int] = None):
+    """Full pre-norm attention sub-block (residual added by caller).
+
+    Returns (y, new_cache_or_None).  ``cache``: KVCache for decode, or
+    "collect" to return a prefill-built cache (padded to ``cache_pad_to``
+    slots for decode continuation).
+    """
+    B, L, D = x.shape
+    h = layers.rms_norm(x, p["norm"], cfg.norm_eps, plus_one=cfg.gemma_norm)
+    q, k, v = qkv_project(h, p, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                          d_head=cfg.d_head,
+                          qk_norm_eps=cfg.norm_eps if cfg.qk_norm else None)
+    theta = cfg.rope_theta_local if local else cfg.rope_theta
+    if cfg.pos_emb == "rope":
+        if cfg.mrope:
+            q = layers.apply_mrope(q, positions, theta, cfg.mrope_sections)
+            k = layers.apply_mrope(k, positions, theta, cfg.mrope_sections)
+        else:
+            pos2d = positions if positions.ndim == 2 else positions[None, :]
+            q = layers.apply_rope(q, pos2d, theta)
+            k = layers.apply_rope(k, pos2d, theta)
+    window = cfg.window if local else None
+
+    new_cache = None
+    if isinstance(cache, KVCache):
+        assert decode_pos is not None
+        out, new_cache = decode_attend(q, cache, k, v, decode_pos,
+                                       softcap=cfg.attn_logit_softcap)
+    else:
+        out = attend_causal(q, k, v, window=window,
+                            softcap=cfg.attn_logit_softcap,
+                            chunk=cfg.attn_chunk, unroll=cfg.unroll_inner)
+        if cache == "collect":
+            new_cache = cache_from_prefill(k, v, window=window,
+                                           pad_to=cache_pad_to)
+    y = out @ p["wo"]
+    return y, new_cache

@@ -1,0 +1,128 @@
+"""Common neural layers: norms, rotary embeddings (incl. M-RoPE), MLPs.
+
+All functions are pure (params passed explicitly) and dtype-disciplined:
+normalization and softmax statistics in float32, matmuls in the config's
+compute dtype.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-6,
+             plus_one: bool = False) -> jnp.ndarray:
+    """RMSNorm; ``plus_one`` uses the gemma (1+g) convention."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    xn = xf * jax.lax.rsqrt(var + eps)
+    g = gamma.astype(jnp.float32)
+    if plus_one:
+        g = 1.0 + g
+    return (xn * g).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings
+# --------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> jnp.ndarray:
+    """(d_head/2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., L, H, Dh); positions: broadcastable to (..., L) int32."""
+    d_head = x.shape[-1]
+    inv = rope_freqs(d_head, theta)                       # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., L, Dh/2)
+    cos = jnp.cos(ang)[..., None, :]                      # (..., L, 1, Dh/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+                sections: Tuple[int, int, int]) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE.
+
+    x: (B, L, H, Dh); positions: (3, B, L) -- temporal / height / width
+    position ids.  The Dh/2 frequency slots are split into ``sections``
+    (sum == Dh/2); each section takes its angle from the corresponding
+    position stream.  For pure text all three streams are equal and M-RoPE
+    reduces to standard RoPE.
+    """
+    d_head = x.shape[-1]
+    inv = rope_freqs(d_head, theta)                       # (Dh/2,)
+    # (3, B, L, Dh/2)
+    ang_all = positions[..., None].astype(jnp.float32) * inv
+    idx = jnp.repeat(jnp.arange(3), jnp.array(sections), total_repeat_length=d_head // 2)
+    ang = jnp.take_along_axis(
+        jnp.moveaxis(ang_all, 0, -1),                     # (B, L, Dh/2, 3)
+        idx[None, None, :, None], axis=-1)[..., 0]        # (B, L, Dh/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(L: int, d_model: int, offset: jnp.ndarray | int = 0
+                         ) -> jnp.ndarray:
+    """(L, d_model) fixed sinusoidal table (musicgen)."""
+    pos = (jnp.arange(L, dtype=jnp.float32) + offset)[:, None]
+    half = d_model // 2
+    inv = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+    g = x @ w_gate
+    u = x @ w_up
+    a = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g, approximate=True)
+    return (a * u) @ w_down
+
+
+def mlp_plain(x: jnp.ndarray, w_up: jnp.ndarray, w_down: jnp.ndarray,
+              act: str = "gelu") -> jnp.ndarray:
+    h = x @ w_up
+    if act == "gelu":
+        h = jax.nn.gelu(h, approximate=True)
+    elif act == "relu2":                  # nemotron squared ReLU
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.relu(h)
+    return h @ w_down
+
+
+# --------------------------------------------------------------------------
+# Causal depthwise conv (mamba / xlstm blocks)
+# --------------------------------------------------------------------------
+
+def causal_conv1d(x: jnp.ndarray, kernel: jnp.ndarray,
+                  state: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal convolution along time.
+
+    x: (B, L, D); kernel: (K, D).  ``state``: (B, K-1, D) carried context
+    (decode) or None (train: zero left-pad).  Returns (y, new_state).
+    """
+    B, L, D = x.shape
+    K = kernel.shape[0]
+    if state is None:
+        state = jnp.zeros((B, K - 1, D), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)              # (B, L+K-1, D)
+    y = jnp.zeros((B, L, D), jnp.float32)
+    for k in range(K):                                    # K is tiny (4)
+        y = y + xp[:, k:k + L, :].astype(jnp.float32) * kernel[k].astype(jnp.float32)
+    new_state = xp[:, -(K - 1):, :] if K > 1 else jnp.zeros((B, 0, D), x.dtype)
+    return y.astype(x.dtype), new_state

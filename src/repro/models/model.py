@@ -1,0 +1,555 @@
+"""Unified block-pattern language model.
+
+One definition covers all 10 assigned architectures: a stack of
+(mixer, mlp) layers described by ``ModelConfig.prefix + pattern * n_scan``.
+The repeated pattern is executed with ``lax.scan`` over stacked parameters
+(compile time and HLO size stay flat in depth) and `jax.checkpoint` for
+training remat.  Caches (KV / SSM / xLSTM states) follow the same
+prefix+scan structure so decode steps scan too.
+
+Everything is derived from declarative spec tables (`repro.models.params`):
+concrete init, allocation-free abstract trees for the dry-run, sharding
+specs and exact parameter counts.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, moe, ssm, xlstm
+from repro.models.config import (ATTN, ATTN_LOCAL, DENSE, MAMBA, MLSTM, MOE,
+                                 NONE, SLSTM, ModelConfig, ShapeConfig)
+from repro.models.params import (ParamSpec, Path, abstract_params, count,
+                                 init_params, param_axes, unflatten)
+
+# --------------------------------------------------------------------------
+# Parameter spec tables
+# --------------------------------------------------------------------------
+
+def _attn_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    D, H, KV, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    pd = cfg.param_dtype
+    s = {
+        "norm": ParamSpec((D,), ("d_model",), "zeros" if cfg.gemma_norm else "ones", pd),
+        "wq": ParamSpec((D, H * dh), ("d_model", "heads_dh"), "normal", pd),
+        "wk": ParamSpec((D, KV * dh), ("d_model", "kv_dh"), "normal", pd),
+        "wv": ParamSpec((D, KV * dh), ("d_model", "kv_dh"), "normal", pd),
+        "wo": ParamSpec((H * dh, D), ("heads_dh", "d_model"), "normal", pd),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = ParamSpec((dh,), (None,), "ones", pd)
+        s["k_norm"] = ParamSpec((dh,), (None,), "ones", pd)
+    return s
+
+
+def _mlp_specs(cfg: ModelConfig, width: int) -> Dict[str, ParamSpec]:
+    D, pd = cfg.d_model, cfg.param_dtype
+    s = {"norm": ParamSpec((D,), ("d_model",),
+                           "zeros" if cfg.gemma_norm else "ones", pd),
+         "w_up": ParamSpec((D, width), ("d_model", "d_ff"), "normal", pd),
+         "w_down": ParamSpec((width, D), ("d_ff", "d_model"), "normal", pd)}
+    if cfg.mlp_gated:
+        s["w_gate"] = ParamSpec((D, width), ("d_model", "d_ff"), "normal", pd)
+    return s
+
+
+def _moe_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    D, E, Fe, pd = cfg.d_model, cfg.n_experts, cfg.d_expert, cfg.param_dtype
+    s = {
+        "norm": ParamSpec((D,), ("d_model",), "ones", pd),
+        "router": ParamSpec((D, E), ("d_model", None), "normal", "float32"),
+        "w_gate": ParamSpec((E, D, Fe), ("experts", "d_model", "d_expert"), "normal", pd),
+        "w_up": ParamSpec((E, D, Fe), ("experts", "d_model", "d_expert"), "normal", pd),
+        "w_down": ParamSpec((E, Fe, D), ("experts", "d_expert", "d_model"), "normal", pd),
+    }
+    if cfg.n_shared > 0:
+        Fs = cfg.n_shared * Fe
+        s["ws_gate"] = ParamSpec((D, Fs), ("d_model", "d_ff"), "normal", pd)
+        s["ws_up"] = ParamSpec((D, Fs), ("d_model", "d_ff"), "normal", pd)
+        s["ws_down"] = ParamSpec((Fs, D), ("d_ff", "d_model"), "normal", pd)
+        if cfg.shared_gate:
+            s["w_shared_gate"] = ParamSpec((D, 1), ("d_model", None), "normal", pd)
+    return s
+
+
+def _mamba_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    D, Di, S, R, K = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
+    pd = cfg.param_dtype
+    s = {
+        "norm": ParamSpec((D,), ("d_model",), "ones", pd),
+        "in_proj": ParamSpec((D, 2 * Di), ("d_model", "d_inner2"), "normal", pd),
+        "conv": ParamSpec((K, Di), (None, "d_inner"), "normal", pd, scale=0.5),
+        "x_proj": ParamSpec((Di, R + 2 * S), ("d_inner", None), "normal", pd),
+        "dt_proj": ParamSpec((R, Di), (None, "d_inner"), "normal", pd),
+        "dt_bias": ParamSpec((Di,), ("d_inner",), "dt_bias", "float32"),
+        "A_log": ParamSpec((Di, S), ("d_inner", None), "a_log", "float32"),
+        "D": ParamSpec((Di,), ("d_inner",), "ones", "float32"),
+        "out_proj": ParamSpec((Di, D), ("d_inner", "d_model"), "normal", pd),
+    }
+    if cfg.ssm_norm:
+        s["dt_norm"] = ParamSpec((R,), (None,), "ones", pd)
+        s["b_norm"] = ParamSpec((S,), (None,), "ones", pd)
+        s["c_norm"] = ParamSpec((S,), (None,), "ones", pd)
+    return s
+
+
+def _mlstm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    D, Dm, H, K = cfg.d_model, cfg.d_mlstm, cfg.n_heads, cfg.conv_kernel
+    dh = Dm // H
+    pd = cfg.param_dtype
+    # q/k/v are block-diagonal per head (the official mLSTM parameterization)
+    return {
+        "norm": ParamSpec((D,), ("d_model",), "ones", pd),
+        "w_up": ParamSpec((D, 2 * Dm), ("d_model", "d_inner2"), "normal", pd),
+        "conv": ParamSpec((K, Dm), (None, "d_inner"), "normal", pd, scale=0.5),
+        "wq": ParamSpec((H, dh, dh), ("heads", None, "mlstm_dh"), "normal", pd),
+        "wk": ParamSpec((H, dh, dh), ("heads", None, "mlstm_dh"), "normal", pd),
+        "wv": ParamSpec((H, dh, dh), ("heads", None, "mlstm_dh"), "normal", pd),
+        "w_if": ParamSpec((Dm, 2 * H), ("d_inner", None), "small", "float32"),
+        "b_if": ParamSpec((2 * H,), (None,), "zeros", "float32"),
+        "head_norm": ParamSpec((Dm,), ("d_inner",), "ones", pd),
+        "w_down": ParamSpec((Dm, D), ("d_inner", "d_model"), "normal", pd),
+    }
+
+
+def _slstm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    D, H, K = cfg.d_model, cfg.n_heads, cfg.conv_kernel
+    dh = D // H
+    Fs = cfg.slstm_ff or int(4 * D / 3)
+    pd = cfg.param_dtype
+    return {
+        "norm": ParamSpec((D,), ("d_model",), "ones", pd),
+        "conv": ParamSpec((K, D), (None, "d_model"), "normal", pd, scale=0.5),
+        "w_if": ParamSpec((D, 2 * D), ("d_model", None), "normal", pd),
+        "w_zo": ParamSpec((D, 2 * D), ("d_model", None), "normal", pd),
+        "b_gates": ParamSpec((4 * D,), (None,), "zeros", "float32"),
+        "r_gates": ParamSpec((4, H, dh, dh), (None, None, None, None), "normal", pd),
+        "head_norm": ParamSpec((D,), ("d_model",), "ones", pd),
+        "w_out": ParamSpec((D, D), ("d_model", None), "normal", pd),
+        "ffn_norm": ParamSpec((D,), ("d_model",), "ones", pd),
+        "w_gate": ParamSpec((D, Fs), ("d_model", "d_ff"), "normal", pd),
+        "w_up": ParamSpec((D, Fs), ("d_model", "d_ff"), "normal", pd),
+        "w_down": ParamSpec((Fs, D), ("d_ff", "d_model"), "normal", pd),
+    }
+
+
+_MIXER_SPECS = {ATTN: _attn_specs, ATTN_LOCAL: _attn_specs,
+                MAMBA: _mamba_specs, MLSTM: _mlstm_specs, SLSTM: _slstm_specs}
+
+
+def _layer_specs(cfg: ModelConfig, spec) -> Dict[str, Dict[str, ParamSpec]]:
+    mixer, mlp = spec
+    out = {"mixer": _MIXER_SPECS[mixer](cfg)}
+    if mlp == DENSE:
+        width = cfg.d_ff_prefix if (cfg.d_ff_prefix and spec in cfg.prefix) else cfg.d_ff
+        out["mlp"] = _mlp_specs(cfg, width)
+    elif mlp == MOE:
+        out["mlp"] = _moe_specs(cfg)
+    return out
+
+
+def param_specs(cfg: ModelConfig) -> Dict[Path, ParamSpec]:
+    D, V = cfg.d_model, cfg.vocab
+    pd = cfg.param_dtype
+    flat: Dict[Path, ParamSpec] = {}
+    if not cfg.embed_inputs:
+        eshape = (cfg.n_codebooks, V, D) if cfg.n_codebooks > 1 else (V, D)
+        eaxes = ("codebooks", "vocab", "d_model") if cfg.n_codebooks > 1 else ("vocab", "d_model")
+        flat[("embed", "tok")] = ParamSpec(eshape, eaxes, "small", pd)
+    for i, spec in enumerate(cfg.prefix):
+        for comp, d in _layer_specs(cfg, spec).items():
+            for name, ps in d.items():
+                flat[("prefix", f"l{i}", comp, name)] = ps
+    n = cfg.n_scan
+    for j, spec in enumerate(cfg.pattern):
+        for comp, d in _layer_specs(cfg, spec).items():
+            for name, ps in d.items():
+                flat[("scan", f"s{j}", comp, name)] = ParamSpec(
+                    (n,) + ps.shape, ("layers",) + ps.axes, ps.init, ps.dtype, ps.scale)
+    flat[("final", "norm")] = ParamSpec(
+        (D,), ("d_model",), "zeros" if cfg.gemma_norm else "ones", pd)
+    if not cfg.tie_embeddings:
+        hshape = (cfg.n_codebooks, D, V) if cfg.n_codebooks > 1 else (D, V)
+        haxes = ("codebooks", "d_model", "vocab") if cfg.n_codebooks > 1 else ("d_model", "vocab")
+        flat[("head", "w")] = ParamSpec(hshape, haxes, "normal", pd)
+    return flat
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False,
+                 exclude_embed: bool = False) -> int:
+    def weight(path: Path, ps: ParamSpec) -> float:
+        if exclude_embed and path[0] in ("embed", "head"):
+            return 0.0
+        if active_only and "experts" in ps.axes:
+            return cfg.top_k / cfg.n_experts
+        return 1.0
+    return count(param_specs(cfg), weight)
+
+
+# --------------------------------------------------------------------------
+# Cache spec tables (decode / prefill-collect)
+# --------------------------------------------------------------------------
+
+def _layer_cache_specs(cfg: ModelConfig, spec, B: int, S: int
+                       ) -> Dict[str, ParamSpec]:
+    mixer, _ = spec
+    cd = cfg.compute_dtype
+    if mixer in (ATTN, ATTN_LOCAL):
+        slots = min(S, cfg.window) if (mixer == ATTN_LOCAL and cfg.window) else S
+        sh = (B, slots, cfg.n_kv_heads, cfg.d_head)
+        ax = ("batch", "seq", "kv_heads", "d_head")
+        return {"k": ParamSpec(sh, ax, "zeros", cd),
+                "v": ParamSpec(sh, ax, "zeros", cd)}
+    if mixer == MAMBA:
+        Di, St, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+        return {"conv": ParamSpec((B, K - 1, Di), ("batch", None, "d_inner"), "zeros", cd),
+                "ssm": ParamSpec((B, Di, St), ("batch", "d_inner", None), "zeros", cd)}
+    if mixer == MLSTM:
+        Dm, H, K = cfg.d_mlstm, cfg.n_heads, cfg.conv_kernel
+        dh = Dm // H
+        return {"conv": ParamSpec((B, K - 1, Dm), ("batch", None, "d_inner"), "zeros", cd),
+                "C": ParamSpec((B, H, dh, dh), ("batch", "heads", "mlstm_dh", None), "zeros", cd),
+                "n": ParamSpec((B, H, dh), ("batch", "heads", None), "zeros", cd),
+                "m": ParamSpec((B, H), ("batch", "heads"), "zeros", "float32")}
+    if mixer == SLSTM:
+        D, K = cfg.d_model, cfg.conv_kernel
+        st = {"conv": ParamSpec((B, K - 1, D), ("batch", None, "d_model"), "zeros", cd)}
+        for k in ("h", "c", "n", "m"):
+            st[k] = ParamSpec((B, D), ("batch", None), "zeros", "float32")
+        return st
+    raise ValueError(mixer)
+
+
+def cache_specs(cfg: ModelConfig, B: int, S: int) -> Dict[Path, ParamSpec]:
+    flat: Dict[Path, ParamSpec] = {}
+    for i, spec in enumerate(cfg.prefix):
+        for name, ps in _layer_cache_specs(cfg, spec, B, S).items():
+            flat[("prefix", f"l{i}", name)] = ps
+    n = cfg.n_scan
+    for j, spec in enumerate(cfg.pattern):
+        for name, ps in _layer_cache_specs(cfg, spec, B, S).items():
+            flat[("scan", f"s{j}", name)] = ParamSpec(
+                (n,) + ps.shape, ("layers",) + ps.axes, ps.init, ps.dtype)
+    return flat
+
+
+def init_cache(cfg: ModelConfig, B: int, S: int) -> Dict:
+    flat = cache_specs(cfg, B, S)
+    return unflatten({p: jnp.zeros(s.shape, jnp.dtype(s.dtype)) for p, s in flat.items()})
+
+
+def abstract_cache(cfg: ModelConfig, B: int, S: int) -> Dict:
+    return abstract_params(cache_specs(cfg, B, S))
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+def _apply_layer(cfg, spec, lp, x, positions, cache, decode_pos, collect,
+                 constrain, cache_pad_to=None):
+    mixer, mlp = spec
+    aux = jnp.zeros((), jnp.float32)
+    if mixer in (ATTN, ATTN_LOCAL):
+        c = None
+        if cache is not None:
+            c = attention.KVCache(cache["k"], cache["v"])
+        elif collect:
+            c = "collect"
+        y, nc = attention.attention_block(
+            cfg, lp["mixer"], x, positions, local=(mixer == ATTN_LOCAL),
+            cache=c, decode_pos=decode_pos, cache_pad_to=cache_pad_to)
+        new_cache = {"k": nc.k, "v": nc.v} if nc is not None else {}
+    elif mixer == MAMBA:
+        y, nc = ssm.mamba_block(cfg, lp["mixer"], x, cache, collect)
+        new_cache = nc if nc is not None else {}
+    elif mixer == MLSTM:
+        y, nc = xlstm.mlstm_block(cfg, lp["mixer"], x, cache, collect)
+        new_cache = nc if nc is not None else {}
+    elif mixer == SLSTM:
+        y, nc = xlstm.slstm_block(cfg, lp["mixer"], x, cache, collect)
+        new_cache = nc if nc is not None else {}
+    else:
+        raise ValueError(mixer)
+    x = constrain(x + y)
+
+    if mlp == DENSE:
+        p = lp["mlp"]
+        h = layers.rms_norm(x, p["norm"], cfg.norm_eps, plus_one=cfg.gemma_norm)
+        if cfg.mlp_gated:
+            y2 = layers.swiglu(h, p["w_gate"], p["w_up"], p["w_down"], cfg.mlp_act)
+        else:
+            y2 = layers.mlp_plain(h, p["w_up"], p["w_down"], cfg.mlp_act)
+        x = constrain(x + y2)
+    elif mlp == MOE:
+        y2, aux = moe.moe_block(cfg, lp["mlp"], x)
+        x = constrain(x + y2)
+    return x, new_cache, aux
+
+
+def _embed(cfg, params, tokens=None, embeds=None, positions=None):
+    if cfg.embed_inputs:
+        x = embeds.astype(cfg.cdtype)
+    elif cfg.n_codebooks > 1:
+        # tokens: (B, L, K) — sum the K codebook embeddings
+        emb = params["embed"]["tok"]                    # (K, V, D)
+        x = jnp.zeros(tokens.shape[:2] + (cfg.d_model,), cfg.cdtype)
+        for k in range(cfg.n_codebooks):
+            x = x + emb[k][tokens[:, :, k]].astype(cfg.cdtype)
+    else:
+        x = params["embed"]["tok"][tokens].astype(cfg.cdtype)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.cdtype)
+    if cfg.pos_emb == "sinusoidal":
+        B, L = x.shape[:2]
+        pos = positions if positions.ndim == 2 else jnp.broadcast_to(positions, (B, L))
+        half = cfg.d_model // 2
+        inv = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+        ang = pos[..., None].astype(jnp.float32) * inv
+        x = x + jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(x.dtype)
+    return x
+
+
+def _head(cfg, params, x):
+    x = layers.rms_norm(x, params["final"]["norm"], cfg.norm_eps,
+                        plus_one=cfg.gemma_norm)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["tok"].T.astype(x.dtype)
+    elif cfg.n_codebooks > 1:
+        logits = jnp.einsum("bld,kdv->blkv", x, params["head"]["w"])
+    else:
+        logits = x @ params["head"]["w"]
+    if cfg.final_logit_softcap:
+        cap = cfg.final_logit_softcap
+        logits = cap * jnp.tanh(logits.astype(jnp.float32) / cap)
+    return logits
+
+
+def cast_params(cfg: ModelConfig, params):
+    """Mixed precision: matmul weights cast to the compute dtype at use;
+    master copies (and the AdamW moments) stay float32.  Gate biases,
+    norms and SSM constants remain float32 (they are consumed in float32
+    inside the blocks)."""
+    cd = cfg.cdtype
+    if cd == jnp.float32:
+        return params
+
+    def c(p):
+        return p.astype(cd) if (p.ndim >= 2 and p.dtype == jnp.float32) else p
+
+    return jax.tree.map(c, params)
+
+
+def forward(cfg: ModelConfig, params, *, tokens=None, embeds=None,
+            positions=None, caches=None, decode_pos=None,
+            collect_cache: bool = False, cache_pad_to: Optional[int] = None,
+            remat: bool = False,
+            constrain: Callable = lambda x: x):
+    """Returns (logits, new_caches_or_None, aux_loss)."""
+    params = cast_params(cfg, params)
+    ref = tokens if tokens is not None else embeds
+    B, L = ref.shape[0], ref.shape[1]
+    if positions is None:
+        if decode_pos is not None:
+            base = decode_pos[:, None]                  # (B, 1)
+        else:
+            base = jnp.arange(L)[None, :]               # (1, L)
+        positions = jnp.broadcast_to(base, (B, L))
+        if cfg.mrope:
+            positions = jnp.broadcast_to(positions[None], (3, B, L))
+
+    x = constrain(_embed(cfg, params, tokens, embeds, positions))
+    aux = jnp.zeros((), jnp.float32)
+    new_caches: Dict = {"scan": {}}
+    if cfg.prefix:
+        new_caches["prefix"] = {}
+
+    for i, spec in enumerate(cfg.prefix):
+        key = f"l{i}"
+        c = caches["prefix"][key] if caches is not None else None
+        x, nc, a = _apply_layer(cfg, spec, params["prefix"][key], x, positions,
+                                c, decode_pos, collect_cache, constrain,
+                                cache_pad_to)
+        new_caches["prefix"][key] = nc
+        aux = aux + a
+
+    def body(carry, xs):
+        x, aux = carry
+        slot_params, slot_caches = xs
+        outs = {}
+        for j, spec in enumerate(cfg.pattern):
+            key = f"s{j}"
+            c = slot_caches[key] if slot_caches is not None else None
+            x, nc, a = _apply_layer(cfg, spec, slot_params[key], x, positions,
+                                    c, decode_pos, collect_cache, constrain,
+                                    cache_pad_to)
+            outs[key] = nc
+            aux = aux + a
+        return (x, aux), outs
+
+    scan_caches = caches["scan"] if caches is not None else None
+    bodyfn = jax.checkpoint(body) if remat else body
+    if cfg.unroll_layers:
+        carry = (x, aux)
+        per_iter = []
+        for i in range(cfg.n_scan):
+            sp = jax.tree.map(lambda l: l[i], params["scan"])
+            sc = (jax.tree.map(lambda l: l[i], scan_caches)
+                  if scan_caches is not None else None)
+            carry, outs = bodyfn(carry, (sp, sc))
+            per_iter.append(outs)
+        (x, aux) = carry
+        leaves = jax.tree.leaves(per_iter[0])
+        scan_out = (jax.tree.map(lambda *ls: jnp.stack(ls), *per_iter)
+                    if leaves else per_iter[0])
+    else:
+        xs = (params["scan"], scan_caches)
+        (x, aux), scan_out = jax.lax.scan(bodyfn, (x, aux), xs)
+    new_caches["scan"] = scan_out
+
+    logits = _head(cfg, params, x)
+    want_cache = caches is not None or collect_cache
+    return logits, (new_caches if want_cache else None), aux
+
+
+# --------------------------------------------------------------------------
+# Loss & step builders
+# --------------------------------------------------------------------------
+
+def lm_loss(cfg: ModelConfig, logits: jnp.ndarray, labels: jnp.ndarray,
+            constrain: Callable = lambda x: x) -> jnp.ndarray:
+    """Token-mean cross entropy; vocab dim may be sharded (the label logit
+    is extracted with an iota-compare reduction, not a gather)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    V = logits.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    ll = jnp.sum(jnp.where(iota == labels[..., None], logits, 0.0), axis=-1)
+    mask = labels >= 0
+    n = jnp.maximum(mask.sum(), 1)
+    return jnp.sum(jnp.where(mask, lse - ll, 0.0)) / n
+
+
+def _split_micro(batch, accum: int):
+    def sp(x):
+        B = x.shape[0]
+        assert B % accum == 0, (B, accum)
+        return x.reshape(accum, B // accum, *x.shape[1:])
+    return jax.tree.map(sp, batch)
+
+
+def make_loss_fn(cfg: ModelConfig, constrain: Callable = lambda x: x):
+    n_moe = sum(1 for _, m in cfg.layer_specs if m == MOE)
+
+    def loss_fn(params, batch):
+        logits, _, aux = forward(
+            cfg, params,
+            tokens=batch.get("tokens"), embeds=batch.get("embeds"),
+            remat=cfg.remat, constrain=constrain)
+        logits = constrain(logits)
+        loss = lm_loss(cfg, logits, batch["labels"])
+        if n_moe:
+            loss = loss + cfg.router_aux_coef * aux / n_moe
+        return loss
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, *, lr_fn=None,
+                    constrain: Callable = lambda x: x,
+                    compress: bool = False):
+    """(params, opt_state, [comp_state,] batch, step) -> updated + metrics."""
+    from repro import optim
+
+    loss_fn = make_loss_fn(cfg, constrain)
+    if lr_fn is None:
+        lr_fn = lambda step: jnp.asarray(3e-4, jnp.float32)
+    accum = max(cfg.grad_accum, 1)
+
+    def grads_of(params, batch):
+        if accum == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        micro = _split_micro(batch, accum)
+
+        def acc(carry, mb):
+            loss_a, g_a = carry
+            l, g = jax.value_and_grad(loss_fn)(params, mb)
+            return (loss_a + l, jax.tree.map(jnp.add, g_a, g)), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(acc, (jnp.zeros(()), zeros), micro)
+        inv = 1.0 / accum
+        return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    if compress:
+        def step_fn(params, opt_state, comp_state, batch, step):
+            loss, grads = grads_of(params, batch)
+            grads, comp_state = optim.compressed_gradients(grads, comp_state)
+            lr = lr_fn(step)
+            params, opt_state, m = optim.adamw_update(grads, opt_state, params, lr)
+            m["loss"] = loss
+            return params, opt_state, comp_state, m
+        return step_fn
+
+    def step_fn(params, opt_state, batch, step):
+        loss, grads = grads_of(params, batch)
+        lr = lr_fn(step)
+        params, opt_state, m = optim.adamw_update(grads, opt_state, params, lr)
+        m["loss"] = loss
+        return params, opt_state, m
+    return step_fn
+
+
+def make_prefill_step(cfg: ModelConfig, constrain: Callable = lambda x: x,
+                      pad_to: Optional[int] = None):
+    """``pad_to``: decode-continuation capacity of the returned caches.
+    None keeps caches at exactly the prompt length (dry-run shape parity
+    with ``cache_specs(cfg, B, L)``); serving passes its max_len."""
+    def prefill(params, batch):
+        logits, caches, _ = forward(
+            cfg, params, tokens=batch.get("tokens"), embeds=batch.get("embeds"),
+            collect_cache=True, cache_pad_to=pad_to, constrain=constrain)
+        return logits[:, -1], caches
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, constrain: Callable = lambda x: x):
+    """One-token decode: (params, caches, tokens (B,1[,K]) or embeds,
+    pos (B,)) -> (logits (B,1,V...), caches)."""
+    def decode(params, caches, batch, pos):
+        logits, caches, _ = forward(
+            cfg, params, tokens=batch.get("tokens"), embeds=batch.get("embeds"),
+            caches=caches, decode_pos=pos, constrain=constrain)
+        return logits, caches
+    return decode
+
+
+# --------------------------------------------------------------------------
+# Input specs (dry-run stand-ins; the modality frontend STUB lives here:
+# audio/vision archs receive precomputed token/patch embeddings)
+# --------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    B, L = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    cd = jnp.dtype(cfg.compute_dtype)
+
+    def tok(b, l):
+        if cfg.embed_inputs:
+            return {"embeds": jax.ShapeDtypeStruct((b, l, cfg.d_model), cd)}
+        if cfg.n_codebooks > 1:
+            return {"tokens": jax.ShapeDtypeStruct((b, l, cfg.n_codebooks), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((b, l), i32)}
+
+    if shape.kind == "train":
+        lab = (B, L, cfg.n_codebooks) if cfg.n_codebooks > 1 else (B, L)
+        return {"batch": {**tok(B, L), "labels": jax.ShapeDtypeStruct(lab, i32)},
+                "step": jax.ShapeDtypeStruct((), i32)}
+    if shape.kind == "prefill":
+        return {"batch": tok(B, L)}
+    # decode: one new token against a cache of length L
+    return {"batch": tok(B, 1),
+            "caches": abstract_cache(cfg, B, L),
+            "pos": jax.ShapeDtypeStruct((B,), i32)}

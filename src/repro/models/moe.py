@@ -1,0 +1,105 @@
+"""Fine-grained Mixture-of-Experts: shared + routed experts, top-k routing.
+
+Dense GShard-style capacity dispatch: tokens are grouped, each group builds
+a (S, E, C) dispatch/combine tensor, and expert FFNs run as batched einsums
+over the expert dimension.  This formulation is XLA-SPMD friendly — the
+expert dim shards over the mesh `model` axis (expert parallelism) when the
+expert count divides it, otherwise the expert hidden dim shards (tensor
+parallelism inside experts); the group dim follows the batch sharding, so
+the dispatch einsum lowers to the canonical MoE all-to-all.
+
+The sorted/grouped-matmul path (``repro.kernels.moe_gmm``) is the
+TPU-optimized alternative validated against this module.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def topk_route(logits: jnp.ndarray, k: int, renorm: bool
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """logits: (..., E) -> gates (..., k) f32, idx (..., k) i32, probs f32."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)
+    if renorm:
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, idx, probs
+
+
+def dispatch_combine(idx: jnp.ndarray, gates: jnp.ndarray, n_experts: int,
+                     capacity: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Build capacity-limited dispatch/combine tensors.
+
+    idx/gates: (G, S, K).  Rank-major priority (all rank-0 choices win
+    positions before rank-1), position within expert by token order.
+    Returns dispatch, combine: (G, S, E, C) float32; dispatch is one-hot,
+    combine carries the gate values.  Tokens over capacity are dropped
+    (standard GShard semantics).
+    """
+    G, S, K = idx.shape
+    E, C = n_experts, capacity
+    base = jnp.zeros((G, 1, E), jnp.float32)         # tokens already placed
+    dispatch = jnp.zeros((G, S, E, C), jnp.float32)
+    combine = jnp.zeros((G, S, E, C), jnp.float32)
+    for j in range(K):
+        oh = jax.nn.one_hot(idx[:, :, j], E, dtype=jnp.float32)      # (G,S,E)
+        cum = jnp.cumsum(oh, axis=1) - oh                            # exclusive
+        pos_e = cum + base                                           # (G,S,E)
+        pos = jnp.sum(oh * pos_e, axis=-1)                           # (G,S)
+        keep = pos < C
+        poh = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=jnp.float32)
+        cell = oh[..., None] * poh[:, :, None, :] * keep[..., None, None]
+        dispatch = dispatch + cell
+        combine = combine + cell * gates[:, :, j, None, None]
+        base = base + jnp.sum(oh, axis=1, keepdims=True)
+    return dispatch, combine
+
+
+def load_balance_loss(idx: jnp.ndarray, probs: jnp.ndarray, n_experts: int
+                      ) -> jnp.ndarray:
+    """GShard/Switch auxiliary loss: E * sum_e f_e * P_e."""
+    oh = jax.nn.one_hot(idx, n_experts, dtype=jnp.float32)   # (..., K, E)
+    f = oh.mean(axis=tuple(range(oh.ndim - 1)))              # (E,)
+    p = probs.reshape(-1, n_experts).mean(0)
+    return n_experts * jnp.sum(f * p)
+
+
+def moe_block(cfg, p: Dict, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pre-normed MoE FFN sub-block. x: (B, L, D) -> (y, aux_loss)."""
+    B, L, D = x.shape
+    h = layers.rms_norm(x, p["norm"], cfg.norm_eps, plus_one=cfg.gemma_norm)
+    cd = cfg.cdtype
+
+    S = cfg.moe_group or min(512, L)
+    S = min(S, L)
+    assert L % S == 0, (L, S)
+    G = B * (L // S)
+    hg = h.reshape(G, S, D)
+
+    logits = (hg.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    gates, idx, probs = topk_route(logits, cfg.top_k, cfg.renorm_topk)
+    aux = load_balance_loss(idx, probs, cfg.n_experts)
+
+    cap = int(max(1, round(S * cfg.top_k * cfg.capacity_factor / cfg.n_experts)))
+    cap = min(cap, S)
+    disp, comb = dispatch_combine(idx, gates, cfg.n_experts, cap)
+
+    # expert FFNs (E, G*C rows)
+    e_in = jnp.einsum("gsec,gsd->egcd", disp.astype(cd), hg.astype(cd))
+    g = jnp.einsum("egcd,edf->egcf", e_in, p["w_gate"])
+    u = jnp.einsum("egcd,edf->egcf", e_in, p["w_up"])
+    e_out = jnp.einsum("egcf,efd->egcd", jax.nn.silu(g) * u, p["w_down"])
+    y = jnp.einsum("gsec,egcd->gsd", comb.astype(cd), e_out).reshape(B, L, D)
+
+    if cfg.n_shared > 0:
+        sh = layers.swiglu(h, p["ws_gate"], p["ws_up"], p["ws_down"])
+        if cfg.shared_gate:
+            sg = jax.nn.sigmoid((h @ p["w_shared_gate"]).astype(jnp.float32))
+            sh = sh * sg.astype(sh.dtype)
+        y = y + sh
+    return y.astype(x.dtype), aux

@@ -1,0 +1,101 @@
+"""Declarative parameter tables.
+
+Every architecture's parameters are described *declaratively* as a flat
+``{path: ParamSpec}`` table carrying shape, dtype, logical axis names and an
+initializer tag.  From one table we derive, without duplication:
+
+  * concrete initialization (``init_params``),
+  * allocation-free abstract trees for the multi-pod dry-run
+    (``abstract_params`` -> ShapeDtypeStruct pytree),
+  * sharding specs (``repro.distributed.sharding`` maps logical axis names
+    to mesh axes),
+  * exact parameter counts (``count_params``), incl. MoE active-params.
+
+Logical axis names used across the model plane:
+
+  vocab, d_model, heads, kv_heads, d_head, qkv (fused q/k/v rows), d_ff,
+  experts, d_expert, d_inner (mamba/xlstm inner), ssm_state, dt_rank, conv,
+  codebooks, layers (stacked scan dim), gates -- plus None for tiny dims.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Path = Tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]      # logical name per dim (None = replicated)
+    init: str = "normal"                 # normal | zeros | ones | a_log | dt_bias | small
+    dtype: str = "float32"
+    scale: float = 1.0                   # fan-in override multiplier
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape))
+
+
+def _init_leaf(key, spec: ParamSpec) -> jnp.ndarray:
+    dt = jnp.dtype(spec.dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dt)
+    if spec.init == "a_log":               # mamba: A = -exp(A_log), A_log = log(1..S)
+        s = spec.shape[-1]
+        a = jnp.tile(jnp.log(jnp.arange(1, s + 1, dtype=jnp.float32)),
+                     spec.shape[:-1] + (1,))
+        return a.astype(dt)
+    if spec.init == "dt_bias":             # mamba: softplus^-1(uniform(1e-3, 1e-1))
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1e-3, 1e-1)
+        return jnp.log(jnp.expm1(u)).astype(dt)
+    # normal / small: truncated-normal, 1/sqrt(fan_in) style
+    fan_in = spec.shape[0] if len(spec.shape) >= 2 else max(spec.shape[-1], 1)
+    if len(spec.shape) >= 3:               # stacked/expert weights: fan-in is dim -2
+        fan_in = spec.shape[-2]
+    std = spec.scale / math.sqrt(max(fan_in, 1))
+    if spec.init == "small":
+        std = 0.02 * spec.scale
+    return (jax.random.truncated_normal(key, -3.0, 3.0, spec.shape, jnp.float32)
+            * std).astype(dt)
+
+
+def unflatten(flat: Dict[Path, object]) -> Dict:
+    tree: Dict = {}
+    for path, leaf in flat.items():
+        node = tree
+        for k in path[:-1]:
+            node = node.setdefault(k, {})
+        node[path[-1]] = leaf
+    return tree
+
+
+def init_params(specs: Dict[Path, ParamSpec], rng: jax.Array) -> Dict:
+    keys = jax.random.split(rng, max(len(specs), 1))
+    return unflatten({p: _init_leaf(k, s)
+                      for k, (p, s) in zip(keys, sorted(specs.items()))})
+
+
+def abstract_params(specs: Dict[Path, ParamSpec]) -> Dict:
+    return unflatten({p: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype))
+                      for p, s in specs.items()})
+
+
+def param_axes(specs: Dict[Path, ParamSpec]) -> Dict:
+    return unflatten({p: s.axes for p, s in specs.items()})
+
+
+def count(specs: Dict[Path, ParamSpec],
+          weight: Callable[[Path, ParamSpec], float] = lambda p, s: 1.0) -> int:
+    return int(sum(s.size * weight(p, s) for p, s in specs.items()))

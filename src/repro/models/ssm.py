@@ -1,0 +1,228 @@
+"""Mamba (S6) selective-state-space mixer, TPU-shaped.
+
+Instead of a per-timestep recurrence (GPU kernel thinking), the sequence is
+processed in chunks: within a chunk the linear recurrence
+``h_t = A_t h_{t-1} + B_t x_t`` is solved with an associative scan (parallel
+on the VPU), chunks are chained with a `lax.scan` carry.  The state tensor
+(B, chunk, d_inner, d_state) never exceeds one chunk because the output
+contraction with C happens inside the chunk body.
+
+``repro.kernels.selective_scan`` is the Pallas version of the chunk body.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def _combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a2 * a1, a2 * b1 + b2
+
+
+# --------------------------------------------------------------------------
+# Sequential-in-chunk scan with chunk-recompute backward.
+#
+# The associative-scan form materializes O(log ck) full (B, ck, Di, S)
+# intermediates per chunk in fwd AND keeps the whole (B, L, Di, S) h
+# history alive for backward — measured 8x memory-roofline inflation on
+# jamba train_4k (EXPERIMENTS.md §Perf).  This form is the jnp analogue of
+# the Pallas kernel: h stays a (B, Di, S) carry; backward saves only
+# chunk-boundary states and *recomputes* h inside each chunk while running
+# the adjoint recurrence  lam_{t-1} = a_t * lam_t  backwards.
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _seq_scan(a, bx, c, h0, chunk):
+    y, h, _ = _seq_scan_fwd_impl(a, bx, c, h0, chunk, save_bounds=False)
+    return y, h
+
+
+def _chunks(x, nc, ck):
+    return jnp.moveaxis(x.reshape(x.shape[0], nc, ck, *x.shape[2:]), 1, 0)
+
+
+def _seq_scan_fwd_impl(a, bx, c, h0, chunk, save_bounds):
+    B, L, Di, S = a.shape
+    ck = min(chunk, L)
+    if L % ck != 0:
+        ck = L
+    nc = L // ck
+
+    def chunk_body(h, inp):
+        ac, bc, cc = inp
+        h_in = h
+
+        def step(hh, t_inp):
+            at, bt, ct = t_inp
+            hh = at * hh + bt
+            return hh, jnp.einsum("bds,bs->bd", hh, ct)
+
+        h, ys = jax.lax.scan(step, h, (jnp.moveaxis(ac, 1, 0),
+                                       jnp.moveaxis(bc, 1, 0),
+                                       jnp.moveaxis(cc, 1, 0)))
+        return h, (jnp.moveaxis(ys, 0, 1), h_in)
+
+    h_final, (ys, bounds) = jax.lax.scan(
+        chunk_body, h0, (_chunks(a, nc, ck), _chunks(bx, nc, ck),
+                         _chunks(c, nc, ck)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, L, Di)
+    return y, h_final, (bounds if save_bounds else None)
+
+
+def _seq_scan_fwd(a, bx, c, h0, chunk):
+    y, h, bounds = _seq_scan_fwd_impl(a, bx, c, h0, chunk, save_bounds=True)
+    return (y, h), (a, bx, c, bounds)
+
+
+def _seq_scan_bwd(chunk, res, grads):
+    a, bx, c, bounds = res
+    gy, gh = grads
+    B, L, Di, S = a.shape
+    ck = min(chunk, L)
+    if L % ck != 0:
+        ck = L
+    nc = L // ck
+
+    def chunk_bwd(lam, inp):
+        ac, bc, cc, gyc, h_in = inp
+
+        # recompute h inside the chunk (forward pass, stored this time —
+        # one chunk's history only: (B, ck, Di, S))
+        def refwd(hh, t_inp):
+            at, bt = t_inp
+            hh = at * hh + bt
+            return hh, hh
+
+        _, hs = jax.lax.scan(refwd, h_in, (jnp.moveaxis(ac, 1, 0),
+                                           jnp.moveaxis(bc, 1, 0)))
+        hs = jnp.moveaxis(hs, 0, 1)                     # (B, ck, Di, S)
+        h_prev = jnp.concatenate([h_in[:, None], hs[:, :-1]], axis=1)
+
+        # adjoint recurrence, backwards in time:
+        #   total_t = lam_t + c_t (x) gy_t          (dL/dh_t, all sources)
+        #   ga_t = total_t * h_{t-1};  gbx_t = total_t;  lam_{t-1} = a_t*total_t
+        def adj(lm, t_inp):
+            at, ct, gyt, hp = t_inp
+            total = lm + ct[:, None, :] * gyt[..., None]   # (B, Di, S)
+            ga = total * hp
+            lm = at * total
+            return lm, (ga, total)
+
+        rev = lambda x: jnp.moveaxis(x, 1, 0)[::-1]
+        lam_out, (gas, totals) = jax.lax.scan(
+            adj, lam, (rev(ac), rev(cc), rev(gyc), rev(h_prev)))
+        gas = jnp.moveaxis(gas[::-1], 0, 1)
+        totals = jnp.moveaxis(totals[::-1], 0, 1)
+        gc_c = jnp.einsum("bld,blds->bls", gyc, hs)        # dL/dc via y
+        return lam_out, (gas, totals, gc_c)
+
+    lam0 = gh.astype(jnp.float32)
+    rev_c = lambda x: _chunks(x, nc, ck)[::-1]
+    gy3 = gy.reshape(B, nc, ck, Di)
+    gy_ch = jnp.moveaxis(gy3, 1, 0)[::-1]
+    lam_final, (gas, totals, gcs) = jax.lax.scan(
+        chunk_bwd, lam0,
+        (rev_c(a), rev_c(bx), rev_c(c), gy_ch, bounds[::-1]))
+    ga = jnp.moveaxis(gas[::-1], 0, 1).reshape(B, L, Di, S)
+    gbx = jnp.moveaxis(totals[::-1], 0, 1).reshape(B, L, Di, S)
+    gc = jnp.moveaxis(gcs[::-1], 0, 1).reshape(B, L, S)
+    return ga, gbx, gc, lam_final
+
+
+_seq_scan.defvjp(_seq_scan_fwd, _seq_scan_bwd)
+
+
+def ssm_scan(a: jnp.ndarray, bx: jnp.ndarray, c: jnp.ndarray,
+             h0: jnp.ndarray, chunk: int, unroll: bool = False
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked linear recurrence with fused output contraction.
+
+    a, bx: (B, L, Di, S); c: (B, L, S); h0: (B, Di, S).
+    Returns y: (B, L, Di) float32 and the final state (B, Di, S).
+    """
+    B, L, Di, S = a.shape
+    ck = min(chunk, L)
+    if L % ck != 0:
+        ck = L
+    nc = L // ck
+
+    def body(h, inp):
+        ac, bc, cc = inp                                # (B, ck, Di, S), (B, ck, S)
+        a_cum, b_cum = jax.lax.associative_scan(_combine, (ac, bc), axis=1)
+        h_all = a_cum * h[:, None] + b_cum              # (B, ck, Di, S)
+        y = jnp.einsum("blds,bls->bld", h_all, cc)
+        return h_all[:, -1], y
+
+    if unroll:
+        h, ys = h0, []
+        for i in range(nc):
+            sl = slice(i * ck, (i + 1) * ck)
+            h, y = body(h, (a[:, sl], bx[:, sl], c[:, sl]))
+            ys.append(y)
+        return jnp.concatenate(ys, axis=1), h
+
+    ar = jnp.moveaxis(a.reshape(B, nc, ck, Di, S), 1, 0)
+    br = jnp.moveaxis(bx.reshape(B, nc, ck, Di, S), 1, 0)
+    cr = jnp.moveaxis(c.reshape(B, nc, ck, S), 1, 0)
+    h_final, ys = jax.lax.scan(body, h0, (ar, br, cr))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, L, Di)
+    return y, h_final
+
+
+def _proj_dtbc(cfg, p, xc):
+    """x_conv (B, L, Di) -> dt (B,L,Di) f32, Bc/Cc (B,L,S) f32."""
+    R, S = cfg.dt_rank, cfg.ssm_state
+    proj = xc @ p["x_proj"]                             # (B, L, R + 2S)
+    dt_r, bc, cc = jnp.split(proj, [R, R + S], axis=-1)
+    if cfg.ssm_norm:
+        dt_r = layers.rms_norm(dt_r, p["dt_norm"], cfg.norm_eps)
+        bc = layers.rms_norm(bc, p["b_norm"], cfg.norm_eps)
+        cc = layers.rms_norm(cc, p["c_norm"], cfg.norm_eps)
+    dt = jax.nn.softplus((dt_r @ p["dt_proj"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    return dt, bc.astype(jnp.float32), cc.astype(jnp.float32)
+
+
+def mamba_block(cfg, p: Dict, x: jnp.ndarray, cache: Optional[Dict] = None,
+                collect: bool = False) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Pre-norm Mamba sub-block (residual added by caller).
+
+    cache: {"conv": (B, K-1, Di), "ssm": (B, Di, S)} for decode, else None.
+    collect=True returns the final state as a fresh cache (prefill).
+    """
+    B, L, D = x.shape
+    Di, S = cfg.d_inner, cfg.ssm_state
+    h = layers.rms_norm(x, p["norm"], cfg.norm_eps, plus_one=cfg.gemma_norm)
+    xz = h @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)                  # (B, L, Di) each
+
+    conv_state = cache["conv"] if cache else None
+    xc, conv_state = layers.causal_conv1d(xin, p["conv"], conv_state)
+    xc = jax.nn.silu(xc)
+
+    dt, bc, cc = _proj_dtbc(cfg, p, xc)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))        # (Di, S)
+    xcf = xc.astype(jnp.float32)
+    a_bar = jnp.exp(dt[..., None] * A)                  # (B, L, Di, S)
+    bx = (dt * xcf)[..., None] * bc[:, :, None, :]      # (B, L, Di, S)
+
+    h0 = cache["ssm"].astype(jnp.float32) if cache else jnp.zeros((B, Di, S), jnp.float32)
+    if cfg.ssm_mode == "seq" and L > 1:
+        y, h_final = _seq_scan(a_bar, bx, cc, h0, cfg.ssm_chunk)
+    else:
+        y, h_final = ssm_scan(a_bar, bx, cc, h0, cfg.ssm_chunk,
+                              unroll=cfg.unroll_inner)
+    y = y + p["D"].astype(jnp.float32) * xcf
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+
+    new_cache = None
+    if cache is not None or collect:
+        new_cache = {"conv": conv_state, "ssm": h_final.astype(cfg.cdtype)}
+    return y, new_cache

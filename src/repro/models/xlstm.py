@@ -1,0 +1,236 @@
+"""xLSTM mixers: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM has no hidden-to-hidden dependence, so it admits a *chunkwise
+parallel* form (the TPU-native shape): within a chunk the stabilized decay
+matrix ``D`` and the score matrix ``S = qk^T`` are dense (ck, ck) tiles
+(MXU work, cf. `repro.kernels.mlstm`); chunks are chained by a `lax.scan`
+over the (C, n, m) state.  sLSTM's recurrent weights R make it inherently
+sequential — a `lax.scan` over time, kept for fidelity (the paper mixes
+both block types).
+
+Stabilized recurrences (Beck et al. 2024):
+    m_t = max(log f_t + m_{t-1}, log i_t)
+    C_t = e^{log f + m_{t-1} - m_t} C_{t-1} + e^{log i - m_t} v k^T
+    n_t likewise;  h_t = (C_t q_t) / max(|n_t . q_t|, e^{-m_t})
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+NEG = -1e30
+
+
+def _headwise_norm(x: jnp.ndarray, gamma: jnp.ndarray, n_heads: int,
+                   eps: float) -> jnp.ndarray:
+    """RMS-normalize each head separately (the blocks' GroupNorm)."""
+    B, L, D = x.shape
+    xh = x.reshape(B, L, n_heads, D // n_heads).astype(jnp.float32)
+    var = jnp.mean(xh * xh, axis=-1, keepdims=True)
+    xh = xh * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(B, L, D) * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# mLSTM cell — chunkwise parallel
+# --------------------------------------------------------------------------
+
+def mlstm_chunkwise(q, k, v, i_raw, f_raw, state, chunk: int,
+                    unroll: bool = False):
+    """q/k/v: (B, H, L, Dh); i_raw/f_raw: (B, H, L).
+    state: (C (B,H,Dh,Dh), n (B,H,Dh), m (B,H)).
+    Returns h: (B, H, L, Dh) and final state."""
+    B, H, L, Dh = q.shape
+    ck = min(chunk, L)
+    if L % ck != 0:
+        ck = L
+    nc = L // ck
+    q = q.astype(jnp.float32) * (Dh ** -0.5)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    tril = jnp.tril(jnp.ones((ck, ck), bool))
+
+    def body(carry, inp):
+        C0, n0, m0 = carry
+        qc, kc, vc, ic, fc = inp                        # (B,H,ck,·)
+        lf = jax.nn.log_sigmoid(fc.astype(jnp.float32))
+        b = jnp.cumsum(lf, axis=-1)                     # (B,H,ck)
+        a = b[..., :, None] - b[..., None, :] + ic[..., None, :]
+        a = jnp.where(tril, a, NEG)
+        m_intra = jnp.max(a, axis=-1)
+        m_t = jnp.maximum(b + m0[..., None], m_intra)   # (B,H,ck)
+        Dm = jnp.exp(a - m_t[..., None])                # decay matrix
+        S = jnp.einsum("bhtd,bhjd->bhtj", qc, kc)
+        SD = S * Dm
+        num = jnp.einsum("bhtj,bhjv->bhtv", SD, vc)
+        inter = jnp.exp(b + m0[..., None] - m_t)        # (B,H,ck)
+        num = num + inter[..., None] * jnp.einsum("bhtk,bhvk->bhtv", qc, C0)
+        den = SD.sum(-1) + inter * jnp.einsum("bhtk,bhk->bht", qc, n0)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # state to end of chunk
+        m_new = m_t[..., -1]
+        wj = jnp.exp(b[..., -1:] - b + ic - m_new[..., None])   # (B,H,ck)
+        carry_scale = jnp.exp(b[..., -1] + m0 - m_new)
+        C1 = (carry_scale[..., None, None] * C0
+              + jnp.einsum("bhj,bhjv,bhjk->bhvk", wj, vc, kc))
+        n1 = carry_scale[..., None] * n0 + jnp.einsum("bhj,bhjk->bhk", wj, kc)
+        return (C1, n1, m_new), h
+
+    if unroll:
+        carry, hs = state, []
+        for i in range(nc):
+            sl = slice(i * ck, (i + 1) * ck)
+            carry, h = body(carry, (q[:, :, sl], k[:, :, sl], v[:, :, sl],
+                                    i_raw[:, :, sl], f_raw[:, :, sl]))
+            hs.append(h)
+        return jnp.concatenate(hs, axis=2), carry
+
+    def chunks(x):
+        return jnp.moveaxis(x.reshape(B, H, nc, ck, *x.shape[3:]), 2, 0)
+
+    final, hs = jax.lax.scan(body, state, tuple(map(chunks, (q, k, v, i_raw, f_raw))))
+    h = jnp.moveaxis(hs, 0, 2).reshape(B, H, L, Dh)
+    return h, final
+
+
+def mlstm_step(q, k, v, i_raw, f_raw, state):
+    """Single-token decode. q/k/v: (B,H,Dh); gates (B,H)."""
+    C0, n0, m0 = state
+    Dh = q.shape[-1]
+    q = q.astype(jnp.float32) * (Dh ** -0.5)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))
+    m1 = jnp.maximum(lf + m0, i_raw)
+    ip = jnp.exp(i_raw - m1)
+    fp = jnp.exp(lf + m0 - m1)
+    C1 = fp[..., None, None] * C0 + ip[..., None, None] * jnp.einsum(
+        "bhv,bhk->bhvk", v, k)
+    n1 = fp[..., None] * n0 + ip[..., None] * k
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, n1)), jnp.exp(-m1))
+    h = jnp.einsum("bhk,bhvk->bhv", q, C1) / den[..., None]
+    return h, (C1, n1, m1)
+
+
+def init_mlstm_state(B, H, Dh, dtype=jnp.float32):
+    return (jnp.zeros((B, H, Dh, Dh), dtype), jnp.zeros((B, H, Dh), dtype),
+            jnp.full((B, H), NEG, dtype))
+
+
+def mlstm_block(cfg, p: Dict, x: jnp.ndarray, cache: Optional[Dict] = None,
+                collect: bool = False) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """xLSTM mLSTM block (projection factor 2, conv4, gated output)."""
+    B, L, D = x.shape
+    Di = int(cfg.mlstm_proj_factor * D)
+    H = cfg.n_heads
+    Dh = Di // H
+    h = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+    xm, z = jnp.split(h @ p["w_up"], 2, axis=-1)        # (B, L, Di) each
+
+    conv_state = cache["conv"] if cache else None
+    xc, conv_state = layers.causal_conv1d(xm, p["conv"], conv_state)
+    xc = jax.nn.silu(xc)
+
+    def proj(t, w):
+        # block-diagonal per-head projection: (B,L,H,Dh) x (H,Dh,Dh)
+        th = t.reshape(B, L, H, Dh)
+        return jnp.einsum("blhd,hde->bhle", th, w)
+
+    q, k = proj(xc, p["wq"]), proj(xc, p["wk"])
+    v = proj(xm, p["wv"])
+    gif = xm @ p["w_if"] + p["b_if"]                    # (B, L, 2H)
+    i_raw = gif[..., :H].transpose(0, 2, 1).astype(jnp.float32)
+    f_raw = gif[..., H:].transpose(0, 2, 1).astype(jnp.float32)
+
+    if cache is not None and "C" in cache:
+        state = (cache["C"].astype(jnp.float32), cache["n"].astype(jnp.float32),
+                 cache["m"].astype(jnp.float32))
+        hh, state = mlstm_step(q[:, :, 0], k[:, :, 0], v[:, :, 0],
+                               i_raw[:, :, 0], f_raw[:, :, 0], state)
+        hh = hh[:, :, None, :]
+    else:
+        state = init_mlstm_state(B, H, Dh)
+        hh, state = mlstm_chunkwise(q, k, v, i_raw, f_raw, state,
+                                    cfg.mlstm_chunk, unroll=cfg.unroll_inner)
+
+    hh = hh.transpose(0, 2, 1, 3).reshape(B, L, Di).astype(x.dtype)
+    hh = _headwise_norm(hh, p["head_norm"], H, cfg.norm_eps)
+    y = (hh * jax.nn.silu(z)) @ p["w_down"]
+
+    new_cache = None
+    if cache is not None or collect:
+        C1, n1, m1 = state
+        new_cache = {"conv": conv_state, "C": C1.astype(cfg.cdtype),
+                     "n": n1.astype(cfg.cdtype), "m": m1.astype(jnp.float32)}
+    return y, new_cache
+
+
+# --------------------------------------------------------------------------
+# sLSTM — sequential scan with block-diagonal recurrence
+# --------------------------------------------------------------------------
+
+def slstm_scan(gates_x: jnp.ndarray, r: jnp.ndarray, state, n_heads: int):
+    """gates_x: (B, L, 4D) input contributions (order i,f,z,o);
+    r: (4, H, Dh, Dh) recurrent weights; state: (h, c, n, m) each (B, D)."""
+    B, L, D4 = gates_x.shape
+    D = D4 // 4
+    Dh = D // n_heads
+
+    def step(carry, gx):
+        h, c, n, m = carry                              # (B, D) f32
+        hh = h.reshape(B, n_heads, Dh)
+        rec = jnp.einsum("bhd,ghde->bghe", hh, r).reshape(B, 4 * D)
+        g = gx.astype(jnp.float32) + rec
+        gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+        m1 = jnp.maximum(gf + m, gi)
+        ip = jnp.exp(gi - m1)
+        fp = jnp.exp(gf + m - m1)
+        c1 = fp * c + ip * jnp.tanh(gz)
+        n1 = fp * n + ip
+        h1 = jax.nn.sigmoid(go) * c1 / jnp.maximum(n1, 1e-6)
+        return (h1, c1, n1, m1), h1
+
+    final, hs = jax.lax.scan(step, state, jnp.moveaxis(gates_x, 1, 0))
+    return jnp.moveaxis(hs, 0, 1), final                # (B, L, D)
+
+
+def init_slstm_state(B, D):
+    z = jnp.zeros((B, D), jnp.float32)
+    return (z, z, z, jnp.full((B, D), NEG, jnp.float32))
+
+
+def slstm_block(cfg, p: Dict, x: jnp.ndarray, cache: Optional[Dict] = None,
+                collect: bool = False) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """xLSTM sLSTM block: conv4 feeds i/f gates, post-norm gated FFN."""
+    B, L, D = x.shape
+    H = cfg.n_heads
+    h = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+    conv_state = cache["conv"] if cache else None
+    xc, conv_state = layers.causal_conv1d(h, p["conv"], conv_state)
+    xc = jax.nn.silu(xc)
+
+    g_if = xc @ p["w_if"]                               # (B, L, 2D)
+    g_zo = h @ p["w_zo"]                                # (B, L, 2D)
+    gates_x = jnp.concatenate([g_if, g_zo], axis=-1) + p["b_gates"]
+
+    if cache is not None and "h" in cache:
+        state = tuple(cache[k].astype(jnp.float32) for k in ("h", "c", "n", "m"))
+    else:
+        state = init_slstm_state(B, D)
+    hs, state = slstm_scan(gates_x, p["r_gates"], state, H)
+
+    hs = _headwise_norm(hs.astype(x.dtype), p["head_norm"], H, cfg.norm_eps)
+    y = hs @ p["w_out"]
+    # gated FFN (projection factor 4/3)
+    y2 = layers.rms_norm(x + y, p["ffn_norm"], cfg.norm_eps)
+    y = y + layers.swiglu(y2, p["w_gate"], p["w_up"], p["w_down"])
+
+    new_cache = None
+    if cache is not None or collect:
+        hh, c, n, m = state
+        new_cache = {"conv": conv_state, "h": hh, "c": c, "n": n, "m": m}
+    return y, new_cache

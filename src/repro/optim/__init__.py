@@ -1,0 +1,10 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update, global_norm
+from repro.optim.schedule import cosine_schedule
+from repro.optim.compression import (CompressionState, compress_init,
+                                     compressed_gradients)
+
+__all__ = [
+    "AdamWState", "adamw_init", "adamw_update", "global_norm",
+    "cosine_schedule", "CompressionState", "compress_init",
+    "compressed_gradients",
+]

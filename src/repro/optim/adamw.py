@@ -1,0 +1,58 @@
+"""AdamW with global-norm clipping, hand-rolled on pytrees.
+
+Moments inherit the parameter sharding (the spec builder maps them with the
+same logical axes), giving ZeRO-style sharded optimizer state for free.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    mu: dict
+    nu: dict
+    count: jnp.ndarray
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def adamw_update(grads, state: AdamWState, params, lr, *,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, clip_norm: float = 1.0):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+    count = state.count + 1
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m1 = b1 * m + (1.0 - b1) * g
+        v1 = b2 * v + (1.0 - b2) * g * g
+        step = (m1 / c1) / (jnp.sqrt(v1 / c2) + eps)
+        decay = weight_decay if p.ndim >= 2 else 0.0   # no decay on norms/biases
+        p1 = p.astype(jnp.float32) - lr * (step + decay * p.astype(jnp.float32))
+        return p1.astype(p.dtype), m1, v1
+
+    out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(new_mu, new_nu, count), {
+        "grad_norm": gnorm, "clip_scale": scale}

@@ -1,0 +1,4 @@
+from repro.serving.batcher import ContinuousBatcher, Request
+from repro.serving.bridge import ModelBackedStreams
+
+__all__ = ["ContinuousBatcher", "Request", "ModelBackedStreams"]

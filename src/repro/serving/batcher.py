@@ -1,0 +1,115 @@
+"""Continuous batching decode server.
+
+A fixed pool of B cache slots; requests are admitted into free slots as
+they arrive (no batch barrier), every engine tick decodes one token for
+all live slots, finished requests (EOS / max_tokens) free their slot
+immediately.  Per-slot positions come from the model plane's per-batch
+``pos`` argument, so slots at different depths coexist in one jitted step
+— the serving analogue of the paper's event-driven, lock-free design.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_tokens: int = 16
+    eos: Optional[int] = None
+    tenant: int = 0
+    # filled by the server:
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 max_len: int = 512, greedy: bool = True):
+        assert cfg.n_codebooks == 1 and not cfg.embed_inputs, \
+            "batcher serves token-in/token-out archs"
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.greedy = greedy
+        self._decode = jax.jit(M.make_decode_step(cfg))
+        self.caches = M.init_cache(cfg, slots, max_len)
+        self.pos = np.zeros((slots,), np.int32)
+        self.tokens = np.zeros((slots, 1), np.int32)
+        self.live: List[Optional[Request]] = [None] * slots
+        self.budget: Dict[int, int] = {}         # remaining tokens per request
+        self.queue: Deque[Request] = deque()
+        self.ticks = 0
+
+    # ------------------------------------------------------------ admission
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for s in range(self.slots):
+            if self.live[s] is None and self.queue:
+                req = self.queue.popleft()
+                # prefill the slot by feeding prompt tokens one at a time
+                # through the shared decode step (slot-local positions make
+                # this safe next to running slots)
+                self.live[s] = req
+                self.pos[s] = 0
+                self._pending_prompt = getattr(self, "_pending_prompt", {})
+                self._pending_prompt[s] = deque(req.prompt)
+                self.budget[req.rid] = req.max_tokens
+
+    # ---------------------------------------------------------------- tick
+    def tick(self) -> List[Request]:
+        """One decode step for all live slots.  Returns finished requests."""
+        self._admit()
+        pending = getattr(self, "_pending_prompt", {})
+        for s, req in enumerate(self.live):
+            if req is None:
+                self.tokens[s, 0] = 0
+                continue
+            if pending.get(s):
+                self.tokens[s, 0] = pending[s].popleft()
+            elif req.output:
+                self.tokens[s, 0] = req.output[-1]
+        logits, self.caches = self._decode(
+            self.params, self.caches, {"tokens": jnp.asarray(self.tokens)},
+            jnp.asarray(self.pos))
+        logits = np.asarray(logits[:, 0], np.float32)      # (slots, V)
+        finished = []
+        for s, req in enumerate(self.live):
+            if req is None:
+                continue
+            self.pos[s] += 1
+            if pending.get(s):                 # still prefilling this slot
+                continue
+            nxt = int(np.argmax(logits[s]))
+            req.output.append(nxt)
+            self.budget[req.rid] -= 1
+            if ((req.eos is not None and nxt == req.eos)
+                    or self.budget[req.rid] <= 0
+                    or self.pos[s] >= self.max_len - 1):
+                req.done = True
+                finished.append(req)
+                self.live[s] = None            # slot freed immediately
+        self.ticks += 1
+        return finished
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
+        done: List[Request] = []
+        for _ in range(max_ticks):
+            done += self.tick()
+            if not self.queue and all(r is None for r in self.live):
+                break
+        return done

@@ -1,0 +1,92 @@
+"""Model-backed streams: the bridge between the paper's pub/sub runtime
+and the model plane.
+
+A composite stream flagged ``model_backed`` does not run VM bytecode for
+its value — its emitted SUs are *requests* to a model service.  Each
+engine round's SinkBatch is scanned for model-backed emissions; they are
+tokenized (here: channel values quantized into the vocab — the modality
+frontend of a real deployment), submitted to the ContinuousBatcher, and
+completions are posted back into the engine as fresh SUs on the response
+stream — re-entering the pipeline like any other Sensor Update.
+
+This makes an LM just another multi-tenant subscriber: tenants compose
+"raw stream -> transform -> LM scorer -> downstream aggregation" pipelines
+with the exact subscription semantics of the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.engine import SinkBatch, StreamEngine
+from repro.serving.batcher import ContinuousBatcher, Request
+
+
+@dataclasses.dataclass
+class _Route:
+    source_sid: int
+    response_stream: object          # registry Stream
+    prompt_len: int = 8
+
+
+class ModelBackedStreams:
+    def __init__(self, engine: StreamEngine, batcher: ContinuousBatcher):
+        self.engine = engine
+        self.batcher = batcher
+        self.routes: Dict[int, _Route] = {}
+        self._next_rid = 0
+        self.inflight: Dict[int, _Route] = {}
+        self.completed: List[Request] = []
+
+    def route(self, model_stream, response_stream, prompt_len: int = 8):
+        """Emissions of ``model_stream`` become LM requests; completions are
+        posted as SUs on ``response_stream``."""
+        sid = model_stream.sid if hasattr(model_stream, "sid") else int(model_stream)
+        self.routes[sid] = _Route(sid, response_stream, prompt_len)
+
+    # ------------------------------------------------------------------
+    def _tokenize(self, values: np.ndarray, n: int) -> List[int]:
+        """Frontend stub: quantize channel values into token space."""
+        v = self.batcher.cfg.vocab
+        q = (np.abs(values) * 997).astype(np.int64) % max(v - 2, 1) + 1
+        reps = -(-n // max(len(q), 1))
+        return list(np.tile(q, reps)[:n])
+
+    def pump(self, sink: SinkBatch, ts: int) -> int:
+        """Scan one round's sink for model-backed emissions -> requests."""
+        sid = np.asarray(sink.sid)
+        vals = np.asarray(sink.vals)
+        valid = np.asarray(sink.valid)
+        n = 0
+        for i in range(sid.shape[0]):
+            if not valid[i]:
+                continue
+            r = self.routes.get(int(sid[i]))
+            if r is None:
+                continue
+            rid = self._next_rid
+            self._next_rid += 1
+            req = Request(rid=rid, prompt=self._tokenize(vals[i], r.prompt_len),
+                          max_tokens=4)
+            self.batcher.submit(req)
+            self.inflight[rid] = r
+            n += 1
+        return n
+
+    def drain(self, max_ticks: int = 1000, ts: int = 0) -> List[Request]:
+        """Run the batcher; post completions back into the engine."""
+        done = []
+        for _ in range(max_ticks):
+            finished = self.batcher.tick()
+            for req in finished:
+                r = self.inflight.pop(req.rid)
+                score = float(np.mean(req.output)) / self.batcher.cfg.vocab
+                self.engine.post(r.response_stream, [score], ts=ts + req.rid + 1)
+                done.append(req)
+            if not self.batcher.queue and \
+                    all(s is None for s in self.batcher.live):
+                break
+        self.completed += done
+        return done

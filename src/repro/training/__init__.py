@@ -1,0 +1,3 @@
+from repro.training.loop import Trainer, TrainConfig
+
+__all__ = ["Trainer", "TrainConfig"]

@@ -1,0 +1,148 @@
+"""Property tests (hypothesis): the batched engine preserves the paper's
+sequential semantics on random pipeline DAGs.
+
+Order-independent invariants checked against a pure-python sequential
+oracle that processes one SU at a time exactly as Listing 2 prescribes:
+
+  P1  final timestamp of every stream equals the oracle's (the newest
+      source update that reaches it), for arbitrary DAGs — timestamps are
+      delivery-order independent under the discard rule;
+  P2  on *tree* pipelines (in-degree 1) final values match exactly — the
+      value is delivery-order independent there;
+  P3  stream timestamps are monotone non-decreasing across rounds;
+  P4  counter algebra: processed == emitted + coalesced + stale + filtered.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import EngineConfig, Registry, StreamEngine
+
+INT_MIN = np.iinfo(np.int32).min + 1
+
+
+# --------------------------------------------------------------------------
+# sequential oracle (Listing 2, one SU at a time)
+# --------------------------------------------------------------------------
+
+class SequentialOracle:
+    def __init__(self, n, inputs):
+        self.inputs = inputs            # per node list of input node ids
+        self.outputs = [[] for _ in range(n)]
+        for v, ins in enumerate(inputs):
+            for u in ins:
+                if v not in self.outputs[u]:
+                    self.outputs[u].append(v)
+        self.value = np.zeros(n, np.float64)
+        self.ts = np.full(n, INT_MIN, np.int64)
+
+    def post(self, sid, value, ts):
+        if ts <= self.ts[sid]:
+            return
+        self.value[sid] = value
+        self.ts[sid] = ts
+        fifo = [(sid, ts)]
+        while fifo:
+            src, t = fifo.pop(0)
+            for tgt in self.outputs[src]:
+                if t <= self.ts[tgt]:
+                    continue                       # Listing 2 discard
+                ins = self.inputs[tgt]
+                ts_out = max([t] + [int(self.ts[i]) for i in ins] +
+                             [int(self.ts[tgt])])
+                self.value[tgt] = sum(self.value[i] for i in ins)  # f = sum
+                self.ts[tgt] = ts_out
+                fifo.append((tgt, ts_out))
+
+
+def _build(n_sources, comp_inputs):
+    """comp_inputs: list over composites of tuples of input indices into
+    the nodes created so far (sources first)."""
+    cfg = EngineConfig(n_streams=max(2, n_sources + len(comp_inputs) + 1),
+                       batch=8, queue=512, max_in=8, max_out=16)
+    reg = Registry(cfg)
+    t = reg.create_tenant("t")
+    nodes = [reg.create_stream(t, f"s{i}", ["v"]) for i in range(n_sources)]
+    inputs = [[] for _ in range(n_sources)]
+    for ci, ins in enumerate(comp_inputs):
+        srcs = [nodes[i] for i in ins]
+        expr = " + ".join(f"in{j}.v" for j in range(len(srcs))) or "0"
+        nodes.append(reg.create_composite(t, f"c{ci}", ["v"], srcs,
+                                          transform={"v": expr}))
+        inputs.append(list(ins))
+    return reg, nodes, inputs
+
+
+@st.composite
+def dag_and_updates(draw, tree_only=False, max_nodes=10):
+    n_sources = draw(st.integers(1, 3))
+    n_comp = draw(st.integers(1, max_nodes - n_sources))
+    comp_inputs = []
+    for ci in range(n_comp):
+        avail = n_sources + ci
+        k = 1 if tree_only else draw(st.integers(1, min(3, avail)))
+        ins = draw(st.lists(st.integers(0, avail - 1), min_size=k,
+                            max_size=k, unique=True))
+        comp_inputs.append(tuple(ins))
+    n_upd = draw(st.integers(1, 6))
+    updates = [(draw(st.integers(0, n_sources - 1)),
+                draw(st.floats(-100, 100, allow_nan=False, width=32)),
+                draw(st.integers(1, 50)))
+               for _ in range(n_upd)]
+    return n_sources, comp_inputs, updates
+
+
+@settings(max_examples=25, deadline=None)
+@given(dag_and_updates())
+def test_p1_final_timestamps_match_oracle(case):
+    n_sources, comp_inputs, updates = case
+    reg, nodes, inputs = _build(n_sources, comp_inputs)
+    eng = StreamEngine(reg)
+    oracle = SequentialOracle(len(nodes), inputs)
+    for sid, val, ts in updates:
+        eng.post(nodes[sid], [val], ts=ts)
+        eng.drain(max_rounds=64)
+        oracle.post(sid, val, ts)
+    got = np.asarray(eng.state.timestamps)[: len(nodes)]
+    want = oracle.ts
+    np.testing.assert_array_equal(got, want.astype(np.int32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(dag_and_updates(tree_only=True))
+def test_p2_tree_values_match_oracle(case):
+    n_sources, comp_inputs, updates = case
+    reg, nodes, inputs = _build(n_sources, comp_inputs)
+    eng = StreamEngine(reg)
+    oracle = SequentialOracle(len(nodes), inputs)
+    for sid, val, ts in updates:
+        eng.post(nodes[sid], [val], ts=ts)
+        eng.drain(max_rounds=64)
+        oracle.post(sid, val, ts)
+    got = np.asarray(eng.state.values)[: len(nodes), 0].astype(np.float64)
+    np.testing.assert_allclose(got, oracle.value, rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(dag_and_updates())
+def test_p3_p4_monotone_ts_and_counter_algebra(case):
+    n_sources, comp_inputs, updates = case
+    reg, nodes, _ = _build(n_sources, comp_inputs)
+    eng = StreamEngine(reg)
+    prev_ts = np.asarray(eng.state.timestamps).copy()
+    for sid, val, ts in updates:
+        eng.post(nodes[sid], [val], ts=ts)
+        for _ in range(32):
+            eng.round()
+            now = np.asarray(eng.state.timestamps)
+            assert (now >= prev_ts).all()
+            prev_ts = now.copy()
+            if not bool(eng.state.q_valid.any()):
+                break
+    c = eng.counters()
+    # exact counter algebra: every processed work item is accounted for
+    assert c["processed"] == (c["discarded_stale"] + c["filtered"]
+                              + c["coalesced"] + c["emitted"])
+    assert c["ingested"] == (c["ingest_stale"] + c["ingest_coalesced"]
+                             + c["enqueued_ingest"]
+                             if "enqueued_ingest" in c else c["ingested"])

@@ -1,0 +1,129 @@
+"""Per-kernel validation: shape/dtype sweeps, assert_allclose against the
+pure-jnp/numpy oracles, executed with interpret=True on CPU."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.mlstm_chunk.ops import mlstm_pallas
+from repro.kernels.mlstm_chunk.ref import mlstm_ref
+from repro.kernels.selective_scan.ops import ssm_scan_pallas
+from repro.kernels.selective_scan.ref import selective_scan_ref
+from repro.kernels.stream_dispatch.kernel import onehot_gather
+from repro.kernels.stream_dispatch.ops import stream_dispatch
+from repro.kernels.stream_dispatch.ref import (onehot_gather_ref,
+                                               stream_dispatch_ref)
+from repro.kernels.window_agg.ops import window_agg_op
+from repro.kernels.window_agg.ref import window_agg_ref
+
+RNG = np.random.default_rng(0)
+
+
+# --------------------------------------------------------------- dispatch
+@pytest.mark.parametrize("N,F,B", [(64, 4, 16), (300, 7, 33), (1024, 16, 256),
+                                   (128, 1, 8)])
+@pytest.mark.parametrize("dtype", [np.int32, np.float32])
+def test_onehot_gather_sweep(N, F, B, dtype):
+    table = RNG.integers(-3, 1000, size=(N, F)).astype(dtype)
+    ids = RNG.integers(-2, N + 2, size=(B,)).astype(np.int32)
+    got = onehot_gather(jnp.asarray(table), jnp.asarray(ids), interpret=True)
+    want = onehot_gather_ref(jnp.asarray(table), jnp.asarray(ids))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0)
+
+
+@pytest.mark.parametrize("N,F,B", [(64, 4, 16), (256, 16, 64)])
+def test_stream_dispatch_sweep(N, F, B):
+    table = RNG.integers(-1, N, size=(N, F)).astype(np.int32)
+    ids = RNG.integers(0, N, size=(B,)).astype(np.int32)
+    ts = RNG.integers(-2**31 + 1, 2**31 - 1, size=(B,)).astype(np.int32)
+    tstab = RNG.integers(-2**31 + 1, 2**31 - 1, size=(N,)).astype(np.int32)
+    valid = RNG.random(B) > 0.3
+    tg, ea = stream_dispatch(jnp.asarray(ids), jnp.asarray(ts),
+                             jnp.asarray(valid), jnp.asarray(table),
+                             jnp.asarray(tstab), interpret=True)
+    tg2, ea2 = stream_dispatch_ref(jnp.asarray(ids), jnp.asarray(ts),
+                                   jnp.asarray(valid), jnp.asarray(table),
+                                   jnp.asarray(tstab))
+    np.testing.assert_array_equal(np.asarray(tg), np.asarray(tg2))
+    np.testing.assert_array_equal(np.asarray(ea), np.asarray(ea2))
+
+
+# ------------------------------------------------------------- attention
+@pytest.mark.parametrize("B,H,KV,L,Dh,win,blk", [
+    (1, 2, 2, 128, 64, None, 64),
+    (2, 4, 2, 256, 128, None, 128),
+    (1, 4, 1, 256, 64, 64, 64),
+    (2, 2, 2, 128, 32, 32, 64),
+    (1, 8, 4, 128, 64, None, 32),
+])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, H, KV, L, Dh, win, blk, dtype):
+    q = RNG.standard_normal((B, H, L, Dh)).astype(np.float32)
+    k = RNG.standard_normal((B, KV, L, Dh)).astype(np.float32)
+    v = RNG.standard_normal((B, KV, L, Dh)).astype(np.float32)
+    qj, kj, vj = (jnp.asarray(x).astype(dtype) for x in (q, k, v))
+    got = flash_attention(qj, kj, vj, causal=True, window=win,
+                          blk_q=blk, blk_k=blk, interpret=True)
+    want = attention_ref(qj.astype(jnp.float32), kj.astype(jnp.float32),
+                         vj.astype(jnp.float32), causal=True, window=win)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), rtol=tol, atol=tol)
+
+
+# -------------------------------------------------------- selective scan
+@pytest.mark.parametrize("B,L,Di,S,bt,bd", [
+    (1, 16, 32, 8, 8, 16), (2, 64, 128, 16, 16, 64), (1, 128, 256, 16, 32, 128),
+])
+def test_selective_scan_sweep(B, L, Di, S, bt, bd):
+    a = np.exp(-np.abs(RNG.standard_normal((B, L, Di, S)))).astype(np.float32)
+    bx = RNG.standard_normal((B, L, Di, S)).astype(np.float32)
+    c = RNG.standard_normal((B, L, S)).astype(np.float32)
+    h0 = RNG.standard_normal((B, Di, S)).astype(np.float32)
+    y, h = ssm_scan_pallas(jnp.asarray(a), jnp.asarray(bx), jnp.asarray(c),
+                           jnp.asarray(h0), blk_t=bt, blk_d=bd, interpret=True)
+    yr, hr = selective_scan_ref(a, bx, c, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), rtol=1e-4,
+                               atol=1e-4)
+
+
+# ----------------------------------------------------------------- mLSTM
+@pytest.mark.parametrize("B,H,L,Dh,ck", [
+    (1, 2, 32, 16, 8), (2, 2, 64, 32, 16), (1, 4, 128, 64, 32),
+    (1, 1, 64, 128, 64),
+])
+def test_mlstm_chunkwise_sweep(B, H, L, Dh, ck):
+    q = RNG.standard_normal((B, H, L, Dh)).astype(np.float32)
+    k = RNG.standard_normal((B, H, L, Dh)).astype(np.float32)
+    v = RNG.standard_normal((B, H, L, Dh)).astype(np.float32)
+    ir = RNG.standard_normal((B, H, L)).astype(np.float32)
+    fr = (RNG.standard_normal((B, H, L)) + 2).astype(np.float32)
+    h, (C, n, m) = mlstm_pallas(*map(jnp.asarray, (q, k, v, ir, fr)),
+                                chunk=ck, interpret=True)
+    C0 = np.zeros((B, H, Dh, Dh), np.float32)
+    n0 = np.zeros((B, H, Dh), np.float32)
+    m0 = np.full((B, H), -1e30, np.float32)
+    hr, (Cr, nr, mr) = mlstm_ref(q, k, v, ir, fr, C0, n0, m0)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), rtol=3e-4,
+                               atol=3e-4)
+    np.testing.assert_allclose(np.asarray(C), np.asarray(Cr), rtol=3e-4,
+                               atol=3e-4)
+    np.testing.assert_allclose(np.asarray(n), np.asarray(nr), rtol=3e-4,
+                               atol=3e-4)
+
+
+# ------------------------------------------------------------ window agg
+@pytest.mark.parametrize("N,W,C", [(8, 4, 2), (64, 16, 4), (100, 8, 3),
+                                   (256, 32, 1)])
+def test_window_agg_sweep(N, W, C):
+    vals = RNG.standard_normal((N, W, C)).astype(np.float32)
+    count = RNG.integers(0, W + 1, N).astype(np.int32)
+    got = window_agg_op(jnp.asarray(vals), jnp.asarray(count), interpret=True)
+    want = window_agg_ref(jnp.asarray(vals), jnp.asarray(count))
+    for key in want:
+        np.testing.assert_allclose(np.asarray(got[key]), np.asarray(want[key]),
+                                   rtol=1e-6, atol=1e-6)

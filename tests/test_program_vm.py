@@ -1,0 +1,132 @@
+"""User-code injection: the expression compiler + tensor-bytecode VM.
+
+Hypothesis generates random expression ASTs, renders them to the paper's
+expression language, compiles to bytecode, and compares the jitted VM
+against (a) the pure-python bytecode oracle and (b) direct evaluation of
+the AST with safe-math semantics.
+"""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import program as pvm
+from repro.core.config import EngineConfig
+
+CFG = EngineConfig(n_streams=8, channels=2, max_in=2, n_temps=24, prog_len=64,
+                   n_consts=24)
+ENV = {"x": 0, "y": 1, "z": 2}
+_EPS = 1e-30
+
+
+def _safe_div(a, b):
+    return 0.0 if abs(b) < _EPS else a / b
+
+
+def _b(x):
+    return 1.0 if x != 0 else 0.0
+
+
+@st.composite
+def exprs(draw, depth=0):
+    """Returns (src, fn) where fn(x, y, z) evaluates with safe semantics."""
+    if depth > 3 or draw(st.booleans()) and depth > 1:
+        leaf = draw(st.sampled_from(["x", "y", "z", "num"]))
+        if leaf == "num":
+            v = draw(st.floats(-8, 8, allow_nan=False, width=16))
+            return f"{v}", lambda x, y, z, v=v: np.float32(v)
+        return leaf, {"x": lambda x, y, z: x, "y": lambda x, y, z: y,
+                      "z": lambda x, y, z: z}[leaf]
+    kind = draw(st.sampled_from(
+        ["add", "sub", "mul", "div", "min", "max", "neg", "abs",
+         "lt", "le", "and", "or", "not", "ternary", "tanh", "floor"]))
+    a_src, a_fn = draw(exprs(depth=depth + 1))
+    if kind in ("neg", "abs", "not", "tanh", "floor"):
+        if kind == "neg":
+            return f"(-{a_src})", lambda x, y, z: np.float32(-a_fn(x, y, z))
+        if kind == "abs":
+            return f"abs({a_src})", lambda x, y, z: np.float32(abs(a_fn(x, y, z)))
+        if kind == "not":
+            return f"(!{a_src})", lambda x, y, z: np.float32(1.0 - _b(a_fn(x, y, z)))
+        if kind == "tanh":
+            return f"tanh({a_src})", lambda x, y, z: np.float32(
+                np.tanh(np.float32(a_fn(x, y, z))))
+        return f"floor({a_src})", lambda x, y, z: np.float32(
+            math.floor(a_fn(x, y, z)))
+    b_src, b_fn = draw(exprs(depth=depth + 1))
+    if kind == "ternary":
+        c_src, c_fn = draw(exprs(depth=depth + 1))
+        return (f"({a_src} ? {b_src} : {c_src})",
+                lambda x, y, z: np.float32(b_fn(x, y, z) if a_fn(x, y, z) != 0
+                                           else c_fn(x, y, z)))
+    ops = {
+        "add": ("+", lambda a, b: a + b),
+        "sub": ("-", lambda a, b: a - b),
+        "mul": ("*", lambda a, b: a * b),
+        "div": ("/", _safe_div),
+        "lt": ("<", lambda a, b: 1.0 if a < b else 0.0),
+        "le": ("<=", lambda a, b: 1.0 if a <= b else 0.0),
+        "and": ("&&", lambda a, b: _b(a) * _b(b)),
+        "or": ("||", lambda a, b: max(_b(a), _b(b))),
+        "min": (None, min), "max": (None, max),
+    }
+    sym, fn = ops[kind]
+    if sym is None:
+        return (f"{kind}({a_src}, {b_src})",
+                lambda x, y, z: np.float32(fn(np.float32(a_fn(x, y, z)),
+                                              np.float32(b_fn(x, y, z)))))
+    return (f"({a_src} {sym} {b_src})",
+            lambda x, y, z: np.float32(fn(np.float32(a_fn(x, y, z)),
+                                          np.float32(b_fn(x, y, z)))))
+
+
+@settings(max_examples=120, deadline=None)
+@given(exprs(), st.floats(-5, 5, width=32), st.floats(-5, 5, width=32),
+       st.floats(-5, 5, width=32))
+def test_vm_matches_python_semantics(e, x, y, z):
+    src, fn = e
+    code, consts = pvm.compile_expr(src, ENV, result_reg=3, tmp_base=4,
+                                    tmp_count=CFG.n_temps)
+    prog, cpool = pvm.assemble(code, consts, CFG.prog_len, CFG.n_consts)
+    regs = np.zeros((4 + CFG.n_temps,), np.float32)
+    regs[0], regs[1], regs[2] = x, y, z
+    want = fn(np.float32(x), np.float32(y), np.float32(z))
+    got_py = pvm.execute_py(prog, cpool, regs)[3]
+    got_jax = np.asarray(pvm.execute(jnp.asarray(prog), jnp.asarray(cpool),
+                                     jnp.asarray(regs)))[3]
+    if not (np.isfinite(want) and abs(want) < 1e30):
+        return                                   # overflow regime: skip
+    np.testing.assert_allclose(got_py, want, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(got_jax, want, rtol=2e-5, atol=2e-5)
+
+
+def test_compile_errors():
+    with pytest.raises(pvm.CompileError):
+        pvm.compile_expr("x +", ENV, result_reg=3, tmp_base=4, tmp_count=8)
+    with pytest.raises(pvm.CompileError):
+        pvm.compile_expr("unknown_name", ENV, result_reg=3, tmp_base=4,
+                         tmp_count=8)
+    with pytest.raises(pvm.CompileError):
+        pvm.compile_expr("f(x)", ENV, result_reg=3, tmp_base=4, tmp_count=8)
+
+
+def test_listing1_expression():
+    src = "(x - 32) * 5 / 9"
+    code, consts = pvm.compile_expr(src, ENV, result_reg=3, tmp_base=4,
+                                    tmp_count=8)
+    prog, cpool = pvm.assemble(code, consts, 32, 8)
+    regs = np.zeros((12,), np.float32)
+    regs[0] = 212.0
+    assert abs(pvm.execute_py(prog, cpool, regs)[3] - 100.0) < 1e-4
+
+
+def test_percent_operator():
+    code, consts = pvm.compile_expr("x % 3", ENV, result_reg=3, tmp_base=4,
+                                    tmp_count=8)
+    prog, cpool = pvm.assemble(code, consts, 32, 8)
+    regs = np.zeros((12,), np.float32)
+    regs[0] = 7.0
+    assert abs(pvm.execute_py(prog, cpool, regs)[3] - 1.0) < 1e-5

@@ -1,0 +1,178 @@
+"""End-to-end behaviour of the paper's system: the Listing-1 example,
+execution-tree deduplication (Fig. 2a/3), cycle discards (Fig. 2b), live
+user-code injection (§IV-F) and dynamic rewiring."""
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig, Registry, StreamEngine
+
+
+@pytest.fixture()
+def small_cfg():
+    return EngineConfig(n_streams=32, batch=8, queue=128, max_in=4, max_out=4)
+
+
+def test_listing1_f_to_c_pipeline(small_cfg):
+    reg = Registry(small_cfg)
+    alice = reg.create_tenant("alice")
+    bob = reg.create_tenant("bob")
+    wo = reg.create_stream(alice, "thermo", ["f"])
+    cel = reg.create_composite(
+        bob, "celsius", ["c"], [wo],
+        transform={"c": "(thermo.f - 32) * 5 / 9"},
+        post_filter="out.c < 0")
+    eng = StreamEngine(reg)
+    eng.post(wo, [14.0], ts=1)    # -10 C -> emitted
+    eng.post(wo, [68.0], ts=2)    # +20 C -> filtered
+    eng.post(wo, [5.0], ts=3)     # -15 C -> emitted
+    eng.drain()
+    assert abs(eng.value_of(cel)[0] - (-15.0)) < 1e-4
+    assert eng.ts_of(cel) == 3
+    c = eng.counters()
+    assert c["emitted"] == 2 and c["filtered"] == 1
+
+    # stale SU (paper Listing 2 discard rule — caught at ingest)
+    eng.post(wo, [-40.0], ts=2)
+    eng.drain()
+    assert abs(eng.value_of(cel)[0] - (-15.0)) < 1e-4
+    assert eng.counters()["ingest_stale"] >= 1
+
+
+def test_code_injection_no_recompile(small_cfg):
+    reg = Registry(small_cfg)
+    t = reg.create_tenant("t")
+    wo = reg.create_stream(t, "thermo", ["f"])
+    cel = reg.create_composite(t, "c", ["c"],
+                               [wo], transform={"c": "(thermo.f - 32) * 5 / 9"})
+    eng = StreamEngine(reg)
+    compiled_step = eng._step           # the one static program
+    eng.post(wo, [212.0], ts=1)
+    eng.drain()
+    assert abs(eng.value_of(cel)[0] - 100.0) < 1e-3
+    eng.inject_code(cel, {"c": "(thermo.f - 32) * 5 / 9 + 273.15"})
+    eng.post(wo, [212.0], ts=2)
+    eng.drain()
+    assert abs(eng.value_of(cel)[0] - 373.15) < 1e-3
+    assert eng._step is compiled_step   # tables changed, program did not
+
+
+def test_diamond_dedup_single_emission(small_cfg):
+    """a -> f, g -> x: x must emit once per source update (Fig. 2a)."""
+    reg = Registry(small_cfg)
+    t = reg.create_tenant("t")
+    a = reg.create_stream(t, "a", ["v"])
+    f = reg.create_composite(t, "f", ["v"], [a], transform={"v": "a.v + 1"})
+    g = reg.create_composite(t, "g", ["v"], [a], transform={"v": "a.v * 2"})
+    x = reg.create_composite(t, "x", ["v"], [f, g],
+                             transform={"v": "f.v + g.v"})
+    eng = StreamEngine(reg)
+    eng.post(a, [10.0], ts=1)
+    eng.drain()
+    c = eng.counters()
+    # f, g, x emit exactly once each; the duplicate delivery to x coalesces
+    assert c["emitted"] == 3
+    assert c["coalesced"] + c["discarded_stale"] >= 1
+    assert eng.ts_of(x) == 1
+
+
+def test_cycle_discard(small_cfg):
+    """b -> c -> b cycle (Fig. 2b): deliveries closing the cycle discard."""
+    reg = Registry(small_cfg)
+    t = reg.create_tenant("t")
+    a = reg.create_stream(t, "a", ["v"])
+    b = reg.create_composite(t, "b", ["v"], [a], transform={"v": "a.v + 1"})
+    c = reg.create_composite(t, "c", ["v"], [b], transform={"v": "b.v + 1"})
+    reg.subscribe(b, c)
+    eng = StreamEngine(reg)
+    eng.post(a, [0.0], ts=5)
+    eng.drain()
+    cnt = eng.counters()
+    assert cnt["emitted"] == 2                 # b and c once each
+    assert cnt["discarded_stale"] >= 1         # c -> b closing edge discarded
+    assert eng.ts_of(b) == 5 and eng.ts_of(c) == 5
+
+
+def test_multi_tenant_quota_and_capacity(small_cfg):
+    reg = Registry(small_cfg)
+    t1 = reg.create_tenant("small", quota_streams=2)
+    reg.create_stream(t1, "s1", ["v"])
+    reg.create_stream(t1, "s2", ["v"])
+    with pytest.raises(ValueError, match="quota"):
+        reg.create_stream(t1, "s3", ["v"])
+    t2 = reg.create_tenant("big")
+    src = reg.create_stream(t2, "src", ["v"])
+    with pytest.raises(ValueError, match="in-degree"):
+        reg.create_composite(t2, "fat", ["v"],
+                             [src] * (small_cfg.max_in + 1),
+                             transform={"v": "src.v"})
+
+
+def test_cross_tenant_subscription_and_attribution(small_cfg):
+    """The paper's headline: tenants share data streams between them."""
+    reg = Registry(small_cfg)
+    alice = reg.create_tenant("alice")
+    bob = reg.create_tenant("bob")
+    a = reg.create_stream(alice, "a", ["v"])
+    b = reg.create_composite(bob, "b", ["v"], [a], transform={"v": "a.v * 2"})
+    eng = StreamEngine(reg)
+    eng.post(a, [3.0], ts=1)
+    eng.drain()
+    assert abs(eng.value_of(b)[0] - 6.0) < 1e-6
+    emitted = np.asarray(eng.state.tenant_emitted)
+    assert emitted[bob.tid] == 1 and emitted[alice.tid] == 0
+
+
+def test_queue_backlog_drains_without_drops():
+    cfg = EngineConfig(n_streams=16, batch=2, queue=4, max_in=2, max_out=2)
+    reg = Registry(cfg)
+    t = reg.create_tenant("t")
+    srcs = [reg.create_stream(t, f"s{i}", ["v"]) for i in range(8)]
+    eng = StreamEngine(reg)
+    for i, s in enumerate(srcs):
+        eng.post(s, [float(i)], ts=i + 1)
+    eng.drain(max_rounds=64)
+    c = eng.counters()
+    assert c["ingested"] == 8
+    assert c["dropped_overflow"] == 0
+
+
+def test_rewire_dynamic_subscription(small_cfg):
+    reg = Registry(small_cfg)
+    t = reg.create_tenant("t")
+    a = reg.create_stream(t, "a", ["v"])
+    b = reg.create_stream(t, "b", ["v"])
+    x = reg.create_composite(t, "x", ["v"], [a], transform={"v": "a.v"})
+    eng = StreamEngine(reg)
+    eng.post(a, [1.0], ts=1)
+    eng.drain()
+    assert abs(eng.value_of(x)[0] - 1.0) < 1e-6
+    # dynamically subscribe x to b as well, switch transform to the sum
+    reg.subscribe(x, b)
+    eng.rewire()
+    eng.inject_code(x, {"v": "a.v + b.v"})
+    eng.post(b, [5.0], ts=2)
+    eng.drain()
+    assert abs(eng.value_of(x)[0] - 6.0) < 1e-6
+
+
+def test_pallas_fanout_inside_engine(small_cfg):
+    """Engine with the Pallas stream_dispatch kernel == reference engine."""
+    from repro.kernels.stream_dispatch.ops import make_fanout
+
+    def build(fanout=None):
+        reg = Registry(small_cfg)
+        t = reg.create_tenant("t")
+        a = reg.create_stream(t, "a", ["v"])
+        f = reg.create_composite(t, "f", ["v"], [a], transform={"v": "a.v + 1"})
+        g = reg.create_composite(t, "g", ["v"], [f], transform={"v": "f.v * 2"})
+        kw = {"fanout_fn": fanout} if fanout else {}
+        return reg, a, g, StreamEngine(reg, **kw)
+
+    _, a1, g1, e1 = build()
+    _, a2, g2, e2 = build(make_fanout(interpret=True))
+    for eng, a in ((e1, a1), (e2, a2)):
+        eng.post(a, [3.0], ts=1)
+        eng.post(a, [4.0], ts=2)
+        eng.drain()
+    assert np.allclose(e1.value_of(g1), e2.value_of(g2))
+    assert e1.counters() == e2.counters()
