@@ -1,12 +1,13 @@
 """Core of the reproduction: the multi-tenant pub/sub stream runtime."""
 from repro.core.config import EngineConfig
 from repro.core.engine import (DeviceTables, EngineState, IngestBatch,
-                               SinkBatch, StreamEngine, init_state, make_step)
+                               SinkBatch, StreamEngine, create_engine,
+                               init_state, make_step)
 from repro.core.graph import PipelineGraph
 from repro.core.registry import Registry, Stream, Tenant
 
 __all__ = [
     "EngineConfig", "Registry", "Stream", "Tenant", "StreamEngine",
     "DeviceTables", "EngineState", "IngestBatch", "SinkBatch",
-    "init_state", "make_step", "PipelineGraph",
+    "init_state", "make_step", "PipelineGraph", "create_engine",
 ]

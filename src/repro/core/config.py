@@ -25,6 +25,11 @@ class EngineConfig:
     n_temps: int = 16           # VM temporary registers
     sink_buffer: int = 256      # per-round external-emission buffer rows
 
+    # ---- sharded stream plane (repro.distributed.stream_sharding) ------
+    n_shards: int = 1           # 1-D device mesh size for the pub/sub plane
+    partition: str = "block"    # "block" (sid ranges) | "tenant" (hash)
+    exchange_slots: int = 0     # per-destination exchange rows (0 -> work)
+
     # ---- register file layout ------------------------------------------
     @property
     def reg_inputs(self) -> int:        # input slot i, channel c -> i*C + c
@@ -66,8 +71,21 @@ class EngineConfig:
     def work(self) -> int:              # work items per round
         return self.batch * self.max_out
 
+    @property
+    def exchange(self) -> int:
+        """Effective per-destination exchange capacity.  The default
+        (``work``) can never overflow even if one shard's whole fan-out
+        targets a single destination — the precondition for bit-exact
+        equivalence with the single-device engine — at the price of a
+        post-exchange work width of n_shards*work per shard.  Throughput
+        deployments should set ``exchange_slots`` near the expected
+        per-destination traffic and watch ``stats["dropped_overflow"]``."""
+        return self.exchange_slots if self.exchange_slots > 0 else self.work
+
     def validate(self) -> "EngineConfig":
         assert self.n_streams >= 2 and self.channels >= 1
         assert self.max_in >= 1 and self.max_out >= 1
         assert self.queue >= self.batch
+        assert self.n_shards >= 1
+        assert self.partition in ("block", "tenant")
         return self

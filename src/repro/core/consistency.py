@@ -42,6 +42,7 @@ def resolve_winners(
     ts_out: jnp.ndarray,       # (W,) proposed output timestamps
     keep: jnp.ndarray,         # (W,) bool — passed the discard rule + filters
     n_streams: int,
+    order: jnp.ndarray = None,  # (W,) optional tie key (lower wins)
 ) -> jnp.ndarray:
     """Intra-round coalescing.
 
@@ -49,8 +50,14 @@ def resolve_winners(
     a batched round may contain several items for the same target.  Under
     the paper's rule the earliest would emit and later ones with equal
     timestamps be discarded.  We coalesce: per target the item with the
-    *newest* ts_out wins (ties -> lowest work index), everything else is
-    discarded — the same SUs a sequential order [winner first] would keep.
+    *newest* ts_out wins, everything else is discarded — the same SUs a
+    sequential order [winner first] would keep.
+
+    Equal-``ts_out`` ties break on ``order`` (lowest wins) when given, then
+    on lowest work index.  The sharded engine relies on a *content-based*
+    ``order`` (the trigger stream id): the winner is then independent of
+    how work items were laid out in the batch, so a round partitioned
+    across shards coalesces to the same survivor as a single device.
     Returns (W,) bool winner mask.
     """
     W = targets.shape[0]
@@ -61,6 +68,12 @@ def resolve_winners(
     best_ts = jnp.full((n_streams + 1,), big_neg, ts_out.dtype)
     best_ts = best_ts.at[tgt].max(jnp.where(keep, ts_out, big_neg))
     is_best = keep & (ts_out == best_ts[tgt])
+
+    if order is not None:
+        big = jnp.iinfo(jnp.int32).max
+        best_ord = jnp.full((n_streams + 1,), big, jnp.int32)
+        best_ord = best_ord.at[tgt].min(jnp.where(is_best, order, big))
+        is_best = is_best & (order == best_ord[tgt])
 
     first_idx = jnp.full((n_streams + 1,), W, jnp.int32)
     first_idx = first_idx.at[tgt].min(jnp.where(is_best, idx, W))

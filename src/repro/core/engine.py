@@ -131,10 +131,12 @@ def _enqueue(state: EngineState, sid, vals, ts, mask) -> Tuple[EngineState, jnp.
     return new, dropped
 
 
-def _pop(state: EngineState, tables: DeviceTables, batch: int):
+def _pop(state: EngineState, priority_by_sid: jnp.ndarray, batch: int):
     """Priority pop: lowest (priority, seq) first — §IV-E novelty/§V-C
-    near-source prioritization; priority table all-zero == plain FIFO."""
-    key = jnp.where(state.q_valid, tables.priority[state.q_sid], INT_MAX)
+    near-source prioritization; priority table all-zero == plain FIFO.
+    ``priority_by_sid`` is indexed by whatever id space ``q_sid`` uses
+    (global sids in the sharded engine, table rows on a single device)."""
+    key = jnp.where(state.q_valid, priority_by_sid[state.q_sid], INT_MAX)
     order = jnp.lexsort((state.q_seq, key))
     take = order[:batch]
     pvalid = state.q_valid[take]
@@ -165,6 +167,74 @@ def fanout_reference(
 
 
 # --------------------------------------------------------------------------
+# stages 2 + 3 — shared by the single-device and sharded engines
+# --------------------------------------------------------------------------
+
+def process_work_items(
+    cfg: EngineConfig,
+    tables: DeviceTables,
+    rows: jnp.ndarray,            # (W,) row into tables.* (clipped, in-range)
+    t_sid: jnp.ndarray,           # (W,) target id in values_by_sid's space
+    wi_src: jnp.ndarray,          # (W,) triggering stream id
+    wi_vals: jnp.ndarray,         # (W, C) triggering SU payload
+    wi_ts: jnp.ndarray,           # (W,) triggering SU timestamp
+    wi_valid: jnp.ndarray,        # (W,) bool
+    values_by_sid: jnp.ndarray,   # (N, C) last values, indexed like t_sid
+    timestamps_by_sid: jnp.ndarray,  # (N,)
+):
+    """Data fetching + transformation/filtering for a work-item batch.
+
+    On a single device ``rows == t_sid`` index the global tables/state; the
+    sharded engine passes shard-local table rows plus the all-gathered
+    by-sid value/timestamp snapshot, so both engines evaluate identical
+    Listing-2 semantics.  Returns ``(new_vals, ts_out, live, keep, counts)``
+    where counts holds the stage-3 stat increments.
+    """
+    W = t_sid.shape[0]
+    M, C, R = cfg.max_in, cfg.channels, cfg.n_regs
+    n_sid = timestamps_by_sid.shape[0]
+
+    # ---- stage 2: data fetching (lock-free gathers) ----------------------
+    in_row = tables.in_table[rows]                   # (W, M)
+    in_valid = in_row >= 0
+    src_safe = jnp.clip(in_row, 0, n_sid - 1)
+    vals_in = values_by_sid[src_safe]                # (W, M, C)
+    ts_in = jnp.where(in_valid, timestamps_by_sid[src_safe], INT_MIN)
+    trig = jnp.argmax((in_row == wi_src[:, None]) & in_valid, axis=1)
+    widx = jnp.arange(W)
+    vals_in = vals_in.at[widx, trig].set(wi_vals)    # fresh SU overrides
+    ts_in = ts_in.at[widx, trig].set(wi_ts)
+    prev_vals = values_by_sid[t_sid]
+    prev_ts = timestamps_by_sid[t_sid]
+
+    # ---- stage 3: transformation & filtering -----------------------------
+    regs = jnp.zeros((W, R), jnp.float32)
+    flat_in = jnp.where(in_valid[..., None], vals_in, 0.0).reshape(W, M * C)
+    regs = regs.at[:, cfg.reg_inputs:cfg.reg_inputs + M * C].set(flat_in)
+    regs = regs.at[:, cfg.reg_prev:cfg.reg_prev + C].set(prev_vals)
+    regs = regs.at[:, cfg.reg_ts].set(wi_ts.astype(jnp.float32))
+    regs = regs.at[:, cfg.reg_trigger].set(trig.astype(jnp.float32))
+    regs_out = pvm.execute_batch(tables.progs[rows], tables.consts[rows], regs)
+    new_vals = regs_out[:, cfg.reg_result:cfg.reg_result + C]
+    finite = jnp.isfinite(new_vals)
+    new_vals = jnp.where(finite, new_vals, 0.0)
+    pref = regs_out[:, cfg.reg_pref] != 0.0
+    postf = regs_out[:, cfg.reg_postf] != 0.0
+
+    keep_ts = consistency.keep_mask(wi_ts, prev_ts)
+    ts_out = consistency.output_timestamp(wi_ts, prev_ts, ts_in, in_valid)
+    live = wi_valid & tables.is_composite[rows]
+    keep = live & keep_ts & pref & postf
+    counts = {
+        "processed": live.sum(dtype=jnp.int32),
+        "discarded_stale": (live & ~keep_ts).sum(dtype=jnp.int32),
+        "filtered": (live & keep_ts & ~(pref & postf)).sum(dtype=jnp.int32),
+        "nonfinite": ((~finite).any(axis=-1) & wi_valid).sum(dtype=jnp.int32),
+    }
+    return new_vals, ts_out, live, keep, counts
+
+
+# --------------------------------------------------------------------------
 # the step
 # --------------------------------------------------------------------------
 
@@ -177,9 +247,8 @@ def make_step(
     """Build the jitted engine round.  ``fanout_fn`` may be swapped for the
     Pallas `stream_dispatch` kernel; both compute stage 1.  ``jit=False``
     returns the raw step (the dry-run jits it with explicit shardings)."""
-    N, C, M, F = cfg.n_streams, cfg.channels, cfg.max_in, cfg.max_out
+    N, C, F = cfg.n_streams, cfg.channels, cfg.max_out
     B, W = cfg.batch, cfg.work
-    R = cfg.n_regs
 
     def step(tables: DeviceTables, state: EngineState, ingest: IngestBatch
              ) -> Tuple[EngineState, SinkBatch]:
@@ -201,59 +270,30 @@ def make_step(
         stats["dropped_overflow"] += dropped
 
         # ---- pop this round's events ------------------------------------
-        state, (e_sid, e_vals, e_ts, e_valid) = _pop(state, tables, B)
+        state, (e_sid, e_vals, e_ts, e_valid) = _pop(state, tables.priority, B)
 
         # ---- stage 1: subscriber dispatching ----------------------------
-        targets, early = fanout_fn(e_sid, e_ts, e_valid,
-                                   tables.out_table, state.timestamps)
+        # The early-keep mask stays part of the fanout contract (the Pallas
+        # stream_dispatch kernel computes it in-register); the engine now
+        # applies the equivalent check in process_work_items' keep_mask.
+        targets, _early = fanout_fn(e_sid, e_ts, e_valid,
+                                    tables.out_table, state.timestamps)
         wi_t = targets.reshape(W)
-        wi_keep0 = early.reshape(W)
         wi_valid = (wi_t >= 0) & jnp.repeat(e_valid, F)
         wi_src = jnp.repeat(e_sid, F)
         wi_vals = jnp.repeat(e_vals, F, axis=0)
         wi_ts = jnp.repeat(e_ts, F)
         t = jnp.clip(wi_t, 0, N - 1)
 
-        # ---- stage 2: data fetching (lock-free gathers) ------------------
-        in_row = tables.in_table[t]                      # (W, M)
-        in_valid = in_row >= 0
-        src_safe = jnp.clip(in_row, 0, N - 1)
-        vals_in = state.values[src_safe]                 # (W, M, C)
-        ts_in = jnp.where(in_valid, state.timestamps[src_safe], INT_MIN)
-        trig = jnp.argmax((in_row == wi_src[:, None]) & in_valid, axis=1)
-        rows = jnp.arange(W)
-        vals_in = vals_in.at[rows, trig].set(wi_vals)    # fresh SU overrides
-        ts_in = ts_in.at[rows, trig].set(wi_ts)
-        prev_vals = state.values[t]
-        prev_ts = state.timestamps[t]
-
-        # ---- stage 3: transformation & filtering -------------------------
-        regs = jnp.zeros((W, R), jnp.float32)
-        flat_in = jnp.where(in_valid[..., None], vals_in, 0.0).reshape(W, M * C)
-        regs = regs.at[:, cfg.reg_inputs:cfg.reg_inputs + M * C].set(flat_in)
-        regs = regs.at[:, cfg.reg_prev:cfg.reg_prev + C].set(prev_vals)
-        regs = regs.at[:, cfg.reg_ts].set(wi_ts.astype(jnp.float32))
-        regs = regs.at[:, cfg.reg_trigger].set(trig.astype(jnp.float32))
-        regs_out = pvm.execute_batch(tables.progs[t], tables.consts[t], regs)
-        new_vals = regs_out[:, cfg.reg_result:cfg.reg_result + C]
-        finite = jnp.isfinite(new_vals)
-        stats["nonfinite"] = stats["nonfinite"] + (
-            (~finite).any(axis=-1) & wi_valid).sum(dtype=jnp.int32)
-        new_vals = jnp.where(finite, new_vals, 0.0)
-        pref = regs_out[:, cfg.reg_pref] != 0.0
-        postf = regs_out[:, cfg.reg_postf] != 0.0
-
-        keep_ts = consistency.keep_mask(wi_ts, prev_ts) & wi_keep0
-        ts_out = consistency.output_timestamp(wi_ts, prev_ts, ts_in, in_valid)
-        live = wi_valid & tables.is_composite[t]
-        keep = live & keep_ts & pref & postf
-
-        stats["processed"] += live.sum(dtype=jnp.int32)
-        stats["discarded_stale"] += (live & ~keep_ts).sum(dtype=jnp.int32)
-        stats["filtered"] += (live & keep_ts & ~(pref & postf)).sum(dtype=jnp.int32)
+        # ---- stages 2 + 3: fetch, transform, filter ----------------------
+        new_vals, ts_out, live, keep, counts = process_work_items(
+            cfg, tables, t, t, wi_src, wi_vals, wi_ts, wi_valid,
+            state.values, state.timestamps)
+        for k, v in counts.items():
+            stats[k] = stats[k] + v
 
         # ---- stage 4: store, trigger actions and emit ---------------------
-        win = consistency.resolve_winners(t, ts_out, keep, N)
+        win = consistency.resolve_winners(t, ts_out, keep, N, order=wi_src)
         stats["coalesced"] += (keep & ~win).sum(dtype=jnp.int32)
         stats["emitted"] += win.sum(dtype=jnp.int32)
         dest = jnp.where(win, t, N)
@@ -298,6 +338,10 @@ class StreamEngine:
 
     def __init__(self, registry: Registry, *, fanout_fn: Callable = fanout_reference,
                  priority: Optional[np.ndarray] = None):
+        if registry.cfg.n_shards > 1:
+            raise ValueError(
+                "cfg.n_shards > 1: build the engine with "
+                "repro.core.create_engine (or ShardedStreamEngine directly)")
         self.cfg = registry.cfg
         self.registry = registry
         self.tables = DeviceTables.from_host(registry.build_tables(priority))
@@ -352,6 +396,11 @@ class StreamEngine:
         return sinks
 
     # ----------------------------------------------------- code injection
+    def _table_row(self, sid: int):
+        """Index of stream ``sid``'s row in the device tables; the sharded
+        engine overrides this to address ``(shard, local)``."""
+        return sid
+
     def inject_code(self, stream, transform: Dict[str, str],
                     pre_filter: Optional[str] = None,
                     post_filter: Optional[str] = None) -> None:
@@ -364,9 +413,10 @@ class StreamEngine:
         s.pre_filter = pre_filter
         s.post_filter = post_filter
         prog, consts = self.registry._compile_stream(s)
+        row = self._table_row(s.sid)
         self.tables = self.tables._replace(
-            progs=self.tables.progs.at[s.sid].set(jnp.asarray(prog)),
-            consts=self.tables.consts.at[s.sid].set(jnp.asarray(consts)),
+            progs=self.tables.progs.at[row].set(jnp.asarray(prog)),
+            consts=self.tables.consts.at[row].set(jnp.asarray(consts)),
         )
 
     def rewire(self) -> None:
@@ -386,3 +436,17 @@ class StreamEngine:
 
     def counters(self) -> Dict[str, int]:
         return {k: int(v) for k, v in self.state.stats.items()}
+
+
+def create_engine(registry: Registry, *, mesh=None, **kw):
+    """Build the engine matching ``registry.cfg``: a plain single-device
+    :class:`StreamEngine` when ``cfg.n_shards == 1``, otherwise the
+    sharded engine partitioned over a 1-D device mesh (see
+    :mod:`repro.distributed.stream_sharding`)."""
+    if registry.cfg.n_shards > 1:
+        from repro.distributed.stream_sharding import ShardedStreamEngine
+        return ShardedStreamEngine(registry, mesh=mesh, **kw)
+    if mesh is not None:
+        raise ValueError("mesh given but cfg.n_shards == 1; set "
+                         "EngineConfig.n_shards to shard the stream plane")
+    return StreamEngine(registry, **kw)

@@ -251,3 +251,18 @@ class Registry:
             tenant=tenant, priority=np.asarray(priority, np.int32),
             n_channels=n_ch, model_backed=model_backed,
         )
+
+    def build_sharded_tables(
+        self, priority: Optional[np.ndarray] = None,
+        n_shards: Optional[int] = None, partition: Optional[str] = None,
+    ):
+        """Lower the graph for the sharded engine: shard-local table slices
+        stacked on a leading ``(n_shards,)`` axis plus the
+        :class:`~repro.distributed.stream_sharding.ShardPlan` holding the
+        global ``sid -> shard`` map.  Returns ``(tables, plan)``."""
+        from repro.distributed.stream_sharding import (plan_partition,
+                                                       shard_tables)
+        flat = self.build_tables(priority)
+        plan = plan_partition(self.cfg, flat.tenant,
+                              n_shards=n_shards, partition=partition)
+        return shard_tables(flat, plan), plan

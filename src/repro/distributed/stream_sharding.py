@@ -1,0 +1,437 @@
+"""Sharded stream engine: partition the pub/sub plane across devices.
+
+The paper scales by distributing the processing topology across a STORM
+cluster (§V); the single-device engine in :mod:`repro.core.engine` runs the
+whole stream space on one XLA device.  This module partitions *streams*
+across a 1-D ``jax.sharding.Mesh`` ("shards" axis): every shard owns a
+contiguous sid block (or a tenant-hash bucket) and holds its own
+:class:`EngineState` slice — values, timestamps, pending-SU queue, seq
+counter and stats — while the four-stage round runs per shard under
+``shard_map``.
+
+Cross-shard subscriptions are served by a new **exchange stage** between
+stage 1 (fan-out) and stage 2 (fetch): work items whose target stream lives
+on another shard are compacted into fixed-size per-destination exchange
+buffers and delivered with one ``all_to_all`` collective.  Buffer overflow
+drops are counted in ``stats["dropped_overflow"]`` (never silent).  Co-input
+fetches read an ``all_gather`` snapshot taken right after ingest — the same
+snapshot the single-device engine reads — so the Listing-2 consistency
+semantics (stale-discard, same-(sid, ts) coalescing) are preserved exactly.
+
+Bit-exact equivalence with the single-device engine holds whenever no
+exchange buffer overflows and each round drains every queue (batch ≥ queue
+occupancy): both engines then process the same work-item set per round, and
+intra-round coalescing ties break on the *content* key (trigger sid, see
+``consistency.resolve_winners``) rather than batch layout.
+
+The per-shard round:
+
+    phase 0   ingest SUs routed to their owner shard (host-side routing)
+    pop       per-shard priority pop from the local queue
+    snapshot  all_gather values/timestamps -> by-sid global view
+    stage 1   fan-out via the shard-local out-tables
+    exchange  per-destination buffers + all_to_all   <- NEW
+    stage 2   gather co-inputs from the snapshot
+    stage 3   bytecode VM + Listing-2 filters
+    stage 4   store into the owner shard's slice, re-enqueue locally
+"""
+from __future__ import annotations
+
+from typing import Callable, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+try:                                    # jax < 0.8
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SHARD_MAP_KW = {"check_rep": False}
+except ImportError:                     # jax >= 0.8: graduated to jax.shard_map
+    from jax import shard_map as _shard_map
+    _SHARD_MAP_KW = {"check_vma": False}
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import consistency
+from repro.core.config import EngineConfig
+from repro.core.engine import (INT_MIN, STAT_KEYS, DeviceTables, EngineState,
+                               IngestBatch, SinkBatch, StreamEngine, _enqueue,
+                               _pop, fanout_reference, process_work_items)
+from repro.core.registry import EngineTables, Registry
+
+AXIS = "shards"
+
+
+# --------------------------------------------------------------------------
+# partitioner
+# --------------------------------------------------------------------------
+
+class ShardPlan(NamedTuple):
+    """Static placement of the stream space on the mesh."""
+    n_shards: int
+    n_local: int                  # padded per-shard stream capacity
+    sid_to_shard: np.ndarray      # (N,) int32 — the global sid -> shard map
+    sid_to_local: np.ndarray      # (N,) int32 row within the owner's slice
+    sid_to_flat: np.ndarray       # (N,) int32 == shard * n_local + local
+    local_to_sid: np.ndarray      # (n_shards, n_local) int32, -1 pad
+
+
+def plan_partition(cfg: EngineConfig, tenant_of_sid: np.ndarray,
+                   n_shards: Optional[int] = None,
+                   partition: Optional[str] = None) -> ShardPlan:
+    """Assign every sid to a shard: ``"block"`` gives contiguous sid ranges
+    (cheap locality for pipelines built incrementally), ``"tenant"`` hashes
+    the owning tenant so one tenant's pipeline stays co-located."""
+    N = cfg.n_streams
+    n_shards = int(n_shards or cfg.n_shards)
+    partition = partition or cfg.partition
+    sids = np.arange(N)
+    if partition == "block":
+        n_local = -(-N // n_shards)
+        sid_to_shard = sids // n_local
+        sid_to_local = sids % n_local
+    elif partition == "tenant":
+        sid_to_shard = np.asarray(tenant_of_sid, np.int64) % n_shards
+        counts = np.zeros(n_shards, np.int64)
+        sid_to_local = np.zeros(N, np.int64)
+        for sid in range(N):
+            s = sid_to_shard[sid]
+            sid_to_local[sid] = counts[s]
+            counts[s] += 1
+        n_local = max(int(counts.max(initial=1)), 1)
+    else:
+        raise ValueError(f"unknown partition {partition!r}")
+    sid_to_flat = sid_to_shard * n_local + sid_to_local
+    local_to_sid = np.full((n_shards, n_local), -1, np.int32)
+    local_to_sid[sid_to_shard, sid_to_local] = sids
+    return ShardPlan(n_shards, n_local,
+                     sid_to_shard.astype(np.int32),
+                     sid_to_local.astype(np.int32),
+                     sid_to_flat.astype(np.int32), local_to_sid)
+
+
+def shard_tables(tables: EngineTables, plan: ShardPlan) -> EngineTables:
+    """Permute the global table rows into (n_shards, n_local, ...) slices.
+    Pad rows are inert: no inputs, no subscribers, NOP programs."""
+    S, L = plan.n_shards, plan.n_local
+
+    def scatter(rows: np.ndarray, fill) -> np.ndarray:
+        out = np.full((S, L) + rows.shape[1:], fill, rows.dtype)
+        out[plan.sid_to_shard, plan.sid_to_local] = rows
+        return out
+
+    return EngineTables(
+        in_table=scatter(tables.in_table, -1),
+        in_count=scatter(tables.in_count, 0),
+        out_table=scatter(tables.out_table, -1),
+        out_count=scatter(tables.out_count, 0),
+        progs=scatter(tables.progs, 0),
+        consts=scatter(tables.consts, 0),
+        is_composite=scatter(tables.is_composite, False),
+        tenant=scatter(tables.tenant, 0),
+        priority=scatter(tables.priority, 0),
+        n_channels=scatter(tables.n_channels, 1),
+        model_backed=scatter(tables.model_backed, False),
+    )
+
+
+class GlobalMaps(NamedTuple):
+    """Small replicated lookup tables shared by every shard."""
+    sid_to_shard: jnp.ndarray     # (N,)
+    sid_to_local: jnp.ndarray     # (N,)
+    sid_to_flat: jnp.ndarray      # (N,)
+    priority: jnp.ndarray         # (N,) by global sid (queues hold sids)
+
+    @classmethod
+    def build(cls, priority: Optional[np.ndarray], plan: ShardPlan) -> "GlobalMaps":
+        n = plan.sid_to_shard.shape[0]
+        if priority is None:
+            priority = np.zeros((n,), np.int32)
+        return cls(
+            sid_to_shard=jnp.asarray(plan.sid_to_shard),
+            sid_to_local=jnp.asarray(plan.sid_to_local),
+            sid_to_flat=jnp.asarray(plan.sid_to_flat),
+            priority=jnp.asarray(priority, jnp.int32),
+        )
+
+
+def sharded_init_state(cfg: EngineConfig, plan: ShardPlan) -> EngineState:
+    """Per-shard EngineState slices stacked on a leading shard axis."""
+    S, L, C, Q = plan.n_shards, plan.n_local, cfg.channels, cfg.queue
+    return EngineState(
+        values=jnp.zeros((S, L, C), jnp.float32),
+        timestamps=jnp.full((S, L), INT_MIN, jnp.int32),
+        q_sid=jnp.zeros((S, Q), jnp.int32),
+        q_vals=jnp.zeros((S, Q, C), jnp.float32),
+        q_ts=jnp.zeros((S, Q), jnp.int32),
+        q_seq=jnp.zeros((S, Q), jnp.int32),
+        q_valid=jnp.zeros((S, Q), bool),
+        seq=jnp.zeros((S,), jnp.int32),
+        tenant_emitted=jnp.zeros((S, cfg.n_tenants), jnp.int32),
+        stats={k: jnp.zeros((S,), jnp.int32) for k in STAT_KEYS},
+    )
+
+
+# --------------------------------------------------------------------------
+# the sharded step
+# --------------------------------------------------------------------------
+
+def make_sharded_step(
+    cfg: EngineConfig,
+    plan: ShardPlan,
+    mesh: Mesh,
+    fanout_fn: Callable = fanout_reference,
+    donate: bool = True,
+) -> Callable:
+    """Build the jitted sharded round.  Signature:
+    ``step(tables, gmap, state, ingest) -> (state, sink)`` where every
+    ``tables``/``state``/``ingest``/``sink`` leaf carries a leading
+    ``(n_shards,)`` axis and ``gmap`` is replicated."""
+    n_shards, n_local = plan.n_shards, plan.n_local
+    N, C, F = cfg.n_streams, cfg.channels, cfg.max_out
+    B, W, S = cfg.batch, cfg.work, cfg.sink_buffer
+    E = cfg.exchange                      # per-destination exchange rows
+    WR = n_shards * E                     # work width after the exchange
+
+    def shard_step(tables: DeviceTables, gmap: GlobalMaps,
+                   state: EngineState, ingest: IngestBatch):
+        tables = jax.tree.map(lambda x: x[0], tables)
+        state = jax.tree.map(lambda x: x[0], state)
+        ingest = jax.tree.map(lambda x: x[0], ingest)
+        stats = dict(state.stats)
+
+        # ---- phase 0: ingest SUs routed to this shard (global sids) -----
+        g_sid = jnp.clip(ingest.sid, 0, N - 1)
+        l_sid = jnp.clip(gmap.sid_to_local[g_sid], 0, n_local - 1)
+        i_keep = ingest.valid & (ingest.ts > state.timestamps[l_sid])
+        i_win = consistency.resolve_winners(l_sid, ingest.ts, i_keep, n_local)
+        i_dest = jnp.where(i_win, l_sid, n_local)
+        state = state._replace(
+            values=state.values.at[i_dest].set(ingest.vals, mode="drop"),
+            timestamps=state.timestamps.at[i_dest].set(ingest.ts, mode="drop"),
+        )
+        stats["ingested"] += ingest.valid.sum(dtype=jnp.int32)
+        stats["ingest_stale"] += (ingest.valid & ~i_keep).sum(dtype=jnp.int32)
+        stats["ingest_coalesced"] += (i_keep & ~i_win).sum(dtype=jnp.int32)
+        state, dropped = _enqueue(state, g_sid, ingest.vals, ingest.ts, i_win)
+        stats["dropped_overflow"] += dropped
+
+        # ---- pop this round's events (queues hold global sids) ----------
+        state, (e_sid, e_vals, e_ts, e_valid) = _pop(state, gmap.priority, B)
+
+        # ---- post-ingest snapshot: the lock-free global view ------------
+        vals_all = jax.lax.all_gather(state.values, AXIS)
+        ts_all = jax.lax.all_gather(state.timestamps, AXIS)
+        values_by_sid = vals_all.reshape(n_shards * n_local, C)[gmap.sid_to_flat]
+        ts_by_sid = ts_all.reshape(n_shards * n_local)[gmap.sid_to_flat]
+
+        # ---- stage 1: fan-out via the shard-local out-tables ------------
+        e_loc = jnp.clip(gmap.sid_to_local[jnp.clip(e_sid, 0, N - 1)],
+                         0, n_local - 1)
+        targets, _early = fanout_fn(e_loc, e_ts, e_valid,
+                                    tables.out_table, ts_by_sid)
+        wi_t = targets.reshape(W)
+        wi_valid = (wi_t >= 0) & jnp.repeat(e_valid, F)
+        wi_src = jnp.repeat(e_sid, F)
+        wi_vals = jnp.repeat(e_vals, F, axis=0)
+        wi_ts = jnp.repeat(e_ts, F)
+
+        # ---- exchange stage: route work items to the target's owner -----
+        t_safe = jnp.clip(wi_t, 0, N - 1)
+        dest_shard = jnp.where(wi_valid, gmap.sid_to_shard[t_safe], n_shards)
+        payload_i = jnp.stack([wi_t, wi_src, wi_ts], axis=-1)        # (W, 3)
+        xi = jnp.full((n_shards, E, 3), -1, jnp.int32)
+        xf = jnp.zeros((n_shards, E, C), jnp.float32)
+        exch_dropped = jnp.zeros((), jnp.int32)
+        for d in range(n_shards):
+            m = dest_shard == d
+            rank = jnp.cumsum(m.astype(jnp.int32)) - 1
+            slot = jnp.where(m & (rank < E), rank, E)
+            xi = xi.at[d, slot].set(payload_i, mode="drop")
+            xf = xf.at[d, slot].set(wi_vals, mode="drop")
+            exch_dropped += (m & (rank >= E)).sum(dtype=jnp.int32)
+        stats["dropped_overflow"] += exch_dropped
+
+        ri = jax.lax.all_to_all(xi, AXIS, split_axis=0, concat_axis=0)
+        rf = jax.lax.all_to_all(xf, AXIS, split_axis=0, concat_axis=0)
+        r_t = ri[..., 0].reshape(WR)
+        r_src = ri[..., 1].reshape(WR)
+        r_ts = ri[..., 2].reshape(WR)
+        r_vals = rf.reshape(WR, C)
+        r_valid = r_t >= 0
+        rt_safe = jnp.clip(r_t, 0, N - 1)
+        r_loc = jnp.clip(gmap.sid_to_local[rt_safe], 0, n_local - 1)
+
+        # ---- stages 2 + 3 (shared with the single-device engine) --------
+        new_vals, ts_out, live, keep, counts = process_work_items(
+            cfg, tables, r_loc, rt_safe, r_src, r_vals, r_ts, r_valid,
+            values_by_sid, ts_by_sid)
+        for k, v in counts.items():
+            stats[k] = stats[k] + v
+
+        # ---- stage 4: store into this shard's slice ----------------------
+        win = consistency.resolve_winners(r_loc, ts_out, keep, n_local,
+                                          order=r_src)
+        stats["coalesced"] += (keep & ~win).sum(dtype=jnp.int32)
+        stats["emitted"] += win.sum(dtype=jnp.int32)
+        dest = jnp.where(win, r_loc, n_local)
+        state = state._replace(
+            values=state.values.at[dest].set(new_vals, mode="drop"),
+            timestamps=state.timestamps.at[dest].set(ts_out, mode="drop"),
+            tenant_emitted=state.tenant_emitted.at[
+                jnp.where(win, tables.tenant[r_loc], cfg.n_tenants)
+            ].add(1, mode="drop"),
+        )
+
+        # re-dispatch winners that themselves have subscribers (local queue)
+        fanout_more = win & (tables.out_count[r_loc] > 0)
+        state, dropped = _enqueue(state, r_t, new_vals, ts_out, fanout_more)
+        stats["dropped_overflow"] += dropped
+        stats["enqueued"] += fanout_more.sum(dtype=jnp.int32)
+
+        # per-shard external sink buffer
+        sink_rank = jnp.cumsum(win.astype(jnp.int32)) - 1
+        sdest = jnp.where(win & (sink_rank < S), sink_rank, S)
+        sink = SinkBatch(
+            sid=jnp.zeros((S,), jnp.int32).at[sdest].set(r_t, mode="drop"),
+            vals=jnp.zeros((S, C), jnp.float32).at[sdest].set(new_vals,
+                                                              mode="drop"),
+            ts=jnp.zeros((S,), jnp.int32).at[sdest].set(ts_out, mode="drop"),
+            valid=jnp.zeros((S,), bool).at[sdest].set(True, mode="drop"),
+        )
+        state = state._replace(stats=stats)
+        return (jax.tree.map(lambda x: x[None], state),
+                jax.tree.map(lambda x: x[None], sink))
+
+    sharded = P(AXIS)
+    fn = _shard_map(shard_step, mesh=mesh,
+                    in_specs=(sharded, P(), sharded, sharded),
+                    out_specs=(sharded, sharded),
+                    **_SHARD_MAP_KW)
+    return jax.jit(fn, donate_argnums=(2,) if donate else ())
+
+
+# --------------------------------------------------------------------------
+# host-side wrapper
+# --------------------------------------------------------------------------
+
+class ShardedStreamEngine(StreamEngine):
+    """Drop-in :class:`StreamEngine` running the pub/sub plane sharded over
+    ``cfg.n_shards`` devices.  Public API (post/round/drain/value_of/ts_of/
+    counters/inject_code/rewire) matches the single-device engine."""
+
+    def __init__(self, registry: Registry, *, mesh: Optional[Mesh] = None,
+                 fanout_fn: Callable = fanout_reference,
+                 priority: Optional[np.ndarray] = None):
+        cfg = registry.cfg
+        self.cfg = cfg
+        self.registry = registry
+        if mesh is None:
+            devs = jax.devices()
+            if len(devs) < cfg.n_shards:
+                raise ValueError(
+                    f"n_shards={cfg.n_shards} but only {len(devs)} devices; "
+                    "on CPU set XLA_FLAGS=--xla_force_host_platform_"
+                    "device_count=<n> before importing jax")
+            mesh = Mesh(np.asarray(devs[:cfg.n_shards]), (AXIS,))
+        if AXIS not in mesh.shape or mesh.shape[AXIS] != cfg.n_shards:
+            raise ValueError(
+                f"mesh axes {dict(mesh.shape)} do not provide "
+                f"'{AXIS}'={cfg.n_shards} required by cfg.n_shards")
+        self.mesh = mesh
+        # place everything with its step sharding up front so the jitted
+        # round never re-broadcasts tables/state from one device
+        self._shard = NamedSharding(mesh, P(AXIS))
+        self._repl = NamedSharding(mesh, P())
+        host_tables, self.plan = registry.build_sharded_tables(priority)
+        self.tables = jax.device_put(DeviceTables.from_host(host_tables),
+                                     self._shard)
+        self.gmap = jax.device_put(GlobalMaps.build(priority, self.plan),
+                                   self._repl)
+        self.state = jax.device_put(sharded_init_state(cfg, self.plan),
+                                    self._shard)
+        self._fanout_fn = fanout_fn
+        self._step = make_sharded_step(cfg, self.plan, mesh, fanout_fn)
+        self._pending: List[Tuple[int, np.ndarray, int]] = []
+
+    # -------------------------------------------------------------- ingest
+    def _take_ingest(self) -> IngestBatch:
+        """Admit at most one pending SU per stream (like the base engine),
+        then route each SU to its owner shard, preserving batch order."""
+        batch = StreamEngine._take_ingest(self)
+        B, C, S = self.cfg.batch, self.cfg.channels, self.plan.n_shards
+        # route on the same clipped sid the per-shard step will store to
+        sid = np.clip(np.asarray(batch.sid), 0, self.cfg.n_streams - 1)
+        vals = np.asarray(batch.vals)
+        ts = np.asarray(batch.ts)
+        valid = np.asarray(batch.valid)
+        r_sid = np.zeros((S, B), np.int32)
+        r_vals = np.zeros((S, B, C), np.float32)
+        r_ts = np.zeros((S, B), np.int32)
+        r_valid = np.zeros((S, B), bool)
+        fill = np.zeros((S,), np.int64)
+        for i in np.nonzero(valid)[0]:
+            s = int(self.plan.sid_to_shard[sid[i]])
+            j = fill[s]
+            r_sid[s, j], r_vals[s, j], r_ts[s, j] = sid[i], vals[i], ts[i]
+            r_valid[s, j] = True
+            fill[s] += 1
+        return jax.device_put(
+            IngestBatch(r_sid, r_vals, r_ts, r_valid), self._shard)
+
+    # --------------------------------------------------------------- rounds
+    def round(self) -> SinkBatch:
+        self.state, sink = self._step(self.tables, self.gmap, self.state,
+                                      self._take_ingest())
+        return SinkBatch(*(x.reshape((-1,) + x.shape[2:]) for x in sink))
+
+    # ----------------------------------------------------- code injection
+    def _table_row(self, sid: int):
+        return (int(self.plan.sid_to_shard[sid]),
+                int(self.plan.sid_to_local[sid]))
+
+    def rewire(self) -> None:
+        """Re-lower after subscribe()/new streams.  With the "tenant"
+        partition, newly created streams can change the sid placement; the
+        per-sid state is then permuted into the new layout (queues must be
+        empty — in-flight SUs cannot migrate shards)."""
+        prio = np.asarray(self.gmap.priority)
+        host_tables, new_plan = self.registry.build_sharded_tables(prio)
+        old = self.plan
+        moved = (new_plan.n_local != old.n_local
+                 or (new_plan.sid_to_flat != old.sid_to_flat).any())
+        if moved:
+            if bool(np.asarray(self.state.q_valid).any()) or self._pending:
+                raise ValueError(
+                    "rewire() changed stream placement while SUs are in "
+                    "flight; drain() before rewiring")
+            S, L, C = new_plan.n_shards, new_plan.n_local, self.cfg.channels
+            v = np.zeros((S * L, C), np.float32)
+            ts = np.full((S * L,), INT_MIN, np.int32)
+            v[new_plan.sid_to_flat] = np.asarray(
+                self.state.values).reshape(-1, C)[old.sid_to_flat]
+            ts[new_plan.sid_to_flat] = np.asarray(
+                self.state.timestamps).reshape(-1)[old.sid_to_flat]
+            self.state = jax.device_put(self.state._replace(
+                values=jnp.asarray(v.reshape(S, L, C)),
+                timestamps=jnp.asarray(ts.reshape(S, L))), self._shard)
+            if L != old.n_local:    # step closure is shaped by n_local
+                self._step = make_sharded_step(self.cfg, new_plan, self.mesh,
+                                               self._fanout_fn)
+        self.plan = new_plan
+        self.tables = jax.device_put(DeviceTables.from_host(host_tables),
+                                     self._shard)
+        self.gmap = jax.device_put(GlobalMaps.build(prio, new_plan),
+                                   self._repl)
+
+    # ------------------------------------------------------------- readback
+    def value_of(self, stream) -> np.ndarray:
+        sid = stream.sid if hasattr(stream, "sid") else int(stream)
+        sh, lo = self.plan.sid_to_shard[sid], self.plan.sid_to_local[sid]
+        return np.asarray(self.state.values[sh, lo])
+
+    def ts_of(self, stream) -> int:
+        sid = stream.sid if hasattr(stream, "sid") else int(stream)
+        sh, lo = self.plan.sid_to_shard[sid], self.plan.sid_to_local[sid]
+        return int(self.state.timestamps[sh, lo])
+
+    def counters(self):
+        return {k: int(v.sum()) for k, v in self.state.stats.items()}

@@ -32,7 +32,7 @@ def _scan_kernel(a_ref, bx_ref, c_ref, h0_ref, y_ref, hout_ref, h_scr, *,
     def step(i, h):
         h = a[i] * h + bx[i]               # (Dib, S)
         y = jnp.sum(h * c[i][None, :], axis=-1)          # (Dib,)
-        pl.store(y_ref, (0, pl.dslice(i, 1), slice(None)), y[None, :])
+        y_ref[pl.dslice(0, 1), pl.dslice(i, 1), :] = y[None, None, :]
         return h
 
     h = jax.lax.fori_loop(0, blk_t, step, h_scr[:])

@@ -1,0 +1,9 @@
+"""Force multiple host-platform devices before jax initializes, so the
+sharded-engine tests exercise real multi-device collectives (shard_map,
+all_to_all, all_gather) on CPU.  A pre-set XLA_FLAGS wins."""
+import os
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8").strip()

@@ -14,6 +14,8 @@ oracle that processes one SU at a time exactly as Listing 2 prescribes:
 """
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import EngineConfig, Registry, StreamEngine

@@ -10,6 +10,8 @@ import jax.numpy as jnp
 from repro import configs, optim
 from repro.models import model as M
 
+pytestmark = pytest.mark.slow   # model plane — run with -m "slow or not slow"
+
 ARCHS = configs.list_archs()
 B, L = 2, 32
 

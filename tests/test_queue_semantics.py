@@ -1,0 +1,127 @@
+"""Direct unit coverage for the engine's queue helpers ``_enqueue``/``_pop``
+(previously exercised only indirectly through full engine rounds):
+priority ordering with the seq tiebreaker, overflow drop counting, and
+plain-FIFO behavior when every priority is zero."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import EngineConfig, init_state
+from repro.core.engine import _enqueue, _pop
+
+
+def _cfg(queue=8, batch=4, n_streams=16):
+    return EngineConfig(n_streams=n_streams, batch=batch, queue=queue,
+                        max_in=2, max_out=2)
+
+
+def _put(state, items, n_channels=4):
+    """items: list of (sid, val, ts) — enqueue all as one valid batch."""
+    sid = jnp.asarray([i[0] for i in items], jnp.int32)
+    vals = jnp.asarray([[i[1]] * n_channels for i in items], jnp.float32)
+    ts = jnp.asarray([i[2] for i in items], jnp.int32)
+    mask = jnp.ones((len(items),), bool)
+    return _enqueue(state, sid, vals, ts, mask)
+
+
+def _zero_prio(cfg):
+    return jnp.zeros((cfg.n_streams,), jnp.int32)
+
+
+def test_enqueue_places_items_and_advances_seq():
+    cfg = _cfg()
+    state = init_state(cfg)
+    state, dropped = _put(state, [(3, 1.0, 10), (5, 2.0, 11)])
+    assert int(dropped) == 0
+    assert int(state.q_valid.sum()) == 2
+    assert int(state.seq) == 2
+    live = np.asarray(state.q_sid)[np.asarray(state.q_valid)]
+    assert sorted(live.tolist()) == [3, 5]
+
+
+def test_enqueue_respects_mask():
+    cfg = _cfg()
+    state = init_state(cfg)
+    sid = jnp.asarray([1, 2, 3], jnp.int32)
+    vals = jnp.zeros((3, cfg.channels), jnp.float32)
+    ts = jnp.asarray([5, 6, 7], jnp.int32)
+    mask = jnp.asarray([True, False, True])
+    state, dropped = _enqueue(state, sid, vals, ts, mask)
+    assert int(dropped) == 0
+    assert int(state.q_valid.sum()) == 2
+    assert int(state.seq) == 2          # seq counts only masked items
+    live = sorted(np.asarray(state.q_sid)[np.asarray(state.q_valid)].tolist())
+    assert live == [1, 3]
+
+
+def test_enqueue_overflow_counts_drops():
+    cfg = _cfg(queue=4, batch=4)
+    state = init_state(cfg)
+    state, d1 = _put(state, [(i, float(i), i + 1) for i in range(3)])
+    assert int(d1) == 0
+    state, d2 = _put(state, [(i + 3, 0.0, i + 10) for i in range(3)])
+    assert int(d2) == 2                 # only one free slot remained
+    assert int(state.q_valid.sum()) == 4
+
+
+def test_pop_fifo_with_zero_priorities():
+    cfg = _cfg(queue=8, batch=2)
+    state = init_state(cfg)
+    state, _ = _put(state, [(7, 1.0, 1), (2, 2.0, 2), (9, 3.0, 3)])
+    state, (sid, vals, ts, valid) = _pop(state, _zero_prio(cfg), 2)
+    assert np.asarray(valid).all()
+    assert np.asarray(sid).tolist() == [7, 2]      # insertion order, not sid
+    state, (sid2, _, _, valid2) = _pop(state, _zero_prio(cfg), 2)
+    assert np.asarray(sid2)[0] == 9 and bool(valid2[0])
+    assert not bool(valid2[1])                     # queue exhausted
+    assert int(state.q_valid.sum()) == 0
+
+
+def test_pop_priority_order_lowest_first():
+    cfg = _cfg(queue=8, batch=3)
+    prio = jnp.asarray(np.arange(cfg.n_streams)[::-1].copy(), jnp.int32)
+    # priority[sid] = 15 - sid  ->  highest sid served first
+    state = init_state(cfg)
+    state, _ = _put(state, [(1, 0.0, 1), (8, 0.0, 2), (4, 0.0, 3)])
+    state, (sid, _, _, valid) = _pop(state, prio, 3)
+    assert np.asarray(valid).all()
+    assert np.asarray(sid).tolist() == [8, 4, 1]
+
+
+def test_pop_priority_tie_breaks_by_seq():
+    cfg = _cfg(queue=8, batch=4)
+    prio = jnp.zeros((cfg.n_streams,), jnp.int32).at[5].set(1)
+    state = init_state(cfg)
+    state, _ = _put(state, [(5, 0.0, 1), (3, 0.0, 2), (5, 0.0, 3), (2, 0.0, 4)])
+    state, (sid, _, ts, valid) = _pop(state, prio, 4)
+    assert np.asarray(valid).all()
+    # priority-0 items first in FIFO order, then the two sid-5 items in
+    # their own enqueue (seq) order
+    assert np.asarray(sid).tolist() == [3, 2, 5, 5]
+    assert np.asarray(ts).tolist() == [2, 4, 1, 3]
+
+
+def test_pop_then_enqueue_reuses_slots():
+    cfg = _cfg(queue=4, batch=4)
+    state = init_state(cfg)
+    state, _ = _put(state, [(i, 0.0, i + 1) for i in range(4)])
+    state, (_, _, _, valid) = _pop(state, _zero_prio(cfg), 2)
+    assert int(np.asarray(valid).sum()) == 2
+    state, dropped = _put(state, [(10, 0.0, 9), (11, 0.0, 10)])
+    assert int(dropped) == 0
+    assert int(state.q_valid.sum()) == 4
+
+
+def test_enqueue_overflow_respects_mask_only():
+    """Unmasked lanes never consume slots nor count as drops."""
+    cfg = _cfg(queue=2, batch=2)
+    state = init_state(cfg)
+    sid = jnp.asarray([1, 2, 3, 4], jnp.int32)
+    vals = jnp.zeros((4, cfg.channels), jnp.float32)
+    ts = jnp.asarray([1, 2, 3, 4], jnp.int32)
+    mask = jnp.asarray([True, False, True, True])
+    state, dropped = _enqueue(state, sid, vals, ts, mask)
+    assert int(dropped) == 1                       # 3 masked, 2 slots
+    live = sorted(np.asarray(state.q_sid)[np.asarray(state.q_valid)].tolist())
+    assert live == [1, 3]

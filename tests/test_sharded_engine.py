@@ -1,0 +1,323 @@
+"""Sharded stream engine: bit-exact equivalence with the single-device
+engine on randomized multi-tenant topologies with cross-shard
+subscriptions, exchange-buffer overflow accounting, and partitioner
+invariants.  Runs on CPU via forced host-platform devices (conftest)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import EngineConfig, Registry, StreamEngine, create_engine
+from repro.distributed.stream_sharding import (ShardedStreamEngine,
+                                               plan_partition)
+
+N_DEV = len(jax.devices())
+
+
+def _require(n_shards):
+    if N_DEV < n_shards:
+        pytest.skip(f"needs {n_shards} devices, have {N_DEV}")
+
+
+# --------------------------------------------------------------------------
+# randomized multi-tenant topology builder
+# --------------------------------------------------------------------------
+
+def _random_registry(cfg: EngineConfig, seed: int, n_tenants: int = 3,
+                     n_nodes: int = 24, n_sources: int = 10):
+    """Random DAG over several tenants; with a block partition the sid
+    interleaving guarantees plenty of cross-shard subscriptions."""
+    rng = np.random.default_rng(seed)
+    reg = Registry(cfg)
+    tenants = [reg.create_tenant(f"t{i}") for i in range(n_tenants)]
+    nodes = []
+    for v in range(n_nodes):
+        ten = tenants[int(rng.integers(n_tenants))]
+        if v < n_sources:
+            nodes.append(reg.create_stream(ten, f"s{v}", ["v"]))
+            continue
+        k = int(rng.integers(1, min(cfg.max_in, v) + 1))
+        ins = sorted(rng.choice(v, size=k, replace=False).tolist())
+        # respect max_out on the chosen sources
+        ins = [u for u in ins
+               if sum(1 for s in reg.streams
+                      if s.composite and u in s.inputs) < cfg.max_out]
+        if not ins:
+            ins = [v - 1]
+        srcs = [nodes[u] for u in ins]
+        expr = " + ".join(f"in{j}.v" for j in range(len(srcs)))
+        kw = {}
+        if rng.random() < 0.3:
+            kw["post_filter"] = "out.v < 1e6"   # mostly-pass filter
+        nodes.append(reg.create_composite(
+            ten, f"c{v}", ["v"], srcs, transform={"v": expr + " + 1"}, **kw))
+    return reg, nodes
+
+
+def _posts(nodes, seed, waves=4):
+    """Random SU schedule: several waves of posts with strictly increasing
+    timestamps plus deliberate same-ts cross-posts (coalescing ties)."""
+    rng = np.random.default_rng(seed + 1000)
+    sources = [n for n in nodes if not n.composite]
+    sched = []
+    ts = 1
+    for _ in range(waves):
+        wave = []
+        k = int(rng.integers(2, len(sources) + 1))
+        for s in rng.choice(len(sources), size=k, replace=False):
+            wave.append((sources[s], [float(rng.integers(-50, 50))], ts))
+        # a same-ts pair on two different sources -> equal-ts_out ties
+        if len(sources) >= 2:
+            a, b = rng.choice(len(sources), size=2, replace=False)
+            wave.append((sources[a], [float(rng.integers(-9, 9))], ts + 1))
+            wave.append((sources[b], [float(rng.integers(-9, 9))], ts + 1))
+        sched.append(wave)
+        ts += int(rng.integers(2, 5))
+    return sched
+
+
+def _run(engine, sched):
+    for wave in sched:
+        for stream, vals, ts in wave:
+            engine.post(stream, vals, ts)
+        engine.drain(max_rounds=256)
+
+
+def _global_state(eng):
+    """(values, timestamps) in global-sid order for either engine kind."""
+    if isinstance(eng, ShardedStreamEngine):
+        plan = eng.plan
+        v = np.asarray(eng.state.values).reshape(
+            plan.n_shards * plan.n_local, -1)[plan.sid_to_flat]
+        t = np.asarray(eng.state.timestamps).reshape(-1)[plan.sid_to_flat]
+        return v, t
+    return np.asarray(eng.state.values), np.asarray(eng.state.timestamps)
+
+
+# --------------------------------------------------------------------------
+# equivalence
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4, 8])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_sharded_equals_single_device(n_shards, seed):
+    _require(n_shards)
+    n_nodes = 24
+    base = EngineConfig(n_streams=n_nodes, n_tenants=4, batch=2 * n_nodes,
+                        queue=8 * n_nodes, max_in=4, max_out=4,
+                        prog_len=24, n_temps=12)
+    reg1, nodes1 = _random_registry(base, seed)
+    e1 = create_engine(reg1)
+    assert type(e1) is StreamEngine
+
+    cfgS = dataclasses.replace(base, n_shards=n_shards)
+    regS, nodesS = _random_registry(cfgS, seed)
+    eS = create_engine(regS)
+    if n_shards > 1:
+        assert isinstance(eS, ShardedStreamEngine)
+
+    sched1, schedS = _posts(nodes1, seed), _posts(nodesS, seed)
+    _run(e1, sched1)
+    _run(eS, schedS)
+
+    v1, t1 = _global_state(e1)
+    vS, tS = _global_state(eS)
+    np.testing.assert_array_equal(t1, tS)
+    np.testing.assert_array_equal(v1, vS)       # bit-identical, not approx
+    assert e1.counters() == eS.counters()
+    te1 = np.asarray(e1.state.tenant_emitted)
+    teS = np.asarray(eS.state.tenant_emitted)
+    if teS.ndim == 2:
+        teS = teS.sum(axis=0)
+    np.testing.assert_array_equal(te1, teS)
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_tenant_partition_equivalence(n_shards):
+    _require(n_shards)
+    seed = 7
+    base = EngineConfig(n_streams=24, n_tenants=4, batch=48, queue=192,
+                        max_in=4, max_out=4, prog_len=24, n_temps=12)
+    reg1, nodes1 = _random_registry(base, seed)
+    e1 = create_engine(reg1)
+    cfgS = dataclasses.replace(base, n_shards=n_shards, partition="tenant")
+    regS, nodesS = _random_registry(cfgS, seed)
+    eS = create_engine(regS)
+    _run(e1, _posts(nodes1, seed))
+    _run(eS, _posts(nodesS, seed))
+    v1, t1 = _global_state(e1)
+    vS, tS = _global_state(eS)
+    np.testing.assert_array_equal(t1, tS)
+    np.testing.assert_array_equal(v1, vS)
+    assert e1.counters() == eS.counters()
+
+
+def test_cross_shard_pipeline_values():
+    """Deterministic 3-hop pipeline deliberately spanning shards: with a
+    block partition of 16 sids over 2 shards, c8/c9 live on shard 1 and
+    subscribe to sid 0/8 — every hop crosses the exchange."""
+    _require(2)
+    cfg = EngineConfig(n_streams=16, batch=16, queue=64, max_in=2, max_out=2,
+                       n_shards=2)
+    reg = Registry(cfg)
+    t = reg.create_tenant("t")
+    a = reg.create_stream(t, "a", ["v"])                       # sid 0, shard 0
+    pads = [reg.create_stream(t, f"p{i}", ["v"]) for i in range(7)]  # 1..7
+    f = reg.create_composite(t, "f", ["v"], [a],
+                             transform={"v": "a.v + 1"})       # sid 8, shard 1
+    g = reg.create_composite(t, "g", ["v"], [f],
+                             transform={"v": "f.v * 2"})       # sid 9, shard 1
+    eng = create_engine(reg)
+    assert eng.plan.sid_to_shard[a.sid] == 0
+    assert eng.plan.sid_to_shard[f.sid] == 1
+    eng.post(a, [3.0], ts=1)
+    eng.drain()
+    assert eng.value_of(f)[0] == 4.0
+    assert eng.value_of(g)[0] == 8.0
+    assert eng.ts_of(g) == 1
+    c = eng.counters()
+    assert c["emitted"] == 2 and c["dropped_overflow"] == 0
+    del pads
+
+
+# --------------------------------------------------------------------------
+# exchange-buffer overflow
+# --------------------------------------------------------------------------
+
+def test_exchange_overflow_counted_not_silent():
+    """One source on shard 0 fans out to 6 subscribers on shard 1; with
+    exchange_slots=2 only 2 work items cross, the other 4 must be counted
+    in dropped_overflow (never silently lost)."""
+    _require(2)
+    cfg = EngineConfig(n_streams=16, batch=16, queue=64, max_in=1, max_out=6,
+                       n_shards=2, exchange_slots=2)
+    reg = Registry(cfg)
+    t = reg.create_tenant("t")
+    a = reg.create_stream(t, "a", ["v"])                       # sid 0, shard 0
+    pads = [reg.create_stream(t, f"p{i}", ["v"]) for i in range(7)]  # 1..7
+    subs = [reg.create_composite(t, f"c{i}", ["v"], [a],
+                                 transform={"v": "a.v + 1"})
+            for i in range(6)]                                 # sids 8..13
+    eng = create_engine(reg)
+    eng.post(a, [1.0], ts=1)
+    eng.drain()
+    c = eng.counters()
+    assert c["dropped_overflow"] == 4
+    assert c["emitted"] == 2
+    delivered = sum(1 for s in subs if eng.ts_of(s) == 1)
+    assert delivered == 2
+    del pads
+
+
+def test_no_overflow_with_default_capacity():
+    _require(2)
+    cfg = EngineConfig(n_streams=16, batch=16, queue=64, max_in=1, max_out=6,
+                       n_shards=2)                 # exchange defaults to work
+    reg = Registry(cfg)
+    t = reg.create_tenant("t")
+    a = reg.create_stream(t, "a", ["v"])
+    for i in range(7):
+        reg.create_stream(t, f"p{i}", ["v"])
+    subs = [reg.create_composite(t, f"c{i}", ["v"], [a],
+                                 transform={"v": "a.v + 1"})
+            for i in range(6)]
+    eng = create_engine(reg)
+    eng.post(a, [1.0], ts=1)
+    eng.drain()
+    c = eng.counters()
+    assert c["dropped_overflow"] == 0 and c["emitted"] == 6
+    assert all(eng.ts_of(s) == 1 for s in subs)
+
+
+# --------------------------------------------------------------------------
+# partitioner invariants + live injection on shards
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("partition", ["block", "tenant"])
+@pytest.mark.parametrize("n_shards", [1, 2, 3, 8])
+def test_plan_partition_is_bijective(partition, n_shards):
+    cfg = EngineConfig(n_streams=37, n_tenants=5, n_shards=n_shards,
+                       partition=partition)
+    tenant = np.arange(37) % 5
+    plan = plan_partition(cfg, tenant)
+    assert plan.n_shards == n_shards
+    flat = plan.sid_to_flat
+    assert len(np.unique(flat)) == 37               # injective placement
+    assert (plan.sid_to_shard < n_shards).all()
+    assert (plan.sid_to_local < plan.n_local).all()
+    back = plan.local_to_sid[plan.sid_to_shard, plan.sid_to_local]
+    np.testing.assert_array_equal(back, np.arange(37))
+    if partition == "tenant":
+        np.testing.assert_array_equal(plan.sid_to_shard, tenant % n_shards)
+
+
+def test_tenant_rewire_remaps_state():
+    """Under the tenant partition, creating a stream for a new tenant can
+    move sid placement; rewire() must carry values/timestamps into the new
+    layout (and refuse while SUs are in flight)."""
+    _require(2)
+    cfg = EngineConfig(n_streams=12, n_tenants=4, batch=12, queue=48,
+                       max_in=2, max_out=2, n_shards=2, partition="tenant")
+    reg = Registry(cfg)
+    t0 = reg.create_tenant("even")           # tid 0 -> shard 0
+    t1 = reg.create_tenant("odd")            # tid 1 -> shard 1
+    a = reg.create_stream(t0, "a", ["v"])
+    x = reg.create_composite(t0, "x", ["v"], [a], transform={"v": "a.v * 3"})
+    eng = create_engine(reg)
+    eng.post(a, [2.0], ts=1)
+    eng.drain()
+    assert eng.value_of(x)[0] == 6.0
+    old_plan = eng.plan
+    # unused sids default to tenant 0 (shard 0); giving sid 2 to tenant 1
+    # moves it to shard 1 and shifts the layout
+    b = reg.create_stream(t1, "b", ["v"])
+    reg.subscribe(x, b)
+    eng.rewire()
+    eng.inject_code(x, {"v": "a.v * 3 + b.v"})
+    assert (np.asarray(eng.plan.sid_to_flat)
+            != np.asarray(old_plan.sid_to_flat)).any()
+    assert eng.value_of(x)[0] == 6.0         # state survived the remap
+    assert eng.ts_of(a) == 1
+    eng.post(b, [10.0], ts=2)
+    eng.drain()
+    assert eng.value_of(x)[0] == 16.0        # 2*3 + 10, cross-shard input
+
+
+def test_rewire_in_flight_refused():
+    _require(2)
+    cfg = EngineConfig(n_streams=12, n_tenants=4, batch=12, queue=48,
+                       max_in=2, max_out=2, n_shards=2, partition="tenant")
+    reg = Registry(cfg)
+    t0 = reg.create_tenant("even")
+    t1 = reg.create_tenant("odd")
+    a = reg.create_stream(t0, "a", ["v"])
+    eng = create_engine(reg)
+    eng.post(a, [1.0], ts=1)                 # pending, not drained
+    reg.create_stream(t1, "b", ["v"])        # placement will move
+    with pytest.raises(ValueError, match="in *flight|drain"):
+        eng.rewire()
+
+
+def test_sharded_inject_code_live():
+    _require(2)
+    cfg = EngineConfig(n_streams=16, batch=16, queue=64, max_in=2, max_out=2,
+                       n_shards=2)
+    reg = Registry(cfg)
+    t = reg.create_tenant("t")
+    a = reg.create_stream(t, "a", ["f"])
+    for i in range(7):
+        reg.create_stream(t, f"p{i}", ["f"])
+    cel = reg.create_composite(t, "c", ["c"], [a],
+                               transform={"c": "(a.f - 32) * 5 / 9"})
+    eng = create_engine(reg)
+    step = eng._step
+    eng.post(a, [212.0], ts=1)
+    eng.drain()
+    assert abs(eng.value_of(cel)[0] - 100.0) < 1e-3
+    eng.inject_code(cel, {"c": "(a.f - 32) * 5 / 9 + 273.15"})
+    eng.post(a, [212.0], ts=2)
+    eng.drain()
+    assert abs(eng.value_of(cel)[0] - 373.15) < 1e-3
+    assert eng._step is step        # tables changed, compiled step did not

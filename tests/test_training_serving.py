@@ -14,6 +14,8 @@ from repro.models import model as M
 from repro.serving import ContinuousBatcher, ModelBackedStreams, Request
 from repro.training import TrainConfig, Trainer
 
+pytestmark = pytest.mark.slow   # model plane — run with -m "slow or not slow"
+
 TINY = dataclasses.replace(
     configs.get_smoke("minitron-8b"),
     n_layers=2, d_model=64, d_ff=128, vocab=128)

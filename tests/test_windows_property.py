@@ -5,6 +5,9 @@ round-trips engine state exactly."""
 import collections
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
