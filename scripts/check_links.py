@@ -1,0 +1,67 @@
+#!/usr/bin/env python
+"""Check that intra-repo markdown links resolve. Stdlib only, CI-cheap.
+
+Walks every ``*.md`` under the repo (skipping VCS/cache dirs), extracts
+inline links/images ``[text](target)``, and verifies that relative targets
+exist on disk (anchors are stripped; external ``http(s)://``/``mailto:``
+and pure in-page ``#anchor`` links are ignored). Exits non-zero listing
+every broken link.
+
+    python scripts/check_links.py [root]
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+SKIP_DIRS = {".git", ".pytest_cache", "__pycache__", ".claude",
+             "node_modules", ".venv"}
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def md_files(root: str):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        for f in filenames:
+            if f.endswith(".md"):
+                yield os.path.join(dirpath, f)
+
+
+def check(root: str):
+    broken = []
+    n_links = 0
+    for path in sorted(md_files(root)):
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(EXTERNAL) or target.startswith("#"):
+                continue
+            n_links += 1
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), rel))
+            if not os.path.exists(resolved):
+                line = text[:m.start()].count("\n") + 1
+                broken.append((os.path.relpath(path, root), line, target))
+    return n_links, broken
+
+
+def main():
+    root = sys.argv[1] if len(sys.argv) > 1 else \
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    n_links, broken = check(root)
+    if broken:
+        for path, line, target in broken:
+            print(f"BROKEN  {path}:{line}  -> {target}")
+        print(f"{len(broken)} broken of {n_links} intra-repo links")
+        sys.exit(1)
+    print(f"ok: {n_links} intra-repo markdown links resolve")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,4 +10,7 @@ __all__ = [
     "EngineConfig", "Registry", "Stream", "Tenant", "StreamEngine",
     "DeviceTables", "EngineState", "IngestBatch", "SinkBatch",
     "init_state", "make_step", "PipelineGraph", "create_engine",
+    "admission",
 ]
+
+from repro.core import admission  # noqa: E402  (jitted table-edit ops)

@@ -1,0 +1,220 @@
+"""Dynamic admission plane: live topology churn as pure table edits.
+
+The paper's runtime "dynamically construct[s] data stream processing
+topologies ... on-the-fly using a data subscription model" — tenants
+subscribe and unsubscribe continuously while the STORM topology keeps
+running.  Our engine's compiled round is a *static* XLA program, so churn
+must never retrace it.  This module provides the device half of that
+contract: every admission/revocation is a **jitted table-edit op** over the
+same :class:`~repro.core.engine.DeviceTables` / ``EngineState`` arrays the
+round consumes —
+
+    admit_stream         claim a spare (``active=False``) row: flags,
+                         tenant, priority, VM program; reset its state slice
+    revoke_stream        clear the row, scrub every subscription edge that
+                         references the sid, purge its queued SUs (counted
+                         in ``stats["dropped_revoked"]``)
+    admit_subscription   append one edge: a slot in the target's in-table +
+                         the source's fan-out table (dedup on the out side,
+                         exactly like :meth:`Registry.build_tables`)
+    revoke_subscription  remove one edge occurrence; drop the fan-out entry
+                         once no occurrence remains
+    swap_program         replace a composite's VM bytecode + constant pool
+                         (the op behind ``StreamEngine.inject_code``)
+    migrate_row          move a row (tables + state slice) to another
+                         physical slot — the sharded engine's ``rebalance``
+    reset_windows        clear a stream's ring buffer in a
+                         :class:`~repro.core.windows.WindowStore`
+
+All ops address rows by an *index tuple*: ``(sid,)`` on a single device,
+``(shard, local)`` against the sharded tables — the same code traces once
+per engine layout and is cached thereafter.  Host-side bookkeeping (sid
+allocation, quota checks, shard placement) lives in
+:class:`~repro.core.registry.Registry` and the engine wrappers; the ops
+here are pure functions of device arrays, O(table-edit), and — because the
+tables are *data* to the compiled round — admitting a tenant mid-flight
+costs exactly one table edit and **zero recompilations**.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import INT_MIN, DeviceTables, EngineState
+
+# fill value of each table field for a vacated row (matches the images
+# Registry.build_tables produces for rows no stream occupies)
+_TABLE_FILL = {
+    "in_table": -1, "in_count": 0, "out_table": -1, "out_count": 0,
+    "progs": 0, "consts": 0.0, "is_composite": False, "tenant": 0,
+    "priority": 0, "n_channels": 1, "model_backed": False, "active": False,
+}
+_STATE_FILL = {"values": 0.0, "timestamps": INT_MIN}
+
+
+def _clear_row(tables: DeviceTables, row: Tuple) -> DeviceTables:
+    return tables._replace(**{
+        f: getattr(tables, f).at[row].set(_TABLE_FILL[f])
+        for f in DeviceTables._fields})
+
+
+def _reset_state_row(state: EngineState, row: Tuple) -> EngineState:
+    return state._replace(
+        values=state.values.at[row].set(0.0),
+        timestamps=state.timestamps.at[row].set(INT_MIN))
+
+
+# --------------------------------------------------------------------------
+# the ops
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def admit_stream(tables: DeviceTables, state: EngineState, row: Tuple,
+                 tenant, n_channels, is_composite, model_backed, priority,
+                 prog, consts) -> Tuple[DeviceTables, EngineState]:
+    """Claim a spare table row for a newly admitted stream.
+
+    The row's subscription slots start empty — edges are wired afterwards
+    with :func:`admit_subscription`, reproducing the exact append order of
+    a from-scratch ``build_tables``.  The state slice is reset so a
+    readmission of a recycled sid never sees its predecessor's values."""
+    tables = _clear_row(tables, row)._replace(
+        active=tables.active.at[row].set(True),
+        tenant=tables.tenant.at[row].set(tenant),
+        n_channels=tables.n_channels.at[row].set(n_channels),
+        is_composite=tables.is_composite.at[row].set(is_composite),
+        model_backed=tables.model_backed.at[row].set(model_backed),
+        priority=tables.priority.at[row].set(priority),
+        progs=tables.progs.at[row].set(prog),
+        consts=tables.consts.at[row].set(consts),
+    )
+    return tables, _reset_state_row(state, row)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def revoke_stream(tables: DeviceTables, state: EngineState, row: Tuple,
+                  sid) -> Tuple[DeviceTables, EngineState]:
+    """Remove a stream: clear its row, sever every edge referencing ``sid``
+    (subscribers keep running on their remaining inputs), and purge its
+    queued SUs into ``stats["dropped_revoked"]`` so in-flight work drops
+    cleanly instead of firing into a recycled row."""
+    in_scrub = jnp.where(tables.in_table == sid, -1, tables.in_table)
+    out_scrub = jnp.where(tables.out_table == sid, -1, tables.out_table)
+    tables = tables._replace(
+        in_table=in_scrub,
+        in_count=(in_scrub >= 0).sum(axis=-1).astype(jnp.int32),
+        out_table=out_scrub,
+        out_count=(out_scrub >= 0).sum(axis=-1).astype(jnp.int32),
+    )
+    tables = _clear_row(tables, row)
+
+    hit = state.q_valid & (state.q_sid == sid)
+    stats = dict(state.stats)
+    stats["dropped_revoked"] = stats["dropped_revoked"] + \
+        hit.sum(axis=-1, dtype=jnp.int32)
+    state = _reset_state_row(state, row)._replace(
+        q_valid=state.q_valid & ~hit, stats=stats)
+    return tables, state
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def admit_subscription(tables: DeviceTables, target_row: Tuple,
+                       src_row: Tuple, target_sid, src_sid
+                       ) -> Tuple[DeviceTables, jnp.ndarray]:
+    """Append one subscription edge ``src -> target``.
+
+    Writes ``src_sid`` into the target's first free in-table slot and
+    ``target_sid`` into the source's first free fan-out slot (skipped when
+    already present — the out side is deduplicated, matching
+    ``build_tables``).  Returns ``(tables, ok)``; ``ok`` is False when
+    either side is out of slots or a row is inactive (the edit is then a
+    no-op, and the host counts the rejection)."""
+    in_row = tables.in_table[target_row]                       # (M,)
+    out_row = tables.out_table[src_row]                        # (F,)
+    in_free = in_row < 0
+    out_free = out_row < 0
+    dup_out = (out_row == target_sid).any()
+    ok = (in_free.any() & (dup_out | out_free.any())
+          & tables.active[target_row] & tables.active[src_row])
+
+    M, F = in_row.shape[0], out_row.shape[0]
+    new_in = jnp.where((jnp.arange(M) == jnp.argmax(in_free)) & ok,
+                       src_sid, in_row)
+    write_out = ok & ~dup_out
+    new_out = jnp.where((jnp.arange(F) == jnp.argmax(out_free)) & write_out,
+                        target_sid, out_row)
+    tables = tables._replace(
+        in_table=tables.in_table.at[target_row].set(new_in),
+        out_table=tables.out_table.at[src_row].set(new_out),
+        in_count=tables.in_count.at[target_row].add(ok.astype(jnp.int32)),
+        out_count=tables.out_count.at[src_row].add(
+            write_out.astype(jnp.int32)),
+    )
+    return tables, ok
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def revoke_subscription(tables: DeviceTables, target_row: Tuple,
+                        src_row: Tuple, target_sid, src_sid
+                        ) -> Tuple[DeviceTables, jnp.ndarray]:
+    """Remove one occurrence of the edge ``src -> target``; the source's
+    fan-out entry is dropped only when no occurrence remains (duplicate
+    inputs are legal).  Returns ``(tables, removed)``."""
+    in_row = tables.in_table[target_row]
+    match = in_row == src_sid
+    removed = match.any()
+    M = in_row.shape[0]
+    new_in = jnp.where((jnp.arange(M) == jnp.argmax(match)) & removed,
+                       -1, in_row)
+    clear_out = removed & ~(new_in == src_sid).any()
+    out_row = tables.out_table[src_row]
+    hit_out = (out_row == target_sid) & clear_out
+    new_out = jnp.where(hit_out, -1, out_row)
+    tables = tables._replace(
+        in_table=tables.in_table.at[target_row].set(new_in),
+        out_table=tables.out_table.at[src_row].set(new_out),
+        in_count=tables.in_count.at[target_row].add(
+            -removed.astype(jnp.int32)),
+        out_count=tables.out_count.at[src_row].add(
+            -hit_out.any().astype(jnp.int32)),
+    )
+    return tables, removed
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def swap_program(tables: DeviceTables, row: Tuple, prog, consts
+                 ) -> DeviceTables:
+    """Replace a composite stream's VM bytecode + constant pool in place —
+    user-code injection (paper §IV-F) as a pure table edit."""
+    return tables._replace(
+        progs=tables.progs.at[row].set(prog),
+        consts=tables.consts.at[row].set(consts))
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def migrate_row(tables: DeviceTables, state: EngineState, src_row: Tuple,
+                dst_row: Tuple) -> Tuple[DeviceTables, EngineState]:
+    """Move one stream's table row and state slice to another physical
+    slot (cross-shard under the sharded layout), leaving the source slot
+    vacated.  The queue is untouched: callers drain before migrating."""
+    moved_t = {}
+    for f in DeviceTables._fields:
+        arr = getattr(tables, f)
+        arr = arr.at[dst_row].set(arr[src_row])
+        moved_t[f] = arr.at[src_row].set(_TABLE_FILL[f])
+    moved_s = {}
+    for f, fill in _STATE_FILL.items():
+        arr = getattr(state, f)
+        arr = arr.at[dst_row].set(arr[src_row])
+        moved_s[f] = arr.at[src_row].set(fill)
+    return tables._replace(**moved_t), state._replace(**moved_s)
+
+
+def reset_windows(store, sid):
+    """Clear stream ``sid``'s ring buffer (revoke / readmit of a stream
+    that feeds a :class:`~repro.core.windows.WindowStore`)."""
+    from repro.core.windows import reset_rows
+    return reset_rows(store, sid)

@@ -82,6 +82,20 @@ class EngineConfig:
         per-destination traffic and watch ``stats["dropped_overflow"]``."""
         return self.exchange_slots if self.exchange_slots > 0 else self.work
 
+    def padded(self, max_streams: int = None, max_subs: int = None
+               ) -> "EngineConfig":
+        """Capacity-padded copy for the dynamic admission plane: room for
+        ``max_streams`` stream rows and ``max_subs`` subscriptions per edge
+        direction (in-degree and out-degree).  The engine compiled for the
+        padded config admits/revokes tenants into the spare rows as pure
+        table edits (:mod:`repro.core.admission`) — never recompiling."""
+        return dataclasses.replace(
+            self,
+            n_streams=max(self.n_streams, max_streams or 0),
+            max_in=max(self.max_in, max_subs or 0),
+            max_out=max(self.max_out, max_subs or 0),
+        )
+
     def validate(self) -> "EngineConfig":
         assert self.n_streams >= 2 and self.channels >= 1
         assert self.max_in >= 1 and self.max_out >= 1

@@ -29,7 +29,7 @@ import numpy as np
 
 from repro.core import consistency, program as pvm
 from repro.core.config import EngineConfig
-from repro.core.registry import EngineTables, Registry
+from repro.core.registry import CapacityError, EngineTables, Registry
 
 INT_MIN = np.iinfo(np.int32).min + 1
 INT_MAX = np.iinfo(np.int32).max
@@ -47,6 +47,7 @@ class DeviceTables(NamedTuple):
     priority: jnp.ndarray
     n_channels: jnp.ndarray
     model_backed: jnp.ndarray
+    active: jnp.ndarray        # live-row mask; admission flips it on device
 
     @classmethod
     def from_host(cls, t: EngineTables) -> "DeviceTables":
@@ -86,6 +87,7 @@ STAT_KEYS = (
     "ingested", "ingest_stale", "ingest_coalesced",
     "processed", "discarded_stale", "filtered", "coalesced",
     "emitted", "enqueued", "dropped_overflow", "nonfinite",
+    "dropped_revoked",
 )
 
 
@@ -143,6 +145,82 @@ def _pop(state: EngineState, priority_by_sid: jnp.ndarray, batch: int):
     popped = (state.q_sid[take], state.q_vals[take], state.q_ts[take], pvalid)
     state = state._replace(q_valid=state.q_valid.at[take].set(False))
     return state, popped
+
+
+# --------------------------------------------------------------------------
+# phase 0 / stage 4 — shared by the single-device and sharded steps
+# --------------------------------------------------------------------------
+
+def ingest_phase(state: EngineState, stats: Dict[str, jnp.ndarray],
+                 ingest: IngestBatch,
+                 row: jnp.ndarray,          # (B,) rows into values/timestamps
+                 q_sid: jnp.ndarray,        # (B,) ids to enqueue (global sids)
+                 active: jnp.ndarray,       # (B,) row active mask
+                 n_rows: int,
+                 ) -> Tuple[EngineState, Dict[str, jnp.ndarray]]:
+    """Phase 0: admit external SUs — store last-value/timestamp, enqueue for
+    dispatch.  On a single device ``row == q_sid == sid``; the sharded step
+    stores to shard-local rows but queues global sids.  SUs addressed to
+    revoked rows are dropped into ``dropped_revoked``."""
+    i_live = ingest.valid & active
+    i_keep = i_live & (ingest.ts > state.timestamps[row])
+    i_win = consistency.resolve_winners(row, ingest.ts, i_keep, n_rows)
+    i_dest = jnp.where(i_win, row, n_rows)
+    state = state._replace(
+        values=state.values.at[i_dest].set(ingest.vals, mode="drop"),
+        timestamps=state.timestamps.at[i_dest].set(ingest.ts, mode="drop"),
+    )
+    stats["ingested"] += ingest.valid.sum(dtype=jnp.int32)
+    stats["dropped_revoked"] += (ingest.valid & ~active).sum(dtype=jnp.int32)
+    stats["ingest_stale"] += (i_live & ~i_keep).sum(dtype=jnp.int32)
+    stats["ingest_coalesced"] += (i_keep & ~i_win).sum(dtype=jnp.int32)
+    state, dropped = _enqueue(state, q_sid, ingest.vals, ingest.ts, i_win)
+    stats["dropped_overflow"] += dropped
+    return state, stats
+
+
+def store_and_emit(cfg: EngineConfig, tables: DeviceTables,
+                   state: EngineState, stats: Dict[str, jnp.ndarray],
+                   rows: jnp.ndarray,       # (W,) target rows (in-range)
+                   emit_sid: jnp.ndarray,   # (W,) target ids for queue/sink
+                   order: jnp.ndarray,      # (W,) coalescing tie key (trigger)
+                   new_vals: jnp.ndarray, ts_out: jnp.ndarray,
+                   keep: jnp.ndarray, n_rows: int,
+                   ) -> Tuple[EngineState, Dict[str, jnp.ndarray], SinkBatch]:
+    """Stage 4: coalesce winners, store them, account per-tenant emissions,
+    re-enqueue winners that have subscribers, and fill the external sink
+    buffer.  ``rows`` index this engine's state slice (== ``emit_sid`` on a
+    single device; shard-local rows in the sharded step)."""
+    S, C = cfg.sink_buffer, cfg.channels
+    win = consistency.resolve_winners(rows, ts_out, keep, n_rows, order=order)
+    stats["coalesced"] += (keep & ~win).sum(dtype=jnp.int32)
+    stats["emitted"] += win.sum(dtype=jnp.int32)
+    dest = jnp.where(win, rows, n_rows)
+    state = state._replace(
+        values=state.values.at[dest].set(new_vals, mode="drop"),
+        timestamps=state.timestamps.at[dest].set(ts_out, mode="drop"),
+        tenant_emitted=state.tenant_emitted.at[
+            jnp.where(win, tables.tenant[rows], cfg.n_tenants)
+        ].add(1, mode="drop"),
+    )
+
+    # re-dispatch winners that themselves have subscribers
+    fanout_more = win & (tables.out_count[rows] > 0)
+    state, dropped = _enqueue(state, emit_sid, new_vals, ts_out, fanout_more)
+    stats["dropped_overflow"] += dropped
+    stats["enqueued"] += fanout_more.sum(dtype=jnp.int32)
+
+    # external sink buffer: first `sink_buffer` winners this round
+    sink_rank = jnp.cumsum(win.astype(jnp.int32)) - 1
+    sdest = jnp.where(win & (sink_rank < S), sink_rank, S)
+    sink = SinkBatch(
+        sid=jnp.zeros((S,), jnp.int32).at[sdest].set(emit_sid, mode="drop"),
+        vals=jnp.zeros((S, C), jnp.float32).at[sdest].set(new_vals,
+                                                          mode="drop"),
+        ts=jnp.zeros((S,), jnp.int32).at[sdest].set(ts_out, mode="drop"),
+        valid=jnp.zeros((S,), bool).at[sdest].set(True, mode="drop"),
+    )
+    return state, stats, sink
 
 
 # --------------------------------------------------------------------------
@@ -223,7 +301,7 @@ def process_work_items(
 
     keep_ts = consistency.keep_mask(wi_ts, prev_ts)
     ts_out = consistency.output_timestamp(wi_ts, prev_ts, ts_in, in_valid)
-    live = wi_valid & tables.is_composite[rows]
+    live = wi_valid & tables.is_composite[rows] & tables.active[rows]
     keep = live & keep_ts & pref & postf
     counts = {
         "processed": live.sum(dtype=jnp.int32),
@@ -256,21 +334,15 @@ def make_step(
 
         # ---- phase 0: ingest external SUs (store + enqueue) -------------
         i_sid = jnp.clip(ingest.sid, 0, N - 1)
-        i_keep = ingest.valid & (ingest.ts > state.timestamps[i_sid])
-        i_win = consistency.resolve_winners(i_sid, ingest.ts, i_keep, N)
-        i_dest = jnp.where(i_win, i_sid, N)
-        state = state._replace(
-            values=state.values.at[i_dest].set(ingest.vals, mode="drop"),
-            timestamps=state.timestamps.at[i_dest].set(ingest.ts, mode="drop"),
-        )
-        stats["ingested"] += ingest.valid.sum(dtype=jnp.int32)
-        stats["ingest_stale"] += (ingest.valid & ~i_keep).sum(dtype=jnp.int32)
-        stats["ingest_coalesced"] += (i_keep & ~i_win).sum(dtype=jnp.int32)
-        state, dropped = _enqueue(state, i_sid, ingest.vals, ingest.ts, i_win)
-        stats["dropped_overflow"] += dropped
+        state, stats = ingest_phase(state, stats, ingest, i_sid, i_sid,
+                                    tables.active[i_sid], N)
 
         # ---- pop this round's events ------------------------------------
-        state, (e_sid, e_vals, e_ts, e_valid) = _pop(state, tables.priority, B)
+        state, (e_sid, e_vals, e_ts, e_pop) = _pop(state, tables.priority, B)
+        # events whose stream was revoked while queued drop here
+        e_act = tables.active[jnp.clip(e_sid, 0, N - 1)]
+        e_valid = e_pop & e_act
+        stats["dropped_revoked"] += (e_pop & ~e_act).sum(dtype=jnp.int32)
 
         # ---- stage 1: subscriber dispatching ----------------------------
         # The early-keep mask stays part of the fanout contract (the Pallas
@@ -293,34 +365,9 @@ def make_step(
             stats[k] = stats[k] + v
 
         # ---- stage 4: store, trigger actions and emit ---------------------
-        win = consistency.resolve_winners(t, ts_out, keep, N, order=wi_src)
-        stats["coalesced"] += (keep & ~win).sum(dtype=jnp.int32)
-        stats["emitted"] += win.sum(dtype=jnp.int32)
-        dest = jnp.where(win, t, N)
-        state = state._replace(
-            values=state.values.at[dest].set(new_vals, mode="drop"),
-            timestamps=state.timestamps.at[dest].set(ts_out, mode="drop"),
-            tenant_emitted=state.tenant_emitted.at[
-                jnp.where(win, tables.tenant[t], cfg.n_tenants)
-            ].add(1, mode="drop"),
-        )
-
-        # re-dispatch winners that themselves have subscribers
-        fanout_more = win & (tables.out_count[t] > 0)
-        state, dropped = _enqueue(state, t, new_vals, ts_out, fanout_more)
-        stats["dropped_overflow"] += dropped
-        stats["enqueued"] += fanout_more.sum(dtype=jnp.int32)
-
-        # external sink buffer: first `sink_buffer` winners this round
-        S = cfg.sink_buffer
-        sink_rank = jnp.cumsum(win.astype(jnp.int32)) - 1
-        sdest = jnp.where(win & (sink_rank < S), sink_rank, S)
-        sink = SinkBatch(
-            sid=jnp.zeros((S,), jnp.int32).at[sdest].set(t, mode="drop"),
-            vals=jnp.zeros((S, C), jnp.float32).at[sdest].set(new_vals, mode="drop"),
-            ts=jnp.zeros((S,), jnp.int32).at[sdest].set(ts_out, mode="drop"),
-            valid=jnp.zeros((S,), bool).at[sdest].set(True, mode="drop"),
-        )
+        state, stats, sink = store_and_emit(cfg, tables, state, stats,
+                                            t, t, wi_src, new_vals, ts_out,
+                                            keep, N)
         state = state._replace(stats=stats)
         return state, sink
 
@@ -348,6 +395,7 @@ class StreamEngine:
         self.state = init_state(self.cfg)
         self._step = make_step(self.cfg, fanout_fn)
         self._pending: List[Tuple[int, np.ndarray, int]] = []
+        self.admission_rejected = 0     # host-side churn rejection counter
 
     # -------------------------------------------------------------- ingest
     def post(self, stream, values: Sequence[float], ts: int) -> None:
@@ -395,29 +443,155 @@ class StreamEngine:
                 break
         return sinks
 
-    # ----------------------------------------------------- code injection
-    def _table_row(self, sid: int):
-        """Index of stream ``sid``'s row in the device tables; the sharded
-        engine overrides this to address ``(shard, local)``."""
-        return sid
+    # ------------------------------------------------- dynamic admission
+    # Live topology churn: every method below mutates the running engine's
+    # device tables through the jitted table-edit ops in
+    # :mod:`repro.core.admission` — O(table-edit), zero recompilation.
+    # Capacity rejections return None/False and count in
+    # ``admission_rejected`` (the host mirror of the paper's REST errors).
 
-    def inject_code(self, stream, transform: Dict[str, str],
-                    pre_filter: Optional[str] = None,
-                    post_filter: Optional[str] = None) -> None:
+    def _table_row(self, sid: int) -> Tuple:
+        """Index tuple of stream ``sid``'s row in the device tables; the
+        sharded engine overrides this to address ``(shard, local)``."""
+        return (np.int32(sid),)
+
+    def _place_sid(self, sid: int, tid: int, priority: int) -> None:
+        """Hook: the sharded engine routes the sid to a shard here."""
+
+    def _released_sid(self, sid: int) -> None:
+        """Hook: the sharded engine frees the sid's shard slot here."""
+
+    def _sync_admitted(self) -> None:
+        """Hook: the sharded engine re-pins device shardings here so the
+        compiled round sees identically-sharded inputs (no retrace)."""
+
+    def admit_stream(self, tenant, name: str, channels: Sequence[str],
+                     *, priority: int = 0, service_object=None):
+        """Admit a new simple (device-fed) stream on the *running* engine.
+        Returns the Stream, or ``None`` when capacity is exhausted (the
+        rejection is counted)."""
+        try:
+            s = self.registry.create_stream(tenant, name, channels,
+                                            service_object=service_object)
+        except CapacityError:
+            self.admission_rejected += 1
+            return None
+        self._place_sid(s.sid, tenant.tid, priority)
+        self._admit_row(s, priority)
+        return s
+
+    def admit_composite(self, tenant, name: str, channels: Sequence[str],
+                        inputs: Sequence, transform: Optional[Dict[str, str]]
+                        = None, *, pre_filter: Optional[str] = None,
+                        post_filter: Optional[str] = None, priority: int = 0,
+                        service_object=None, model_backed: bool = False):
+        """Admit a composite stream (Service Object + subscriptions) live.
+        Returns the Stream, or ``None`` on any capacity rejection."""
+        try:
+            s = self.registry.create_composite(
+                tenant, name, channels, inputs, transform or {},
+                pre_filter=pre_filter, post_filter=post_filter,
+                service_object=service_object, model_backed=model_backed)
+        except CapacityError:
+            self.admission_rejected += 1
+            return None
+        self._place_sid(s.sid, tenant.tid, priority)
+        self._admit_row(s, priority)
+        return s
+
+    def _admit_row(self, s, priority: int) -> None:
+        from repro.core import admission
+        try:
+            if s.composite:
+                prog, consts = self.registry._compile_stream(s)
+            else:
+                prog, consts = pvm.empty_program(self.cfg.prog_len,
+                                                 self.cfg.n_consts)
+        except Exception:
+            # bad user code must not leave a half-admitted stream behind
+            self.registry.remove_stream(s.sid)
+            self._released_sid(s.sid)
+            raise
+        self.tables, self.state = admission.admit_stream(
+            self.tables, self.state, self._table_row(s.sid),
+            np.int32(s.tenant), np.int32(len(s.channels)),
+            np.bool_(s.composite), np.bool_(s.model_backed),
+            np.int32(priority), prog, consts)
+        for src_sid in s.inputs:      # same append order as build_tables
+            self._admit_edge(s.sid, src_sid)
+        self._sync_admitted()
+
+    def revoke_stream(self, stream) -> None:
+        """Revoke a stream live: its row is cleared, every subscription
+        referencing it is severed, queued SUs are purged into the
+        ``dropped_revoked`` counter, and the sid is recycled by the next
+        admission."""
+        from repro.core import admission
+        sid = stream.sid if hasattr(stream, "sid") else int(stream)
+        self.registry.remove_stream(sid)
+        self.tables, self.state = admission.revoke_stream(
+            self.tables, self.state, self._table_row(sid), np.int32(sid))
+        self._released_sid(sid)
+        self._sync_admitted()
+
+    def admit_subscription(self, stream, new_input) -> bool:
+        """Add a subscription edge to a running composite.  Returns False
+        (counted) when in/out-degree capacity is exhausted."""
+        try:
+            self.registry.subscribe(stream, new_input)
+        except CapacityError:
+            self.admission_rejected += 1
+            return False
+        self._admit_edge(stream.sid, new_input.sid)
+        self._sync_admitted()
+        return True
+
+    def revoke_subscription(self, stream, old_input) -> None:
+        """Remove one subscription edge from a running composite."""
+        from repro.core import admission
+        self.registry.unsubscribe(stream, old_input)
+        self.tables, _ = admission.revoke_subscription(
+            self.tables, self._table_row(stream.sid),
+            self._table_row(old_input.sid),
+            np.int32(stream.sid), np.int32(old_input.sid))
+        self._sync_admitted()
+
+    def _admit_edge(self, target_sid: int, src_sid: int) -> None:
+        from repro.core import admission
+        self.tables, ok = admission.admit_subscription(
+            self.tables, self._table_row(target_sid),
+            self._table_row(src_sid),
+            np.int32(target_sid), np.int32(src_sid))
+        if not bool(ok):
+            # the registry pre-checked capacity and liveness, so a device
+            # rejection means the host mirror and tables diverged
+            raise RuntimeError(
+                f"device tables rejected edge {src_sid}->{target_sid} the "
+                "registry accepted (host/device mismatch)")
+
+    def swap_program(self, stream, transform: Dict[str, str],
+                     pre_filter: Optional[str] = None,
+                     post_filter: Optional[str] = None) -> None:
         """Replace a composite stream's user code *live* — the tables are
         data, the compiled step is untouched (paper §IV-F)."""
-        s = self.registry.streams[stream.sid if hasattr(stream, "sid") else int(stream)]
+        from repro.core import admission
+        s = self.registry.stream_of(
+            stream.sid if hasattr(stream, "sid") else int(stream))
         if not s.composite:
             raise ValueError("only composite streams carry user code")
         s.transform = dict(transform)
         s.pre_filter = pre_filter
         s.post_filter = post_filter
         prog, consts = self.registry._compile_stream(s)
-        row = self._table_row(s.sid)
-        self.tables = self.tables._replace(
-            progs=self.tables.progs.at[row].set(jnp.asarray(prog)),
-            consts=self.tables.consts.at[row].set(jnp.asarray(consts)),
-        )
+        self.tables = admission.swap_program(
+            self.tables, self._table_row(s.sid), prog, consts)
+        self._sync_admitted()
+
+    # back-compat alias (pre-admission-plane name)
+    def inject_code(self, stream, transform: Dict[str, str],
+                    pre_filter: Optional[str] = None,
+                    post_filter: Optional[str] = None) -> None:
+        self.swap_program(stream, transform, pre_filter, post_filter)
 
     def rewire(self) -> None:
         """Re-lower the registry after subscribe()/new streams — still no

@@ -41,11 +41,15 @@ class PipelineGraph:
 
     @classmethod
     def from_registry(cls, registry) -> "PipelineGraph":
+        # revoked sids leave None holes in the registry; they render as
+        # isolated, unnamed nodes
         n = len(registry.streams)
         return cls(
             n=n,
-            inputs=[list(s.inputs) for s in registry.streams],
-            node_names=[s.name for s in registry.streams],
+            inputs=[list(s.inputs) if s is not None else []
+                    for s in registry.streams],
+            node_names=[s.name if s is not None else f"<revoked {i}>"
+                        for i, s in enumerate(registry.streams)],
         )
 
     # ------------------------------------------------------------- basics

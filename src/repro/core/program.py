@@ -382,6 +382,14 @@ def assemble(
     return prog, cst
 
 
+def empty_program(max_len: int, max_consts: int) -> Tuple[np.ndarray, np.ndarray]:
+    """The all-NOP program + zeroed constant pool: the instruction-pool
+    image of a simple (non-composite) or vacated table row.  The admission
+    plane writes this when a stream without user code claims a row, so live
+    admission and ``Registry.build_tables`` produce identical images."""
+    return np.zeros((max_len, 4), np.int32), np.zeros((max_consts,), np.float32)
+
+
 # --------------------------------------------------------------------------
 # Pure-python oracle (used by tests / hypothesis)
 # --------------------------------------------------------------------------

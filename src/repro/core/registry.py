@@ -14,9 +14,18 @@ This is the host-side control plane — the analogue of ServIoTicy's REST API
 Everything the engine needs at runtime is produced by :meth:`build_tables`;
 re-running it after pipeline changes yields new *data* for the same compiled
 engine — user-code injection without recompilation (§IV-F).
+
+For *live* churn the registry doubles as the host mirror of the dynamic
+admission plane (:mod:`repro.core.admission`): :meth:`with_capacity` builds
+a capacity-padded registry whose tables carry an ``active`` row mask,
+:meth:`remove_stream` / :meth:`unsubscribe` release rows and edges, and
+released sids are recycled (lowest first) by the next admission — so the
+on-device table edits and a from-scratch :meth:`build_tables` of the same
+final topology produce bit-identical images.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -24,6 +33,13 @@ import numpy as np
 
 from repro.core import program as pvm
 from repro.core.config import EngineConfig
+
+
+class CapacityError(ValueError):
+    """A table/quota capacity limit rejected the operation.  The admission
+    plane counts these (``admission_rejected``) and reports ``None``/
+    ``False``; genuine validation errors (bad user code, unknown channel)
+    stay ordinary exceptions and propagate."""
 
 
 @dataclasses.dataclass
@@ -63,30 +79,67 @@ class EngineTables:
     priority: np.ndarray       # (N,) int32  (lower = served first)
     n_channels: np.ndarray     # (N,) int32
     model_backed: np.ndarray   # (N,) bool
+    active: np.ndarray         # (N,) bool — live rows; spare capacity is False
 
 
 class Registry:
     def __init__(self, cfg: EngineConfig):
         self.cfg = cfg.validate()
         self.tenants: List[Tenant] = []
-        self.streams: List[Stream] = []
+        # indexed by sid; revoked sids leave ``None`` holes until readmission
+        self.streams: List[Optional[Stream]] = []
+        self._free_sids: List[int] = []          # released sids, sorted
+
+    @classmethod
+    def with_capacity(cls, cfg: EngineConfig, max_streams: int = None,
+                      max_subs: int = None) -> "Registry":
+        """A registry whose engine tables are padded to ``max_streams`` rows
+        and ``max_subs`` subscription slots per direction.  The spare rows
+        carry ``active=False`` and are filled *live* by the admission plane
+        — the engine compiled against this config never retraces as tenants
+        come and go."""
+        return cls(cfg.padded(max_streams, max_subs))
 
     # ------------------------------------------------------------- tenants
     def create_tenant(self, name: str, quota_streams: int = 1_000_000) -> Tenant:
         if len(self.tenants) >= self.cfg.n_tenants:
-            raise ValueError("tenant capacity exhausted")
+            raise CapacityError("tenant capacity exhausted")
         t = Tenant(len(self.tenants), name, quota_streams)
         self.tenants.append(t)
         return t
 
     # ------------------------------------------------------------- streams
     def _alloc_sid(self, tenant: Tenant) -> int:
-        if len(self.streams) >= self.cfg.n_streams:
-            raise ValueError("stream capacity exhausted")
-        owned = sum(1 for s in self.streams if s.tenant == tenant.tid)
+        if not self._free_sids and len(self.streams) >= self.cfg.n_streams:
+            raise CapacityError("stream capacity exhausted")
+        owned = sum(1 for s in self.streams
+                    if s is not None and s.tenant == tenant.tid)
         if owned >= tenant.quota_streams:
-            raise ValueError(f"tenant {tenant.name} exceeded stream quota")
+            raise CapacityError(f"tenant {tenant.name} exceeded stream quota")
+        # recycle released sids lowest-first so revoke-then-readmit lands on
+        # the same row (deterministic table images)
+        if self._free_sids:
+            return self._free_sids[0]
         return len(self.streams)
+
+    def _install(self, s: Stream) -> Stream:
+        if s.sid == len(self.streams):
+            self.streams.append(s)
+        else:
+            assert self.streams[s.sid] is None
+            self._free_sids.remove(s.sid)
+            self.streams[s.sid] = s
+        return s
+
+    def stream_of(self, sid: int) -> Stream:
+        s = self.streams[sid]
+        if s is None:
+            raise ValueError(f"sid {sid} is revoked")
+        return s
+
+    @property
+    def n_active(self) -> int:
+        return sum(1 for s in self.streams if s is not None)
 
     def create_stream(
         self, tenant: Tenant, name: str, channels: Sequence[str],
@@ -97,8 +150,7 @@ class Registry:
             raise ValueError("too many channels")
         s = Stream(self._alloc_sid(tenant), tenant.tid, name, list(channels),
                    service_object=service_object)
-        self.streams.append(s)
-        return s
+        return self._install(s)
 
     def create_composite(
         self, tenant: Tenant, name: str, channels: Sequence[str],
@@ -116,34 +168,73 @@ class Registry:
         multi-tenancy: tenants share data streams between them.
         """
         if len(inputs) > self.cfg.max_in:
-            raise ValueError(f"in-degree {len(inputs)} > max_in {self.cfg.max_in}")
+            raise CapacityError(f"in-degree {len(inputs)} > max_in {self.cfg.max_in}")
         if len(channels) > self.cfg.channels:
             raise ValueError("too many channels")
         for ch in channels:
             if ch not in transform and not model_backed:
                 raise ValueError(f"no transform for channel {ch!r}")
+        for i in inputs:
+            self._check_live(i)
+        # fan-out capacity pre-check on the sources (before installing, so a
+        # rejected admission leaves the registry untouched)
+        for src in {i.sid: i for i in inputs}.values():
+            subs = sum(1 for t in self.streams
+                       if t is not None and t.composite and src.sid in t.inputs)
+            if subs + 1 > self.cfg.max_out:
+                raise CapacityError(
+                    f"out-degree of {src.name} exceeds max_out {self.cfg.max_out}")
         s = Stream(self._alloc_sid(tenant), tenant.tid, name, list(channels),
                    composite=True, inputs=[i.sid for i in inputs],
                    transform=dict(transform), pre_filter=pre_filter,
                    post_filter=post_filter, service_object=service_object,
                    model_backed=model_backed)
-        self.streams.append(s)
-        # fan-out capacity check on the sources
-        for src in inputs:
-            subs = sum(1 for t in self.streams
-                       if t.composite and src.sid in t.inputs)
-            if subs > self.cfg.max_out:
-                raise ValueError(
-                    f"out-degree of {src.name} exceeds max_out {self.cfg.max_out}")
-        return s
+        return self._install(s)
+
+    def _check_live(self, stream: Stream) -> None:
+        """The exact Stream object must still occupy its sid (identity, not
+        equality: a recycled sid belongs to a different stream)."""
+        if self.streams[stream.sid] is not stream:
+            raise ValueError(f"stream {stream.name!r} (sid {stream.sid}) "
+                             "is revoked")
 
     def subscribe(self, stream: Stream, new_input: Stream) -> None:
         """Dynamically rewire: add a subscription to an existing composite."""
         if not stream.composite:
             raise ValueError("can only subscribe composite streams")
+        self._check_live(stream)
+        self._check_live(new_input)
         if len(stream.inputs) >= self.cfg.max_in:
-            raise ValueError("in-degree capacity reached")
+            raise CapacityError("in-degree capacity reached")
+        subs = sum(1 for t in self.streams
+                   if t is not None and t.composite and new_input.sid in t.inputs)
+        if new_input.sid not in stream.inputs and subs + 1 > self.cfg.max_out:
+            raise CapacityError(
+                f"out-degree of {new_input.name} exceeds max_out "
+                f"{self.cfg.max_out}")
         stream.inputs.append(new_input.sid)
+
+    def unsubscribe(self, stream: Stream, old_input: Stream) -> None:
+        """Remove one subscription edge (the host mirror of
+        :func:`repro.core.admission.revoke_subscription`)."""
+        if old_input.sid not in stream.inputs:
+            raise ValueError(
+                f"{stream.name} does not subscribe to {old_input.name}")
+        stream.inputs.remove(old_input.sid)
+
+    def remove_stream(self, stream) -> None:
+        """Release a stream's sid: every subscription edge referencing it is
+        severed (subscribers keep running on their remaining inputs) and the
+        sid is recycled by the next admission.  Host mirror of
+        :func:`repro.core.admission.revoke_stream`."""
+        sid = stream.sid if hasattr(stream, "sid") else int(stream)
+        if self.streams[sid] is None:
+            raise ValueError(f"sid {sid} already revoked")
+        for t in self.streams:
+            if t is not None and t.composite and sid in t.inputs:
+                t.inputs = [i for i in t.inputs if i != sid]
+        self.streams[sid] = None
+        bisect.insort(self._free_sids, sid)
 
     # ---------------------------------------------------------- code->VM
     def _env_for(self, s: Stream) -> Dict[str, int]:
@@ -220,8 +311,12 @@ class Registry:
         tenant = np.zeros((N,), np.int32)
         n_ch = np.ones((N,), np.int32)
         model_backed = np.zeros((N,), bool)
+        active = np.zeros((N,), bool)
 
         for s in self.streams:
+            if s is None:
+                continue
+            active[s.sid] = True
             tenant[s.sid] = s.tenant
             n_ch[s.sid] = len(s.channels)
             model_backed[s.sid] = s.model_backed
@@ -249,7 +344,7 @@ class Registry:
             out_table=out_table, out_count=out_count,
             progs=progs, consts=consts, is_composite=is_comp,
             tenant=tenant, priority=np.asarray(priority, np.int32),
-            n_channels=n_ch, model_backed=model_backed,
+            n_channels=n_ch, model_backed=model_backed, active=active,
         )
 
     def build_sharded_tables(

@@ -57,6 +57,21 @@ def push(store: WindowStore, sid: jnp.ndarray, vals: jnp.ndarray,
     return WindowStore(values, tss, ptr % (2 * W), total)
 
 
+@jax.jit
+def reset_rows(store: WindowStore, sid: jnp.ndarray) -> WindowStore:
+    """Clear stream ``sid``'s ring buffer (scalar or (K,) batch of sids).
+
+    Used by the admission plane: a revoked stream's window history must not
+    leak into a readmission of its recycled sid."""
+    imin = jnp.iinfo(jnp.int32).min
+    return WindowStore(
+        values=store.values.at[sid].set(0.0),
+        ts=store.ts.at[sid].set(imin),
+        ptr=store.ptr.at[sid].set(0),
+        total=store.total.at[sid].set(0),
+    )
+
+
 def aggregate(store: WindowStore, *, horizon: Optional[int] = None,
               use_kernel: bool = True) -> Dict[str, jnp.ndarray]:
     """All five aggregates for every stream, (N, C) each.

@@ -34,9 +34,20 @@ The per-shard round:
     stage 2   gather co-inputs from the snapshot
     stage 3   bytecode VM + Listing-2 filters
     stage 4   store into the owner shard's slice, re-enqueue locally
+
+Live churn (PR 2): :class:`ShardedStreamEngine` extends the admission
+plane across the mesh — newly admitted sids claim a spare physical slot
+on the tenant-preferred or least-loaded shard (host bookkeeping plus one
+replicated gmap edit; inactive rows are inert, so placement moves no
+data), revocations release the slot, and :meth:`~ShardedStreamEngine.
+rebalance` migrates whole rows (tables + state slice) off overfull
+shards with :func:`repro.core.admission.migrate_row`.  All of it leaves
+the compiled round untouched.
 """
 from __future__ import annotations
 
+import bisect
+import functools
 from typing import Callable, List, NamedTuple, Optional, Tuple
 
 import jax
@@ -50,11 +61,12 @@ except ImportError:                     # jax >= 0.8: graduated to jax.shard_map
     _SHARD_MAP_KW = {"check_vma": False}
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import consistency
+from repro.core import admission
 from repro.core.config import EngineConfig
 from repro.core.engine import (INT_MIN, STAT_KEYS, DeviceTables, EngineState,
-                               IngestBatch, SinkBatch, StreamEngine, _enqueue,
-                               _pop, fanout_reference, process_work_items)
+                               IngestBatch, SinkBatch, StreamEngine,
+                               _pop, fanout_reference, ingest_phase,
+                               process_work_items, store_and_emit)
 from repro.core.registry import EngineTables, Registry
 
 AXIS = "shards"
@@ -79,7 +91,16 @@ def plan_partition(cfg: EngineConfig, tenant_of_sid: np.ndarray,
                    partition: Optional[str] = None) -> ShardPlan:
     """Assign every sid to a shard: ``"block"`` gives contiguous sid ranges
     (cheap locality for pipelines built incrementally), ``"tenant"`` hashes
-    the owning tenant so one tenant's pipeline stays co-located."""
+    the owning tenant so one tenant's pipeline stays co-located.
+
+    The plan covers the full capacity: *every* sid — including spare rows
+    no stream occupies yet — gets a ``(shard, local)`` slot, so the
+    admission plane can later claim spare slots without resizing anything.
+    ``n_local`` is the padded per-shard row count (``"tenant"`` pads to
+    the largest bucket; the unmapped remainder rows are the "holes" the
+    sharded engine hands to incoming placements first).  The maps are
+    plain mutable numpy arrays: the sharded engine edits them in place as
+    placements change, mirroring the replicated on-device ``GlobalMaps``."""
     N = cfg.n_streams
     n_shards = int(n_shards or cfg.n_shards)
     partition = partition or cfg.partition
@@ -110,7 +131,9 @@ def plan_partition(cfg: EngineConfig, tenant_of_sid: np.ndarray,
 
 def shard_tables(tables: EngineTables, plan: ShardPlan) -> EngineTables:
     """Permute the global table rows into (n_shards, n_local, ...) slices.
-    Pad rows are inert: no inputs, no subscribers, NOP programs."""
+    Pad rows are inert: no inputs, no subscribers, NOP programs, and
+    ``active=False`` — indistinguishable from revoked rows, which is what
+    lets live admission claim them as pure table edits."""
     S, L = plan.n_shards, plan.n_local
 
     def scatter(rows: np.ndarray, fill) -> np.ndarray:
@@ -130,6 +153,7 @@ def shard_tables(tables: EngineTables, plan: ShardPlan) -> EngineTables:
         priority=scatter(tables.priority, 0),
         n_channels=scatter(tables.n_channels, 1),
         model_backed=scatter(tables.model_backed, False),
+        active=scatter(tables.active, False),
     )
 
 
@@ -151,6 +175,20 @@ class GlobalMaps(NamedTuple):
             sid_to_flat=jnp.asarray(plan.sid_to_flat),
             priority=jnp.asarray(priority, jnp.int32),
         )
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _place_sid_op(gmap: GlobalMaps, sid, shard, local, n_local, priority
+                  ) -> GlobalMaps:
+    """Point one global sid at a (shard, local) slot in the replicated
+    lookup maps — the gmap half of a live admission / migration (a pure
+    table edit, like everything in :mod:`repro.core.admission`)."""
+    return GlobalMaps(
+        sid_to_shard=gmap.sid_to_shard.at[sid].set(shard),
+        sid_to_local=gmap.sid_to_local.at[sid].set(local),
+        sid_to_flat=gmap.sid_to_flat.at[sid].set(shard * n_local + local),
+        priority=gmap.priority.at[sid].set(priority),
+    )
 
 
 def sharded_init_state(cfg: EngineConfig, plan: ShardPlan) -> EngineState:
@@ -184,10 +222,20 @@ def make_sharded_step(
     """Build the jitted sharded round.  Signature:
     ``step(tables, gmap, state, ingest) -> (state, sink)`` where every
     ``tables``/``state``/``ingest``/``sink`` leaf carries a leading
-    ``(n_shards,)`` axis and ``gmap`` is replicated."""
+    ``(n_shards,)`` axis and ``gmap`` is replicated.
+
+    Exchange buffers & overflow accounting: stage 1 produces up to
+    ``cfg.work`` work items per shard; each is bound for the shard owning
+    its target sid.  They are compacted into an ``(n_shards, exchange)``
+    buffer — ``cfg.exchange`` rows per destination, in batch order — and
+    swapped with one ``all_to_all``.  Items beyond a destination's rows
+    are counted into ``stats["dropped_overflow"]`` on the *sending* shard
+    (never silently lost); ``cfg.exchange_slots=0`` sizes the buffers so
+    overflow is impossible, the precondition for bit-exact equivalence
+    with the single-device engine."""
     n_shards, n_local = plan.n_shards, plan.n_local
     N, C, F = cfg.n_streams, cfg.channels, cfg.max_out
-    B, W, S = cfg.batch, cfg.work, cfg.sink_buffer
+    B, W = cfg.batch, cfg.work
     E = cfg.exchange                      # per-destination exchange rows
     WR = n_shards * E                     # work width after the exchange
 
@@ -201,21 +249,17 @@ def make_sharded_step(
         # ---- phase 0: ingest SUs routed to this shard (global sids) -----
         g_sid = jnp.clip(ingest.sid, 0, N - 1)
         l_sid = jnp.clip(gmap.sid_to_local[g_sid], 0, n_local - 1)
-        i_keep = ingest.valid & (ingest.ts > state.timestamps[l_sid])
-        i_win = consistency.resolve_winners(l_sid, ingest.ts, i_keep, n_local)
-        i_dest = jnp.where(i_win, l_sid, n_local)
-        state = state._replace(
-            values=state.values.at[i_dest].set(ingest.vals, mode="drop"),
-            timestamps=state.timestamps.at[i_dest].set(ingest.ts, mode="drop"),
-        )
-        stats["ingested"] += ingest.valid.sum(dtype=jnp.int32)
-        stats["ingest_stale"] += (ingest.valid & ~i_keep).sum(dtype=jnp.int32)
-        stats["ingest_coalesced"] += (i_keep & ~i_win).sum(dtype=jnp.int32)
-        state, dropped = _enqueue(state, g_sid, ingest.vals, ingest.ts, i_win)
-        stats["dropped_overflow"] += dropped
+        state, stats = ingest_phase(state, stats, ingest, l_sid, g_sid,
+                                    tables.active[l_sid], n_local)
 
         # ---- pop this round's events (queues hold global sids) ----------
-        state, (e_sid, e_vals, e_ts, e_valid) = _pop(state, gmap.priority, B)
+        state, (e_sid, e_vals, e_ts, e_pop) = _pop(state, gmap.priority, B)
+        e_loc = jnp.clip(gmap.sid_to_local[jnp.clip(e_sid, 0, N - 1)],
+                         0, n_local - 1)
+        # events whose stream was revoked while queued drop here
+        e_act = tables.active[e_loc]
+        e_valid = e_pop & e_act
+        stats["dropped_revoked"] += (e_pop & ~e_act).sum(dtype=jnp.int32)
 
         # ---- post-ingest snapshot: the lock-free global view ------------
         vals_all = jax.lax.all_gather(state.values, AXIS)
@@ -224,8 +268,6 @@ def make_sharded_step(
         ts_by_sid = ts_all.reshape(n_shards * n_local)[gmap.sid_to_flat]
 
         # ---- stage 1: fan-out via the shard-local out-tables ------------
-        e_loc = jnp.clip(gmap.sid_to_local[jnp.clip(e_sid, 0, N - 1)],
-                         0, n_local - 1)
         targets, _early = fanout_fn(e_loc, e_ts, e_valid,
                                     tables.out_table, ts_by_sid)
         wi_t = targets.reshape(W)
@@ -235,20 +277,29 @@ def make_sharded_step(
         wi_ts = jnp.repeat(e_ts, F)
 
         # ---- exchange stage: route work items to the target's owner -----
+        # One-pass compaction: a single running per-destination count gives
+        # every item its rank within its destination bucket, then one
+        # scatter packs all buckets at once (slot layout — and therefore
+        # results — bit-identical to the former per-destination loop).
         t_safe = jnp.clip(wi_t, 0, N - 1)
         dest_shard = jnp.where(wi_valid, gmap.sid_to_shard[t_safe], n_shards)
         payload_i = jnp.stack([wi_t, wi_src, wi_ts], axis=-1)        # (W, 3)
-        xi = jnp.full((n_shards, E, 3), -1, jnp.int32)
-        xf = jnp.zeros((n_shards, E, C), jnp.float32)
-        exch_dropped = jnp.zeros((), jnp.int32)
-        for d in range(n_shards):
-            m = dest_shard == d
-            rank = jnp.cumsum(m.astype(jnp.int32)) - 1
-            slot = jnp.where(m & (rank < E), rank, E)
-            xi = xi.at[d, slot].set(payload_i, mode="drop")
-            xf = xf.at[d, slot].set(wi_vals, mode="drop")
-            exch_dropped += (m & (rank >= E)).sum(dtype=jnp.int32)
-        stats["dropped_overflow"] += exch_dropped
+        routed = dest_shard < n_shards
+        d_safe = jnp.clip(dest_shard, 0, n_shards - 1)
+        # unrouted items must not consume bucket ranks: mask them out of
+        # the running count (their own rank reads garbage but is gated)
+        onehot = routed[:, None] & \
+            (d_safe[:, None] == jnp.arange(n_shards)[None, :])       # (W, D)
+        rank = jnp.take_along_axis(
+            jnp.cumsum(onehot.astype(jnp.int32), axis=0) - 1,
+            d_safe[:, None], axis=1)[:, 0]                           # (W,)
+        fits = routed & (rank < E)
+        slot = jnp.where(fits, d_safe * E + rank, n_shards * E)
+        xi = jnp.full((n_shards * E, 3), -1, jnp.int32) \
+            .at[slot].set(payload_i, mode="drop").reshape(n_shards, E, 3)
+        xf = jnp.zeros((n_shards * E, C), jnp.float32) \
+            .at[slot].set(wi_vals, mode="drop").reshape(n_shards, E, C)
+        stats["dropped_overflow"] += (routed & ~fits).sum(dtype=jnp.int32)
 
         ri = jax.lax.all_to_all(xi, AXIS, split_axis=0, concat_axis=0)
         rf = jax.lax.all_to_all(xf, AXIS, split_axis=0, concat_axis=0)
@@ -268,35 +319,10 @@ def make_sharded_step(
             stats[k] = stats[k] + v
 
         # ---- stage 4: store into this shard's slice ----------------------
-        win = consistency.resolve_winners(r_loc, ts_out, keep, n_local,
-                                          order=r_src)
-        stats["coalesced"] += (keep & ~win).sum(dtype=jnp.int32)
-        stats["emitted"] += win.sum(dtype=jnp.int32)
-        dest = jnp.where(win, r_loc, n_local)
-        state = state._replace(
-            values=state.values.at[dest].set(new_vals, mode="drop"),
-            timestamps=state.timestamps.at[dest].set(ts_out, mode="drop"),
-            tenant_emitted=state.tenant_emitted.at[
-                jnp.where(win, tables.tenant[r_loc], cfg.n_tenants)
-            ].add(1, mode="drop"),
-        )
-
-        # re-dispatch winners that themselves have subscribers (local queue)
-        fanout_more = win & (tables.out_count[r_loc] > 0)
-        state, dropped = _enqueue(state, r_t, new_vals, ts_out, fanout_more)
-        stats["dropped_overflow"] += dropped
-        stats["enqueued"] += fanout_more.sum(dtype=jnp.int32)
-
-        # per-shard external sink buffer
-        sink_rank = jnp.cumsum(win.astype(jnp.int32)) - 1
-        sdest = jnp.where(win & (sink_rank < S), sink_rank, S)
-        sink = SinkBatch(
-            sid=jnp.zeros((S,), jnp.int32).at[sdest].set(r_t, mode="drop"),
-            vals=jnp.zeros((S, C), jnp.float32).at[sdest].set(new_vals,
-                                                              mode="drop"),
-            ts=jnp.zeros((S,), jnp.int32).at[sdest].set(ts_out, mode="drop"),
-            valid=jnp.zeros((S,), bool).at[sdest].set(True, mode="drop"),
-        )
+        # (winners re-enqueue into the local queue; the sink is per-shard)
+        state, stats, sink = store_and_emit(cfg, tables, state, stats,
+                                            r_loc, r_t, r_src, new_vals,
+                                            ts_out, keep, n_local)
         state = state._replace(stats=stats)
         return (jax.tree.map(lambda x: x[None], state),
                 jax.tree.map(lambda x: x[None], sink))
@@ -316,7 +342,9 @@ def make_sharded_step(
 class ShardedStreamEngine(StreamEngine):
     """Drop-in :class:`StreamEngine` running the pub/sub plane sharded over
     ``cfg.n_shards`` devices.  Public API (post/round/drain/value_of/ts_of/
-    counters/inject_code/rewire) matches the single-device engine."""
+    counters/inject_code/rewire + the live admission methods) matches the
+    single-device engine; admissions additionally route the new sid to a
+    shard and :meth:`rebalance` fights occupancy skew."""
 
     def __init__(self, registry: Registry, *, mesh: Optional[Mesh] = None,
                  fanout_fn: Callable = fanout_reference,
@@ -351,6 +379,29 @@ class ShardedStreamEngine(StreamEngine):
         self._fanout_fn = fanout_fn
         self._step = make_sharded_step(cfg, self.plan, mesh, fanout_fn)
         self._pending: List[Tuple[int, np.ndarray, int]] = []
+        self.admission_rejected = 0
+        self._init_slots()
+
+    def _init_slots(self) -> None:
+        """(Re)build the per-shard free-slot bookkeeping from the registry:
+        ``_occupancy[s]`` live streams on shard ``s``, ``_spare[s]`` the
+        sorted inactive sids placed there (swap partners for incoming
+        placements), ``_holes[s]`` the physical rows no sid maps to at all
+        (cheapest landing slots — common under the tenant partition, whose
+        per-shard row counts are padded to the largest bucket)."""
+        S = self.plan.n_shards
+        self._occupancy = np.zeros((S,), np.int64)
+        self._spare: List[List[int]] = [[] for _ in range(S)]
+        self._holes: List[List[int]] = [
+            sorted(np.nonzero(self.plan.local_to_sid[s] < 0)[0].tolist())
+            for s in range(S)]
+        streams = self.registry.streams
+        for sid in range(self.cfg.n_streams):
+            shard = int(self.plan.sid_to_shard[sid])
+            if sid < len(streams) and streams[sid] is not None:
+                self._occupancy[shard] += 1
+            else:
+                self._spare[shard].append(sid)
 
     # -------------------------------------------------------------- ingest
     def _take_ingest(self) -> IngestBatch:
@@ -383,10 +434,124 @@ class ShardedStreamEngine(StreamEngine):
                                       self._take_ingest())
         return SinkBatch(*(x.reshape((-1,) + x.shape[2:]) for x in sink))
 
-    # ----------------------------------------------------- code injection
+    # ------------------------------------------------- dynamic admission
     def _table_row(self, sid: int):
-        return (int(self.plan.sid_to_shard[sid]),
-                int(self.plan.sid_to_local[sid]))
+        return (np.int32(self.plan.sid_to_shard[sid]),
+                np.int32(self.plan.sid_to_local[sid]))
+
+    def _swap_placement(self, a: int, b: int) -> None:
+        """Exchange the physical slots of two sids in the host plan (both
+        must be inert on device: inactive rows, or drained active rows that
+        :func:`admission.migrate_row` just moved)."""
+        p = self.plan
+        for arr in (p.sid_to_shard, p.sid_to_local, p.sid_to_flat):
+            arr[a], arr[b] = int(arr[b]), int(arr[a])
+        p.local_to_sid[p.sid_to_shard[a], p.sid_to_local[a]] = a
+        p.local_to_sid[p.sid_to_shard[b], p.sid_to_local[b]] = b
+
+    def _set_gmap(self, sid: int, priority: int) -> None:
+        self.gmap = _place_sid_op(
+            self.gmap, np.int32(sid),
+            np.int32(self.plan.sid_to_shard[sid]),
+            np.int32(self.plan.sid_to_local[sid]),
+            np.int32(self.plan.n_local), np.int32(priority))
+
+    def _claim_slot(self, sid: int, want: int) -> Optional[int]:
+        """Claim a physical slot on shard ``want`` for ``sid``: an unmapped
+        hole when one exists, otherwise a swap with a spare (inactive) sid
+        placed there.  Updates the host plan only; the caller migrates the
+        device rows when ``sid`` is active.  Returns the swap partner, or
+        ``None`` for a hole claim."""
+        p = self.plan
+        cur, cur_l = int(p.sid_to_shard[sid]), int(p.sid_to_local[sid])
+        if self._holes[want]:
+            loc = self._holes[want].pop(0)
+            p.sid_to_shard[sid], p.sid_to_local[sid] = want, loc
+            p.sid_to_flat[sid] = want * p.n_local + loc
+            p.local_to_sid[want, loc] = sid
+            p.local_to_sid[cur, cur_l] = -1
+            bisect.insort(self._holes[cur], cur_l)
+            return None
+        partner = self._spare[want].pop(0)
+        self._swap_placement(sid, partner)
+        bisect.insort(self._spare[cur], partner)
+        return partner
+
+    def _free_slots(self, shard: int) -> int:
+        return len(self._holes[shard]) + len(self._spare[shard])
+
+    def _place_sid(self, sid: int, tid: int, priority: int) -> None:
+        """Route a newly admitted sid to a shard: the ``"tenant"``
+        partition keeps the tenant's pipeline co-located (tid hash), the
+        ``"block"`` partition targets the least-loaded shard.  When the
+        target differs from the sid's planned slot, the sid claims a hole
+        or swaps with a spare sid there — all rows involved are inert, so
+        placement is pure bookkeeping plus a replicated gmap edit."""
+        S = self.plan.n_shards
+        cur = int(self.plan.sid_to_shard[sid])
+        self._spare[cur].remove(sid)
+        if self.cfg.partition == "tenant":
+            want = tid % S
+        else:
+            cand = [s for s in range(S) if s == cur or self._free_slots(s)]
+            want = min(cand, key=lambda s: (self._occupancy[s], s))
+        if want != cur and self._free_slots(want):
+            partner = self._claim_slot(sid, want)
+            if partner is not None:
+                self._set_gmap(partner, 0)
+            cur = want
+        self._occupancy[cur] += 1
+        self._set_gmap(sid, priority)
+
+    def _released_sid(self, sid: int) -> None:
+        shard = int(self.plan.sid_to_shard[sid])
+        self._occupancy[shard] -= 1
+        bisect.insort(self._spare[shard], sid)
+
+    def _sync_admitted(self) -> None:
+        # re-pin the round's input shardings after a table edit so the
+        # compiled step always sees the exact avals it was traced for
+        # (zero-retrace invariant of the admission plane)
+        self.tables = jax.device_put(self.tables, self._shard)
+        self.state = jax.device_put(self.state, self._shard)
+        self.gmap = jax.device_put(self.gmap, self._repl)
+
+    def rebalance(self, tolerance: int = 1) -> int:
+        """Migrate streams from overfull to underfull shards until the
+        per-shard occupancy spread is ≤ ``tolerance``; returns the number
+        of migrations.  Each move is one :func:`admission.migrate_row`
+        table edit (the state slice travels with the row) plus a gmap
+        update — no recompilation.  Queues must be drained: in-flight SUs
+        reference the old placement."""
+        if bool(np.asarray(self.state.q_valid).any()) or self._pending:
+            raise ValueError(
+                "rebalance() while SUs are in flight; drain() first")
+        moved = 0
+        prio = np.asarray(self.gmap.priority)
+        while True:
+            hi = int(np.argmax(self._occupancy))
+            lo = int(np.argmin(self._occupancy))
+            if self._occupancy[hi] - self._occupancy[lo] <= tolerance \
+                    or not self._free_slots(lo):
+                break
+            # deterministic pick: the highest active sid on the full shard
+            sid = max(s for s in range(self.cfg.n_streams)
+                      if int(self.plan.sid_to_shard[s]) == hi
+                      and s < len(self.registry.streams)
+                      and self.registry.streams[s] is not None)
+            src_row = self._table_row(sid)
+            partner = self._claim_slot(sid, lo)
+            self.tables, self.state = admission.migrate_row(
+                self.tables, self.state, src_row, self._table_row(sid))
+            self._occupancy[hi] -= 1
+            self._occupancy[lo] += 1
+            if partner is not None:
+                self._set_gmap(partner, 0)
+            self._set_gmap(sid, int(prio[sid]))
+            moved += 1
+        if moved:
+            self._sync_admitted()
+        return moved
 
     def rewire(self) -> None:
         """Re-lower after subscribe()/new streams.  With the "tenant"
@@ -421,6 +586,7 @@ class ShardedStreamEngine(StreamEngine):
                                      self._shard)
         self.gmap = jax.device_put(GlobalMaps.build(prio, new_plan),
                                    self._repl)
+        self._init_slots()
 
     # ------------------------------------------------------------- readback
     def value_of(self, stream) -> np.ndarray:

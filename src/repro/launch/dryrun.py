@@ -338,7 +338,7 @@ def _lower_engine(mesh, mode: str = "sharded",
         progs=sds((N, ecfg.prog_len, 4), i32), consts=sds((N, ecfg.n_consts), f32),
         is_composite=sds((N,), b_), tenant=sds((N,), i32),
         priority=sds((N,), i32), n_channels=sds((N,), i32),
-        model_backed=sds((N,), b_))
+        model_backed=sds((N,), b_), active=sds((N,), b_))
     tables_sh = eng.DeviceTables(*([row] * len(eng.DeviceTables._fields)))
 
     state_abs = eng.EngineState(

@@ -46,6 +46,42 @@ class ModelBackedStreams:
         sid = model_stream.sid if hasattr(model_stream, "sid") else int(model_stream)
         self.routes[sid] = _Route(sid, response_stream, prompt_len)
 
+    # ------------------------------------------------- dynamic admission
+    def admit_route(self, tenant, name: str, inputs, *,
+                    channels=("req",), prompt_len: int = 8,
+                    response_name: Optional[str] = None):
+        """Admit a tenant's model-backed pipeline on the *running* engine:
+        a model-backed composite subscribed to ``inputs`` plus its response
+        stream, wired as a route — all through the admission plane's table
+        edits, so serving tenants join mid-flight with zero recompilation.
+        Returns ``(model_stream, response_stream)`` or ``None`` when the
+        engine rejects for capacity (counted in
+        ``engine.admission_rejected``)."""
+        resp = self.engine.admit_stream(
+            tenant, response_name or f"{name}.response", ["score"])
+        if resp is None:
+            return None
+        model = self.engine.admit_composite(
+            tenant, name, list(channels), inputs, model_backed=True)
+        if model is None:
+            self.engine.revoke_stream(resp)
+            return None
+        self.route(model, resp, prompt_len)
+        return model, resp
+
+    def revoke_route(self, model_stream) -> None:
+        """Tear a model-backed pipeline down mid-flight: unregister the
+        route and revoke both streams (queued requests drop into the
+        engine's ``dropped_revoked`` counter; in-flight batcher requests
+        complete but their completions land on a revoked row and are
+        likewise dropped)."""
+        sid = model_stream.sid if hasattr(model_stream, "sid") \
+            else int(model_stream)
+        r = self.routes.pop(sid, None)
+        self.engine.revoke_stream(sid)
+        if r is not None:
+            self.engine.revoke_stream(r.response_stream)
+
     # ------------------------------------------------------------------
     def _tokenize(self, values: np.ndarray, n: int) -> List[int]:
         """Frontend stub: quantize channel values into token space."""
