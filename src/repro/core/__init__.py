@@ -1,16 +1,17 @@
 """Core of the reproduction: the multi-tenant pub/sub stream runtime."""
 from repro.core.config import EngineConfig
 from repro.core.engine import (DeviceTables, EngineState, IngestBatch,
-                               SinkBatch, StreamEngine, create_engine,
-                               init_state, make_step)
+                               IngestRing, SinkBatch, SinkSpool,
+                               StreamEngine, create_engine, init_state,
+                               make_step, make_superstep)
 from repro.core.graph import PipelineGraph
 from repro.core.registry import Registry, Stream, Tenant
 
 __all__ = [
     "EngineConfig", "Registry", "Stream", "Tenant", "StreamEngine",
     "DeviceTables", "EngineState", "IngestBatch", "SinkBatch",
-    "init_state", "make_step", "PipelineGraph", "create_engine",
-    "admission",
+    "IngestRing", "SinkSpool", "init_state", "make_step", "make_superstep",
+    "PipelineGraph", "create_engine", "admission",
 ]
 
 from repro.core import admission  # noqa: E402  (jitted table-edit ops)

@@ -34,6 +34,15 @@ allocation, quota checks, shard placement) lives in
 here are pure functions of device arrays, O(table-edit), and — because the
 tables are *data* to the compiled round — admitting a tenant mid-flight
 costs exactly one table edit and **zero recompilations**.
+
+Superstep boundaries: under the superstep execution plane
+(:func:`~repro.core.engine.make_superstep`) the engine runs K rounds per
+compiled call, and the host admission API can only run *between* calls —
+so table edits land exactly at superstep boundaries.  The K-round scan
+reads the tables as arguments like the single round does; churn between
+supersteps therefore never retraces the scan, and a queued SU revoked at
+a boundary still drops into ``dropped_revoked`` inside the next superstep
+exactly as it would in the per-round engine.
 """
 from __future__ import annotations
 

@@ -30,6 +30,10 @@ class EngineConfig:
     partition: str = "block"    # "block" (sid ranges) | "tenant" (hash)
     exchange_slots: int = 0     # per-destination exchange rows (0 -> work)
 
+    # ---- superstep execution plane (engine.make_superstep) -------------
+    superstep: int = 1          # rounds fused per compiled scan (1 = off)
+    sink_spool_slots: int = 0   # per-superstep sink spool rows (0 -> K*sink)
+
     # ---- register file layout ------------------------------------------
     @property
     def reg_inputs(self) -> int:        # input slot i, channel c -> i*C + c
@@ -82,6 +86,24 @@ class EngineConfig:
         per-destination traffic and watch ``stats["dropped_overflow"]``."""
         return self.exchange_slots if self.exchange_slots > 0 else self.work
 
+    def spool_slots(self, K: int) -> int:
+        """Sink-spool capacity of a K-round superstep.  The default
+        (``K * sink_buffer``) can hold every per-round sink buffer in full,
+        so the spool can never overflow — the precondition for bit-exact
+        equivalence with K per-round sink readbacks.  Throughput
+        deployments size ``sink_spool_slots`` near the expected emission
+        rate and watch ``stats["dropped_spool"]``."""
+        return self.sink_spool_slots if self.sink_spool_slots > 0 \
+            else K * self.sink_buffer
+
+    def ring_slots(self, K: int) -> int:
+        """Ingest-ring capacity of a K-round superstep: room for the
+        ``(K, batch)`` pre-staged grid plus a queue's worth of overflow
+        SUs that persist on device between supersteps (same-stream bursts
+        longer than K rounds).  Backlog beyond this stays host-side in
+        ``_pending`` — never lost, just staged later."""
+        return K * self.batch + self.queue
+
     def padded(self, max_streams: int = None, max_subs: int = None
                ) -> "EngineConfig":
         """Capacity-padded copy for the dynamic admission plane: room for
@@ -102,4 +124,6 @@ class EngineConfig:
         assert self.queue >= self.batch
         assert self.n_shards >= 1
         assert self.partition in ("block", "tenant")
+        assert self.superstep >= 1
+        assert self.sink_spool_slots >= 0
         return self

@@ -87,7 +87,7 @@ STAT_KEYS = (
     "ingested", "ingest_stale", "ingest_coalesced",
     "processed", "discarded_stale", "filtered", "coalesced",
     "emitted", "enqueued", "dropped_overflow", "nonfinite",
-    "dropped_revoked",
+    "dropped_revoked", "dropped_spool",
 )
 
 
@@ -233,12 +233,20 @@ def fanout_reference(
     pvalid: jnp.ndarray,     # (B,)
     out_table: jnp.ndarray,  # (N, F)
     timestamps: jnp.ndarray, # (N,)
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Expand each event to its subscribers; early stale-check against the
-    targets' last-emission timestamps (saves fetching for obvious discards).
-    Returns targets (B, F) and early-keep mask (B, F)."""
+    *,
+    with_early: bool = True,
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Expand each event to its subscribers; optionally also the early
+    stale-check against the targets' last-emission timestamps (saves
+    fetching for obvious discards).  Returns targets (B, F) and the
+    early-keep mask (B, F), or ``None`` in its place when the caller
+    applies the equivalent check later (``with_early=False`` — the engine
+    does, in ``process_work_items``' keep_mask, so requesting no mask
+    skips the timestamp gather entirely)."""
     targets = out_table[jnp.clip(sid, 0, out_table.shape[0] - 1)]
     tvalid = (targets >= 0) & pvalid[:, None]
+    if not with_early:
+        return jnp.where(tvalid, targets, -1), None
     t_safe = jnp.clip(targets, 0, timestamps.shape[0] - 1)
     early = tvalid & (ts[:, None] > timestamps[t_safe])
     return jnp.where(tvalid, targets, -1), early
@@ -345,11 +353,12 @@ def make_step(
         stats["dropped_revoked"] += (e_pop & ~e_act).sum(dtype=jnp.int32)
 
         # ---- stage 1: subscriber dispatching ----------------------------
-        # The early-keep mask stays part of the fanout contract (the Pallas
-        # stream_dispatch kernel computes it in-register); the engine now
-        # applies the equivalent check in process_work_items' keep_mask.
-        targets, _early = fanout_fn(e_sid, e_ts, e_valid,
-                                    tables.out_table, state.timestamps)
+        # The engine applies the stale check in process_work_items'
+        # keep_mask, so it asks the fanout for targets only — the Pallas
+        # stream_dispatch path then skips its timestamp gather.
+        targets, _ = fanout_fn(e_sid, e_ts, e_valid,
+                               tables.out_table, state.timestamps,
+                               with_early=False)
         wi_t = targets.reshape(W)
         wi_valid = (wi_t >= 0) & jnp.repeat(e_valid, F)
         wi_src = jnp.repeat(e_sid, F)
@@ -377,6 +386,174 @@ def make_step(
 
 
 # --------------------------------------------------------------------------
+# the superstep execution plane: K rounds fused into one compiled scan
+# --------------------------------------------------------------------------
+
+class IngestRing(NamedTuple):
+    """Device-resident pool of pending SUs feeding a K-round superstep.
+
+    ``post()`` still appends host-side; at each superstep *boundary* the
+    host stages the ring with one jitted edit (:func:`stage_ring`): new SU
+    payloads are scattered into free slots and every slot's routing tag is
+    rewritten in a single transfer.  Slots tagged ``rnd < K`` form the
+    superstep's ``(K, B)`` pre-staged ingest grid — round ``rnd`` consumes
+    them at grid column ``pos``; slots tagged ``rnd >= K`` are the
+    persistent overflow queue: SUs (same-stream bursts longer than K
+    rounds) whose payloads stay resident on device and are merely
+    re-tagged at the next boundary."""
+    sid: jnp.ndarray      # (R,)
+    vals: jnp.ndarray     # (R, C)
+    ts: jnp.ndarray       # (R,)
+    rnd: jnp.ndarray      # (R,) target round this superstep; >= K = carried
+    pos: jnp.ndarray      # (R,) column within the (K, B) grid row
+    valid: jnp.ndarray    # (R,) bool — slot holds a pending SU
+
+
+class SinkSpool(NamedTuple):
+    """On-device emission spool of one superstep: every round's external
+    sink entries appended compactly behind a fill cursor, read back once
+    per superstep instead of once per round.  ``rnd`` records the round
+    that produced each entry, so per-round :class:`SinkBatch` views can be
+    reconstructed bit-identically (``StreamEngine.spool_sinks``).
+    Emissions beyond capacity are counted in ``stats["dropped_spool"]`` —
+    never silently truncated."""
+    sid: jnp.ndarray      # (P,)
+    vals: jnp.ndarray     # (P, C)
+    ts: jnp.ndarray       # (P,)
+    rnd: jnp.ndarray      # (P,)
+    fill: jnp.ndarray     # scalar int32 cursor
+
+
+def init_ring(cfg: EngineConfig, K: int) -> IngestRing:
+    R, C = cfg.ring_slots(K), cfg.channels
+    return IngestRing(
+        sid=jnp.zeros((R,), jnp.int32),
+        vals=jnp.zeros((R, C), jnp.float32),
+        ts=jnp.zeros((R,), jnp.int32),
+        rnd=jnp.full((R,), K, jnp.int32),
+        pos=jnp.zeros((R,), jnp.int32),
+        valid=jnp.zeros((R,), bool),
+    )
+
+
+def _init_spool(P: int, C: int) -> SinkSpool:
+    return SinkSpool(
+        sid=jnp.zeros((P,), jnp.int32),
+        vals=jnp.zeros((P, C), jnp.float32),
+        ts=jnp.zeros((P,), jnp.int32),
+        rnd=jnp.zeros((P,), jnp.int32),
+        fill=jnp.zeros((), jnp.int32),
+    )
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def stage_ring(ring: IngestRing, w_slot, w_sid, w_vals, w_ts,
+               rnd, pos, valid) -> IngestRing:
+    """The one host->device edit per superstep boundary: scatter newly
+    posted SU payloads into free ring slots (``w_*`` are (R,)-padded;
+    ``w_slot == R`` entries drop) and rewrite every slot's routing tag.
+    Carried-over slots keep their payloads — only tags travel again."""
+    return IngestRing(
+        sid=ring.sid.at[w_slot].set(w_sid, mode="drop"),
+        vals=ring.vals.at[w_slot].set(w_vals, mode="drop"),
+        ts=ring.ts.at[w_slot].set(w_ts, mode="drop"),
+        rnd=jnp.asarray(rnd), pos=jnp.asarray(pos),
+        valid=jnp.asarray(valid),
+    )
+
+
+def ring_grid(ring: IngestRing, K: int, B: int, C: int) -> IngestBatch:
+    """Materialize the (K, B) pre-staged ingest grid from the ring — each
+    staged SU lands at (rnd, pos), exactly where K sequential
+    ``_take_ingest`` batches would have put it."""
+    use = ring.valid & (ring.rnd < K)
+    cell = jnp.where(use, ring.rnd * B + ring.pos, K * B)
+    return IngestBatch(
+        sid=jnp.zeros((K * B,), jnp.int32)
+            .at[cell].set(ring.sid, mode="drop").reshape(K, B),
+        vals=jnp.zeros((K * B, C), jnp.float32)
+            .at[cell].set(ring.vals, mode="drop").reshape(K, B, C),
+        ts=jnp.zeros((K * B,), jnp.int32)
+            .at[cell].set(ring.ts, mode="drop").reshape(K, B),
+        valid=jnp.zeros((K * B,), bool)
+            .at[cell].set(use, mode="drop").reshape(K, B),
+    )
+
+
+def spool_append(spool: SinkSpool, sink: SinkBatch, k
+                 ) -> Tuple[SinkSpool, jnp.ndarray]:
+    """Append one round's valid sink entries behind the fill cursor;
+    returns the spool and the overflow count (-> ``dropped_spool``)."""
+    P = spool.sid.shape[0]
+    add = sink.valid
+    rank = spool.fill + jnp.cumsum(add.astype(jnp.int32)) - 1
+    dest = jnp.where(add & (rank < P), rank, P)
+    dropped = (add & (rank >= P)).sum(dtype=jnp.int32)
+    return SinkSpool(
+        sid=spool.sid.at[dest].set(sink.sid, mode="drop"),
+        vals=spool.vals.at[dest].set(sink.vals, mode="drop"),
+        ts=spool.ts.at[dest].set(sink.ts, mode="drop"),
+        rnd=spool.rnd.at[dest].set(k, mode="drop"),
+        fill=jnp.minimum(spool.fill + add.sum(dtype=jnp.int32), P),
+    ), dropped
+
+
+def scan_rounds(round_fn: Callable, state: EngineState, ring: IngestRing,
+                K: int, B: int, C: int, P: int
+                ) -> Tuple[EngineState, SinkSpool, IngestRing]:
+    """The superstep harness shared by the single-device and sharded
+    planes: materialize the (K, B) grid from the ring, ``lax.scan`` the
+    round body over it spooling each round's sink, and invalidate the
+    consumed ring slots.  ``round_fn(state, ingest) -> (state, sink)``."""
+    grid = ring_grid(ring, K, B, C)
+
+    def body(carry, xs):
+        st, sp = carry
+        k, ingest = xs
+        st, sink = round_fn(st, ingest)
+        sp, n_drop = spool_append(sp, sink, k)
+        stats = dict(st.stats)
+        stats["dropped_spool"] = stats["dropped_spool"] + n_drop
+        return (st._replace(stats=stats), sp), None
+
+    (state, spool), _ = jax.lax.scan(
+        body, (state, _init_spool(P, C)),
+        (jnp.arange(K, dtype=jnp.int32), grid))
+    return state, spool, ring._replace(valid=ring.valid & (ring.rnd >= K))
+
+
+def make_superstep(
+    cfg: EngineConfig,
+    K: int,
+    fanout_fn: Callable = fanout_reference,
+    donate: bool = True,
+    jit: bool = True,
+) -> Callable:
+    """Fuse K engine rounds into one compiled ``lax.scan``.  Signature:
+    ``superstep(tables, state, ring) -> (state, spool, ring)``.
+
+    The scan body is the exact four-stage round of :func:`make_step`, so a
+    K-superstep is bit-identical to K sequential ``round()`` calls; what
+    changes is the host boundary: one staged ingest transfer in, one spool
+    readback out, and zero device->host->device round-trips in between.
+    Like the round itself, the program is static — tables are arguments,
+    so admission edits applied *between* supersteps never retrace it."""
+    assert K >= 1
+    step = make_step(cfg, fanout_fn, jit=False)
+    B, C = cfg.batch, cfg.channels
+    P = cfg.spool_slots(K)
+
+    def superstep(tables: DeviceTables, state: EngineState, ring: IngestRing
+                  ) -> Tuple[EngineState, SinkSpool, IngestRing]:
+        return scan_rounds(lambda st, ing: step(tables, st, ing),
+                           state, ring, K, B, C, P)
+
+    if not jit:
+        return superstep
+    return jax.jit(superstep, donate_argnums=(1, 2) if donate else ())
+
+
+# --------------------------------------------------------------------------
 # host-side wrapper
 # --------------------------------------------------------------------------
 
@@ -394,8 +571,14 @@ class StreamEngine:
         self.tables = DeviceTables.from_host(registry.build_tables(priority))
         self.state = init_state(self.cfg)
         self._step = make_step(self.cfg, fanout_fn)
-        self._pending: List[Tuple[int, np.ndarray, int]] = []
+        self._fanout_fn = fanout_fn
+        self._pending: List[List] = []  # [sid, vals, ts, ring_slot | None]
         self.admission_rejected = 0     # host-side churn rejection counter
+        # superstep plane: per-K compiled scans + the device ingest ring
+        self._superstep_fns: Dict[int, Callable] = {}
+        self._ring: Optional[IngestRing] = None
+        self._ring_K = 0
+        self._ring_free: List[int] = []
 
     # -------------------------------------------------------------- ingest
     def post(self, stream, values: Sequence[float], ts: int) -> None:
@@ -403,7 +586,23 @@ class StreamEngine:
         sid = stream.sid if hasattr(stream, "sid") else int(stream)
         v = np.zeros((self.cfg.channels,), np.float32)
         v[: len(values)] = values
-        self._pending.append((sid, v, int(ts)))
+        # 4th field: the SU's ingest-ring slot once its payload is shipped
+        self._pending.append([sid, v, int(ts), None])
+
+    @staticmethod
+    def _select_wave(pending: List[List], B: int) -> Tuple[List, List]:
+        """One round's ingest selection: at most one pending SU *per
+        stream* (preserving order), at most B total.  Shared by the
+        per-round ``_take_ingest`` and the superstep staging so both paths
+        pack SUs into identical rounds."""
+        take, rest, seen = [], [], set()
+        for item in pending:
+            if len(take) < B and item[0] not in seen:
+                take.append(item)
+                seen.add(item[0])
+            else:
+                rest.append(item)
+        return take, rest
 
     def _take_ingest(self) -> IngestBatch:
         """At most one pending SU *per stream* per round (preserving order),
@@ -415,16 +614,11 @@ class StreamEngine:
         vals = np.zeros((B, C), np.float32)
         ts = np.zeros((B,), np.int32)
         valid = np.zeros((B,), bool)
-        take, rest, seen = [], [], set()
-        for item in self._pending:
-            if len(take) < B and item[0] not in seen:
-                take.append(item)
-                seen.add(item[0])
-            else:
-                rest.append(item)
-        self._pending = rest
-        for i, (s, v, t) in enumerate(take):
+        take, self._pending = self._select_wave(self._pending, B)
+        for i, (s, v, t, slot) in enumerate(take):
             sid[i], vals[i], ts[i], valid[i] = s, v, t, True
+            if slot is not None:        # consumed via the per-round API:
+                self._ring_free.append(slot)  # release its staged ring slot
         return IngestBatch(jnp.asarray(sid), jnp.asarray(vals),
                            jnp.asarray(ts), jnp.asarray(valid))
 
@@ -434,13 +628,147 @@ class StreamEngine:
         return sink
 
     def drain(self, max_rounds: int = 256) -> List[SinkBatch]:
-        """Run rounds until the queue (and host backlog) is empty."""
+        """Run rounds until the queue (and host backlog) is empty.  With
+        ``cfg.superstep > 1`` the rounds ride the superstep plane — K
+        rounds per compiled call, one sink readback per superstep — and
+        the returned per-round sink batches are reconstructed from the
+        spool (bit-identical to the per-round path)."""
+        K = self.cfg.superstep
+        if K <= 1:
+            sinks = []
+            for _ in range(max_rounds):
+                busy_host = bool(self._pending)
+                sinks.append(self.round())
+                if not busy_host and not bool(self.state.q_valid.any()):
+                    break
+            return sinks
         sinks = []
-        for _ in range(max_rounds):
+        for spool in self.drain_spools(K, max_rounds):
+            sinks.extend(self.spool_sinks(spool))
+        return sinks
+
+    def drain_spools(self, K: Optional[int] = None, max_rounds: int = 256):
+        """Yield one :class:`SinkSpool` per superstep until the host
+        backlog and device queue are empty.  Rounds are quantized to K;
+        never exceeds ``max_rounds`` (a latency bound to callers) except
+        when ``max_rounds < K``, which still runs one whole superstep.
+        The one drain-until-empty protocol for every spool consumer
+        (``drain()``, the serving bridge's ``serve``)."""
+        K = K or self.cfg.superstep
+        for _ in range(max(max_rounds // K, 1)):
             busy_host = bool(self._pending)
-            sinks.append(self.round())
+            yield self.superstep(K)
             if not busy_host and not bool(self.state.q_valid.any()):
                 break
+
+    # ----------------------------------------------------------- supersteps
+    def _assign_rounds(self, K: int) -> List[Tuple[List, int, int]]:
+        """Pack pending SUs into the (K, B) ingest grid by simulating K
+        sequential ``_take_ingest`` selections; returns ``(entry, round,
+        column)`` triples and leaves the unconsumed tail in ``_pending``."""
+        B = self.cfg.batch
+        assigned, pend = [], self._pending
+        for k in range(K):
+            take, pend = self._select_wave(pend, B)
+            assigned += [(e, k, i) for i, e in enumerate(take)]
+        self._pending = pend
+        return assigned
+
+    def _superstep_fn(self, K: int) -> Callable:
+        fn = self._superstep_fns.get(K)
+        if fn is None:
+            fn = self._superstep_fns[K] = make_superstep(
+                self.cfg, K, self._fanout_fn)
+        return fn
+
+    def _stage(self, K: int) -> None:
+        """Superstep boundary: assign rounds, ship new payloads into free
+        ring slots, rewrite every slot's routing tag — one jitted edit.
+        SUs already resident (the overflow queue) are only re-tagged."""
+        R, C = self.cfg.ring_slots(K), self.cfg.channels
+        if self._ring is None or self._ring_K != K:
+            self._ring, self._ring_K = init_ring(self.cfg, K), K
+            self._ring_free = list(range(R))
+            for e in self._pending:     # slots of the old ring are void
+                e[3] = None
+        assigned = self._assign_rounds(K)
+        # every SU consumed this superstep needs its payload on device;
+        # spill slots of carried SUs if free ones run out (host re-ships
+        # the victim later — it keeps every payload until consumption)
+        slotted = [e for e in self._pending if e[3] is not None]
+        writes = []
+        for e, _k, _i in assigned:
+            if e[3] is None:
+                if self._ring_free:
+                    e[3] = self._ring_free.pop()
+                else:                   # youngest carried SU spills its slot
+                    victim = slotted.pop()
+                    e[3], victim[3] = victim[3], None
+                writes.append(e)
+        # pre-ship overflow: earliest carried SUs claim leftover slots
+        for e in self._pending:
+            if not self._ring_free:
+                break
+            if e[3] is None:
+                e[3] = self._ring_free.pop()
+                writes.append(e)
+        w_slot = np.full((R,), R, np.int32)
+        w_sid = np.zeros((R,), np.int32)
+        w_vals = np.zeros((R, C), np.float32)
+        w_ts = np.zeros((R,), np.int32)
+        for j, e in enumerate(writes):
+            w_slot[j], w_sid[j], w_vals[j], w_ts[j] = e[3], e[0], e[1], e[2]
+        rnd = np.full((R,), K, np.int32)
+        pos = np.zeros((R,), np.int32)
+        valid = np.zeros((R,), bool)
+        for e, k, i in assigned:
+            rnd[e[3]], pos[e[3]], valid[e[3]] = k, i, True
+        for e in self._pending:
+            if e[3] is not None:
+                valid[e[3]] = True      # carried overflow stays resident
+        self._ring = stage_ring(self._ring, w_slot, w_sid, w_vals, w_ts,
+                                rnd, pos, valid)
+        self._ring_free += [e[3] for e, _k, _i in assigned]
+
+    def superstep(self, K: Optional[int] = None) -> SinkSpool:
+        """Run K fused rounds: stage the ingest ring, execute the compiled
+        scan, return the sink spool (read it back with ``spool_sinks`` or
+        feed it to the serving bridge's ``pump_spool``)."""
+        K = K or self.cfg.superstep
+        self._stage(K)
+        return self._run_superstep(K)
+
+    def _run_superstep(self, K: int) -> SinkSpool:
+        """Hook: the sharded engine threads its gmap through here."""
+        self.state, spool, self._ring = self._superstep_fn(K)(
+            self.tables, self.state, self._ring)
+        return spool
+
+    def spool_sinks(self, spool: SinkSpool,
+                    K: Optional[int] = None) -> List[SinkBatch]:
+        """Reconstruct one superstep's per-round :class:`SinkBatch` list
+        from the spool — bit-identical to K sequential ``round()`` sinks
+        (provided the spool did not overflow)."""
+        S, C = self.cfg.sink_buffer, self.cfg.channels
+        sid = np.asarray(spool.sid)
+        vals = np.asarray(spool.vals)
+        ts = np.asarray(spool.ts)
+        rnd = np.asarray(spool.rnd)
+        fill = int(spool.fill)
+        K = K or self._ring_K or (int(rnd[:fill].max()) + 1 if fill else 1)
+        sinks = []
+        for k in range(K):
+            b_sid = np.zeros((S,), np.int32)
+            b_vals = np.zeros((S, C), np.float32)
+            b_ts = np.zeros((S,), np.int32)
+            b_valid = np.zeros((S,), bool)
+            idx = np.nonzero(rnd[:fill] == k)[0]
+            n = len(idx)
+            b_sid[:n], b_vals[:n], b_ts[:n] = sid[idx], vals[idx], ts[idx]
+            b_valid[:n] = True
+            # host arrays: the spool was already read back, consumers read
+            # these with np.asarray — no device round-trip
+            sinks.append(SinkBatch(b_sid, b_vals, b_ts, b_valid))
         return sinks
 
     # ------------------------------------------------- dynamic admission

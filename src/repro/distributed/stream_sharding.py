@@ -64,9 +64,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import admission
 from repro.core.config import EngineConfig
 from repro.core.engine import (INT_MIN, STAT_KEYS, DeviceTables, EngineState,
-                               IngestBatch, SinkBatch, StreamEngine,
-                               _pop, fanout_reference, ingest_phase,
-                               process_work_items, store_and_emit)
+                               IngestBatch, IngestRing, SinkBatch, SinkSpool,
+                               StreamEngine, _pop, fanout_reference,
+                               ingest_phase, process_work_items, scan_rounds,
+                               store_and_emit)
 from repro.core.registry import EngineTables, Registry
 
 AXIS = "shards"
@@ -212,17 +213,14 @@ def sharded_init_state(cfg: EngineConfig, plan: ShardPlan) -> EngineState:
 # the sharded step
 # --------------------------------------------------------------------------
 
-def make_sharded_step(
+def make_shard_round(
     cfg: EngineConfig,
     plan: ShardPlan,
-    mesh: Mesh,
     fanout_fn: Callable = fanout_reference,
-    donate: bool = True,
 ) -> Callable:
-    """Build the jitted sharded round.  Signature:
-    ``step(tables, gmap, state, ingest) -> (state, sink)`` where every
-    ``tables``/``state``/``ingest``/``sink`` leaf carries a leading
-    ``(n_shards,)`` axis and ``gmap`` is replicated.
+    """The per-shard round body shared by the sharded step and the sharded
+    superstep scan: ``round(tables, gmap, state, ingest) -> (state, sink)``
+    over *local* (no leading shard axis) views, collectives inside.
 
     Exchange buffers & overflow accounting: stage 1 produces up to
     ``cfg.work`` work items per shard; each is bound for the shard owning
@@ -239,11 +237,8 @@ def make_sharded_step(
     E = cfg.exchange                      # per-destination exchange rows
     WR = n_shards * E                     # work width after the exchange
 
-    def shard_step(tables: DeviceTables, gmap: GlobalMaps,
-                   state: EngineState, ingest: IngestBatch):
-        tables = jax.tree.map(lambda x: x[0], tables)
-        state = jax.tree.map(lambda x: x[0], state)
-        ingest = jax.tree.map(lambda x: x[0], ingest)
+    def shard_round(tables: DeviceTables, gmap: GlobalMaps,
+                    state: EngineState, ingest: IngestBatch):
         stats = dict(state.stats)
 
         # ---- phase 0: ingest SUs routed to this shard (global sids) -----
@@ -268,8 +263,9 @@ def make_sharded_step(
         ts_by_sid = ts_all.reshape(n_shards * n_local)[gmap.sid_to_flat]
 
         # ---- stage 1: fan-out via the shard-local out-tables ------------
-        targets, _early = fanout_fn(e_loc, e_ts, e_valid,
-                                    tables.out_table, ts_by_sid)
+        targets, _ = fanout_fn(e_loc, e_ts, e_valid,
+                               tables.out_table, ts_by_sid,
+                               with_early=False)
         wi_t = targets.reshape(W)
         wi_valid = (wi_t >= 0) & jnp.repeat(e_valid, F)
         wi_src = jnp.repeat(e_sid, F)
@@ -323,7 +319,31 @@ def make_sharded_step(
         state, stats, sink = store_and_emit(cfg, tables, state, stats,
                                             r_loc, r_t, r_src, new_vals,
                                             ts_out, keep, n_local)
-        state = state._replace(stats=stats)
+        return state._replace(stats=stats), sink
+
+    return shard_round
+
+
+def make_sharded_step(
+    cfg: EngineConfig,
+    plan: ShardPlan,
+    mesh: Mesh,
+    fanout_fn: Callable = fanout_reference,
+    donate: bool = True,
+) -> Callable:
+    """Build the jitted sharded round.  Signature:
+    ``step(tables, gmap, state, ingest) -> (state, sink)`` where every
+    ``tables``/``state``/``ingest``/``sink`` leaf carries a leading
+    ``(n_shards,)`` axis and ``gmap`` is replicated.  The round body (and
+    its exchange-stage semantics) is :func:`make_shard_round`."""
+    shard_round = make_shard_round(cfg, plan, fanout_fn)
+
+    def shard_step(tables: DeviceTables, gmap: GlobalMaps,
+                   state: EngineState, ingest: IngestBatch):
+        tables = jax.tree.map(lambda x: x[0], tables)
+        state = jax.tree.map(lambda x: x[0], state)
+        ingest = jax.tree.map(lambda x: x[0], ingest)
+        state, sink = shard_round(tables, gmap, state, ingest)
         return (jax.tree.map(lambda x: x[None], state),
                 jax.tree.map(lambda x: x[None], sink))
 
@@ -333,6 +353,46 @@ def make_sharded_step(
                     out_specs=(sharded, sharded),
                     **_SHARD_MAP_KW)
     return jax.jit(fn, donate_argnums=(2,) if donate else ())
+
+
+def make_sharded_superstep(
+    cfg: EngineConfig,
+    plan: ShardPlan,
+    mesh: Mesh,
+    K: int,
+    fanout_fn: Callable = fanout_reference,
+    donate: bool = True,
+) -> Callable:
+    """Fuse K sharded rounds into one compiled ``lax.scan`` under
+    ``shard_map`` — the exchange stage (and its collectives) runs *inside*
+    the scan, so a whole superstep costs one dispatch and zero
+    device->host round-trips.  Signature: ``superstep(tables, gmap, state,
+    ring) -> (state, spool, ring)`` with per-shard leading axes on
+    everything but the replicated ``gmap``; ``ring`` holds each shard's
+    pre-routed (K, B) ingest grid (see ``ShardedStreamEngine._stage``)."""
+    assert K >= 1
+    shard_round = make_shard_round(cfg, plan, fanout_fn)
+    B, C = cfg.batch, cfg.channels
+    P_spool = cfg.spool_slots(K)
+
+    def shard_superstep(tables: DeviceTables, gmap: GlobalMaps,
+                        state: EngineState, ring: IngestRing):
+        tables = jax.tree.map(lambda x: x[0], tables)
+        state = jax.tree.map(lambda x: x[0], state)
+        ring = jax.tree.map(lambda x: x[0], ring)
+        state, spool, ring = scan_rounds(
+            lambda st, ing: shard_round(tables, gmap, st, ing),
+            state, ring, K, B, C, P_spool)
+        return (jax.tree.map(lambda x: x[None], state),
+                jax.tree.map(lambda x: x[None], spool),
+                jax.tree.map(lambda x: x[None], ring))
+
+    sharded = P(AXIS)
+    fn = _shard_map(shard_superstep, mesh=mesh,
+                    in_specs=(sharded, P(), sharded, sharded),
+                    out_specs=(sharded, sharded, sharded),
+                    **_SHARD_MAP_KW)
+    return jax.jit(fn, donate_argnums=(2, 3) if donate else ())
 
 
 # --------------------------------------------------------------------------
@@ -378,8 +438,12 @@ class ShardedStreamEngine(StreamEngine):
                                     self._shard)
         self._fanout_fn = fanout_fn
         self._step = make_sharded_step(cfg, self.plan, mesh, fanout_fn)
-        self._pending: List[Tuple[int, np.ndarray, int]] = []
+        self._pending: List[List] = []
         self.admission_rejected = 0
+        self._superstep_fns = {}
+        self._ring = None
+        self._ring_K = 0
+        self._ring_free: List[int] = []
         self._init_slots()
 
     def _init_slots(self) -> None:
@@ -433,6 +497,78 @@ class ShardedStreamEngine(StreamEngine):
         self.state, sink = self._step(self.tables, self.gmap, self.state,
                                       self._take_ingest())
         return SinkBatch(*(x.reshape((-1,) + x.shape[2:]) for x in sink))
+
+    # ----------------------------------------------------------- supersteps
+    def _superstep_fn(self, K: int):
+        fn = self._superstep_fns.get(K)
+        if fn is None:
+            fn = self._superstep_fns[K] = make_sharded_superstep(
+                self.cfg, self.plan, self.mesh, K, self._fanout_fn)
+        return fn
+
+    def _stage(self, K: int) -> None:
+        """Superstep boundary, sharded: assign rounds exactly like K
+        sequential ``_take_ingest`` calls, route every staged SU to its
+        owner shard's ring slice (fill order per shard, like the per-round
+        ingest router), and ship the whole grid in one ``device_put``.
+        The sharded ring is rebuilt each boundary — placements may have
+        moved between supersteps (admission, rebalance, rewire) — so
+        carried overflow SUs stay host-side in ``_pending`` and simply
+        stage later, preserving the single transfer per superstep."""
+        S, R, C = self.plan.n_shards, self.cfg.ring_slots(K), self.cfg.channels
+        N = self.cfg.n_streams
+        self._ring_K = K
+        assigned = self._assign_rounds(K)
+        sid = np.zeros((S, R), np.int32)
+        vals = np.zeros((S, R, C), np.float32)
+        ts = np.zeros((S, R), np.int32)
+        rnd = np.full((S, R), K, np.int32)
+        pos = np.zeros((S, R), np.int32)
+        valid = np.zeros((S, R), bool)
+        nxt = np.zeros((S,), np.int64)        # next free ring slot per shard
+        col: dict = {}                        # (shard, round) -> next column
+        for e, k, _i in assigned:             # (round, take-order) order
+            # route on the same clipped sid the per-shard step stores to
+            g = min(max(int(e[0]), 0), N - 1)
+            s = int(self.plan.sid_to_shard[g])
+            j = int(nxt[s]); nxt[s] += 1
+            c = col.get((s, k), 0); col[(s, k)] = c + 1
+            sid[s, j], vals[s, j], ts[s, j] = g, e[1], e[2]
+            rnd[s, j], pos[s, j], valid[s, j] = k, c, True
+        self._ring = jax.device_put(
+            IngestRing(sid, vals, ts, rnd, pos, valid), self._shard)
+
+    def _run_superstep(self, K: int) -> SinkSpool:
+        self.state, spool, self._ring = self._superstep_fn(K)(
+            self.tables, self.gmap, self.state, self._ring)
+        return spool
+
+    def spool_sinks(self, spool: SinkSpool, K=None) -> List[SinkBatch]:
+        """Per-round SinkBatches from the per-shard spools — each round's
+        batch is the shard-concatenated layout ``round()`` returns."""
+        S, C = self.cfg.sink_buffer, self.cfg.channels
+        n_sh = self.plan.n_shards
+        sid = np.asarray(spool.sid)
+        vals = np.asarray(spool.vals)
+        ts = np.asarray(spool.ts)
+        rnd = np.asarray(spool.rnd)
+        fill = np.asarray(spool.fill)
+        K = K or self._ring_K or 1
+        sinks = []
+        for k in range(K):
+            b_sid = np.zeros((n_sh * S,), np.int32)
+            b_vals = np.zeros((n_sh * S, C), np.float32)
+            b_ts = np.zeros((n_sh * S,), np.int32)
+            b_valid = np.zeros((n_sh * S,), bool)
+            for s in range(n_sh):
+                idx = np.nonzero(rnd[s, :fill[s]] == k)[0]
+                n = len(idx)
+                b_sid[s * S:s * S + n] = sid[s, idx]
+                b_vals[s * S:s * S + n] = vals[s, idx]
+                b_ts[s * S:s * S + n] = ts[s, idx]
+                b_valid[s * S:s * S + n] = True
+            sinks.append(SinkBatch(b_sid, b_vals, b_ts, b_valid))
+        return sinks
 
     # ------------------------------------------------- dynamic admission
     def _table_row(self, sid: int):
@@ -578,9 +714,10 @@ class ShardedStreamEngine(StreamEngine):
             self.state = jax.device_put(self.state._replace(
                 values=jnp.asarray(v.reshape(S, L, C)),
                 timestamps=jnp.asarray(ts.reshape(S, L))), self._shard)
-            if L != old.n_local:    # step closure is shaped by n_local
+            if L != old.n_local:    # step closures are shaped by n_local
                 self._step = make_sharded_step(self.cfg, new_plan, self.mesh,
                                                self._fanout_fn)
+                self._superstep_fns = {}
         self.plan = new_plan
         self.tables = jax.device_put(DeviceTables.from_host(host_tables),
                                      self._shard)

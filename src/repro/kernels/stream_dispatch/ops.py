@@ -25,15 +25,19 @@ def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "with_early"))
 def stream_dispatch(sid, ts, valid, out_table, timestamps, *,
-                    interpret: Optional[bool] = None
-                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Fused subscriber fan-out + early stale filter (Pallas).
+                    interpret: Optional[bool] = None,
+                    with_early: bool = True,
+                    ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Fused subscriber fan-out + optional early stale filter (Pallas).
 
     sid/ts/valid: (B,); out_table: (N, F) int32 (-1 pad);
     timestamps: (N,) int32.  Returns (targets (B, F) int32 with -1 = none,
-    early-keep (B, F) bool).
+    early-keep (B, F) bool).  ``with_early=False`` skips the whole
+    timestamp gather and returns ``(targets, None)`` — the engine asks for
+    that, since it re-checks staleness in ``process_work_items`` anyway
+    and the mask was previously computed only to be discarded.
     """
     interp = _interpret_default() if interpret is None else interpret
     B = sid.shape[0]
@@ -43,6 +47,8 @@ def stream_dispatch(sid, ts, valid, out_table, timestamps, *,
                            jnp.where(valid, sid, -1), interpret=interp)
     targets = jnp.round(biased).astype(jnp.int32) - 1         # -1 = none/pad
     tvalid = targets >= 0
+    if not with_early:
+        return jnp.where(tvalid, targets, -1), None
     # stage 2: gather target last-emission timestamps (hi/lo split, exact)
     ts_tab = jnp.stack([timestamps >> 12, timestamps & 0xFFF], axis=1)
     hilo = onehot_gather(ts_tab.astype(jnp.int32),
@@ -55,7 +61,7 @@ def stream_dispatch(sid, ts, valid, out_table, timestamps, *,
 
 
 def make_fanout(interpret: Optional[bool] = None):
-    def fanout(sid, ts, pvalid, out_table, timestamps):
+    def fanout(sid, ts, pvalid, out_table, timestamps, *, with_early=True):
         return stream_dispatch(sid, ts, pvalid, out_table, timestamps,
-                               interpret=interpret)
+                               interpret=interpret, with_early=with_early)
     return fanout

@@ -19,16 +19,20 @@ def onehot_gather_ref(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
     return jnp.where(ok[:, None], rows, 0.0)
 
 
-def stream_dispatch_ref(sid, ts, valid, out_table, timestamps
+def stream_dispatch_ref(sid, ts, valid, out_table, timestamps, *,
+                        with_early: bool = True
                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Subscriber fan-out + early stale filter.
+    """Subscriber fan-out + optional early stale filter.
 
     sid/ts/valid: (B,), out_table: (N, F) int32 (-1 pad),
     timestamps: (N,) int32.  Returns targets (B, F) int32 (-1 = none) and
-    early-keep mask (B, F) bool."""
+    early-keep mask (B, F) bool — or ``None`` in the mask's place when the
+    caller checks staleness itself (``with_early=False``)."""
     N = timestamps.shape[0]
     targets = out_table[jnp.clip(sid, 0, N - 1)]
     tvalid = (targets >= 0) & valid[:, None]
+    if not with_early:
+        return jnp.where(tvalid, targets, -1), None
     t_safe = jnp.clip(targets, 0, N - 1)
     early = tvalid & (ts[:, None] > timestamps[t_safe])
     return jnp.where(tvalid, targets, -1), early

@@ -106,10 +106,17 @@ class ContinuousBatcher:
         self.ticks += 1
         return finished
 
-    def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
+    def run_ticks(self, n: int) -> List[Request]:
+        """A serving superstep: up to ``n`` decode ticks back to back,
+        stopping early when no request is queued or live.  The serving
+        bridge calls this once per engine superstep instead of ticking
+        token by token around its own bookkeeping."""
         done: List[Request] = []
-        for _ in range(max_ticks):
-            done += self.tick()
+        for _ in range(n):
             if not self.queue and all(r is None for r in self.live):
                 break
+            done += self.tick()
         return done
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
+        return self.run_ticks(max_ticks)

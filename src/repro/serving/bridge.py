@@ -20,7 +20,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.engine import SinkBatch, StreamEngine
+from repro.core.engine import SinkBatch, SinkSpool, StreamEngine
 from repro.serving.batcher import ContinuousBatcher, Request
 
 
@@ -99,30 +99,69 @@ class ModelBackedStreams:
         for i in range(sid.shape[0]):
             if not valid[i]:
                 continue
-            r = self.routes.get(int(sid[i]))
-            if r is None:
-                continue
-            rid = self._next_rid
-            self._next_rid += 1
-            req = Request(rid=rid, prompt=self._tokenize(vals[i], r.prompt_len),
-                          max_tokens=4)
-            self.batcher.submit(req)
-            self.inflight[rid] = r
-            n += 1
+            n += self._submit(int(sid[i]), vals[i])
+        return n
+
+    def pump_spool(self, spool: SinkSpool, ts: int) -> int:
+        """Scan a whole superstep's sink spool (one readback for K rounds)
+        for model-backed emissions — the superstep-plane counterpart of
+        per-round :meth:`pump`.  Handles both the single-device spool and
+        the per-shard stacked spool of the sharded engine; submissions run
+        round-major (round, then shard, then emission order) so request
+        ids match the per-round pump path exactly."""
+        sid = np.asarray(spool.sid)
+        vals = np.asarray(spool.vals)
+        rnd = np.asarray(spool.rnd)
+        fill = np.asarray(spool.fill)
+        if sid.ndim == 1:                      # single device
+            sid, vals, rnd, fill = sid[None], vals[None], rnd[None], fill[None]
+        entries = sorted((int(rnd[s, i]), s, i)
+                         for s in range(sid.shape[0])
+                         for i in range(int(fill[s])))
+        n = 0
+        for _k, s, i in entries:
+            n += self._submit(int(sid[s, i]), vals[s, i])
+        return n
+
+    def _submit(self, sid: int, vals: np.ndarray) -> int:
+        r = self.routes.get(sid)
+        if r is None:
+            return 0
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, prompt=self._tokenize(vals, r.prompt_len),
+                      max_tokens=4)
+        self.batcher.submit(req)
+        self.inflight[rid] = r
+        return 1
+
+    def serve(self, ts: int, K: Optional[int] = None,
+              max_rounds: int = 256) -> int:
+        """One serving step: drain the engine's backlog (in supersteps of
+        ``K`` rounds when K > 1, pumping each spool; per-round sinks at
+        K <= 1), submit the model-backed emissions, then drain the batcher
+        so completions re-enter the engine as SUs.  Both paths process the
+        whole backlog up to ``max_rounds``; K only sets how many rounds
+        share one dispatch.  Returns the number of requests submitted."""
+        K = K or self.engine.cfg.superstep
+        if K <= 1:
+            n = sum(self.pump(sink, ts)
+                    for sink in self.engine.drain(max_rounds))
+        else:
+            n = sum(self.pump_spool(spool, ts) for spool in
+                    self.engine.drain_spools(K, max_rounds))
+        self.drain(ts=ts)
         return n
 
     def drain(self, max_ticks: int = 1000, ts: int = 0) -> List[Request]:
-        """Run the batcher; post completions back into the engine."""
+        """Run the batcher to completion (one ``run_ticks`` burst — it
+        stops by itself when nothing is queued or live); post completions
+        back into the engine as SUs."""
         done = []
-        for _ in range(max_ticks):
-            finished = self.batcher.tick()
-            for req in finished:
-                r = self.inflight.pop(req.rid)
-                score = float(np.mean(req.output)) / self.batcher.cfg.vocab
-                self.engine.post(r.response_stream, [score], ts=ts + req.rid + 1)
-                done.append(req)
-            if not self.batcher.queue and \
-                    all(s is None for s in self.batcher.live):
-                break
+        for req in self.batcher.run_ticks(max_ticks):
+            r = self.inflight.pop(req.rid)
+            score = float(np.mean(req.output)) / self.batcher.cfg.vocab
+            self.engine.post(r.response_stream, [score], ts=ts + req.rid + 1)
+            done.append(req)
         self.completed += done
         return done

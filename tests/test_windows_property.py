@@ -7,8 +7,20 @@ import collections
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+try:        # the hypothesis-based tests skip without it; the deterministic
+    from hypothesis import given, settings, strategies as st  # ones still run
+except ImportError:
+    def given(*a, **k):
+        return lambda f: pytest.mark.skip(
+            reason="hypothesis not installed")(f)
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    class st:                                # placeholder strategy namespace
+        @staticmethod
+        def composite(f):
+            return lambda *a, **k: None
 
 import jax.numpy as jnp
 
@@ -56,6 +68,88 @@ def test_window_store_matches_deque_oracle(case):
                                        rtol=1e-6, atol=1e-6)
             np.testing.assert_allclose(float(agg["min"][s, 0]), min(vals),
                                        rtol=1e-6, atol=1e-6)
+
+
+@st.composite
+def horizon_schedules(draw):
+    """Pushes with drawn timestamps plus a horizon that may fall below,
+    inside, or above the whole ts range — so the empty-window and
+    all-entries-stale (±3e38 sentinel) paths are exercised, and some
+    streams receive no pushes at all."""
+    n_streams = draw(st.integers(2, 6))
+    window = draw(st.sampled_from([2, 4, 8]))
+    n_rounds = draw(st.integers(1, 12))
+    rounds = []
+    for _ in range(n_rounds):
+        k = draw(st.integers(1, max(n_streams - 1, 1)))
+        sids = draw(st.lists(st.integers(0, n_streams - 1), min_size=k,
+                             max_size=k, unique=True))
+        vals = [draw(st.floats(-100, 100, allow_nan=False, width=32))
+                for _ in sids]
+        ts = draw(st.integers(0, 50))
+        rounds.append((sids, vals, ts))
+    horizon = draw(st.integers(-2, 60))
+    return n_streams, window, rounds, horizon
+
+
+@settings(max_examples=40, deadline=None)
+@given(horizon_schedules())
+def test_window_aggregate_horizon_matches_bruteforce(case):
+    """aggregate(horizon=...) == a brute-force O(N*W) reference over the
+    retained ring entries with ts > horizon."""
+    n_streams, window, rounds, horizon = case
+    store = init_window_store(n_streams, window, 1)
+    oracle = {s: collections.deque(maxlen=window) for s in range(n_streams)}
+    for sids, vals, ts in rounds:
+        store = push(store, jnp.asarray(sids, jnp.int32),
+                     jnp.asarray(np.array(vals, np.float32)[:, None]),
+                     jnp.full((len(sids),), ts, jnp.int32),
+                     jnp.ones((len(sids),), bool))
+        for s, v in zip(sids, vals):
+            oracle[s].append((np.float32(v), ts))
+    agg = aggregate(store, horizon=horizon)
+    for s in range(n_streams):
+        live = [v for v, t in oracle[s] if t > horizon]   # O(N*W) reference
+        assert int(agg["count"][s, 0]) == len(live)
+        if not live:
+            # empty window / all entries stale: the ±3e38 max/min sentinels
+            # must never leak — every aggregate reads exactly 0
+            for key in ("sum", "mean", "max", "min"):
+                assert float(agg[key][s, 0]) == 0.0
+            continue
+        np.testing.assert_allclose(float(agg["sum"][s, 0]),
+                                   np.float32(sum(live)), rtol=1e-5,
+                                   atol=1e-4)
+        np.testing.assert_allclose(float(agg["mean"][s, 0]),
+                                   sum(live) / len(live), rtol=1e-5,
+                                   atol=1e-4)
+        np.testing.assert_allclose(float(agg["max"][s, 0]), max(live),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(float(agg["min"][s, 0]), min(live),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_window_aggregate_horizon_all_stale_explicit():
+    """Deterministic cover for windows.py's sentinel path: every retained
+    entry is older than the horizon."""
+    store = init_window_store(3, 4, 2)
+    for i in range(3):
+        store = push(store, jnp.arange(3, dtype=jnp.int32),
+                     jnp.full((3, 2), float(i + 1)),
+                     jnp.full((3,), i + 1, jnp.int32),
+                     jnp.ones((3,), bool))
+    agg = aggregate(store, horizon=100)       # ts <= 3 < 100: all stale
+    for key in ("sum", "mean", "max", "min", "count"):
+        np.testing.assert_array_equal(np.asarray(agg[key]),
+                                      np.zeros((3, 2), np.float32),
+                                      err_msg=key)
+    full = aggregate(store, horizon=0)        # nothing stale
+    np.testing.assert_array_equal(np.asarray(full["count"]),
+                                  np.full((3, 2), 3.0))
+    np.testing.assert_array_equal(np.asarray(full["max"]),
+                                  np.full((3, 2), 3.0))
+    np.testing.assert_array_equal(np.asarray(full["min"]),
+                                  np.full((3, 2), 1.0))
 
 
 def test_engine_state_checkpoint_roundtrip(tmp_path):
