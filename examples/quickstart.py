@@ -1,16 +1,19 @@
-"""Quickstart: the paper's core loop in ~40 lines.
+"""Quickstart: the paper's core loop, now exercising every plane.
 
 Two tenants; Alice's device feeds a temperature stream; Bob subscribes a
-composite stream that converts F->C and keeps only freezing temperatures
-(the paper's Listing 1), then live-injects new user code (F->Kelvin)
-WITHOUT recompiling the engine.
+composite that converts F->C and keeps only freezing temperatures (the
+paper's Listing 1). The engine is built capacity-padded, so Bob then
+*live-admits* a second pipeline on the running engine, swaps its user
+code (F->Kelvin) without recompiling, and the whole backlog drains
+through the superstep plane (K rounds per compiled dispatch).
 
     PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import EngineConfig, Registry, StreamEngine
+from repro.core import EngineConfig, Registry, create_engine
 
-cfg = EngineConfig(n_streams=32, batch=8, queue=128, max_in=4, max_out=4)
-reg = Registry(cfg)
+cfg = EngineConfig(n_streams=32, batch=8, queue=128, max_in=4, max_out=4,
+                   superstep=4)             # drain() fuses 4 rounds/dispatch
+reg = Registry.with_capacity(cfg)           # spare rows for live admission
 
 alice = reg.create_tenant("alice")
 bob = reg.create_tenant("bob")
@@ -22,19 +25,31 @@ freezing = reg.create_composite(                            # paper Listing 1
     post_filter="out.c < 0",
 )
 
-engine = StreamEngine(reg)
+engine = create_engine(reg)
 
 for ts, fahrenheit in enumerate([14.0, 68.0, 5.0], start=1):
     engine.post(thermo, [fahrenheit], ts=ts)
-engine.drain()
+engine.drain()                              # rides the K=4 superstep scan
 print(f"freezing_c = {engine.value_of(freezing)[0]:.2f} C "
       f"(ts={engine.ts_of(freezing)})")
 print("counters:", engine.counters())
 
+# live admission (paper SIII): a new pipeline joins the *running* engine —
+# one jitted table edit, zero recompilation
+kelvin = engine.admit_composite(bob, "kelvin", ["k"], [thermo],
+                                {"k": "(thermo.f - 32) * 5 / 9"})
+assert kelvin is not None, "capacity exhausted (admission_rejected counts it)"
+
 # live user-code injection (paper SIV-F): same compiled engine, new code
-engine.inject_code(freezing, {"c": "(thermo.f - 32) * 5 / 9 + 273.15"})
+engine.swap_program(kelvin, {"k": "(thermo.f - 32) * 5 / 9 + 273.15"})
 engine.post(thermo, [212.0], ts=10)
+spool = engine.superstep()                  # one explicit K-round superstep
+print(f"superstep emitted {sum(s.valid.sum() for s in engine.spool_sinks(spool))} "
+      "sink entries")
 engine.drain()
-print(f"after injection: {engine.value_of(freezing)[0]:.2f} K")
-assert abs(engine.value_of(freezing)[0] - 373.15) < 1e-3
+print(f"after injection: kelvin = {engine.value_of(kelvin)[0]:.2f} K")
+assert abs(engine.value_of(kelvin)[0] - 373.15) < 1e-3
+
+# and leave as you came: revoke mid-flight, still zero recompiles
+engine.revoke_stream(kelvin)
 print("OK")

@@ -25,6 +25,10 @@ round consumes —
                          physical slot — the sharded engine's ``rebalance``
     reset_windows        clear a stream's ring buffer in a
                          :class:`~repro.core.windows.WindowStore`
+    set_weight           edit one tenant's weighted-fair-pop share in the
+                         live weight table (QoS plane)
+    set_quota            edit one tenant's ingest token bucket
+                         (tokens/round + burst capacity; QoS plane)
 
 All ops address rows by an *index tuple*: ``(sid,)`` on a single device,
 ``(shard, local)`` against the sharded tables — the same code traces once
@@ -52,10 +56,18 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import INT_MIN, DeviceTables, EngineState
+from repro.core.engine import (FAIR_SCALE, INT_MAX, INT_MIN, DeviceTables,
+                               EngineState)
 
-# fill value of each table field for a vacated row (matches the images
-# Registry.build_tables produces for rows no stream occupies)
+# token buckets refill as tokens + quota with tokens <= burst, so both
+# knobs are clipped to half the int32 range to make the sum overflow-proof
+# ("effectively unlimited" is quota=0, not a huge number)
+QUOTA_MAX = (INT_MAX >> 1) - 1
+
+# fill value of each *per-stream* table field for a vacated row (matches
+# the images Registry.build_tables produces for rows no stream occupies);
+# the per-tenant QoS tables (weight/quota/burst) are deliberately absent —
+# they are not row-indexed and survive every admit/revoke/migrate
 _TABLE_FILL = {
     "in_table": -1, "in_count": 0, "out_table": -1, "out_count": 0,
     "progs": 0, "consts": 0.0, "is_composite": False, "tenant": 0,
@@ -67,7 +79,7 @@ _STATE_FILL = {"values": 0.0, "timestamps": INT_MIN}
 def _clear_row(tables: DeviceTables, row: Tuple) -> DeviceTables:
     return tables._replace(**{
         f: getattr(tables, f).at[row].set(_TABLE_FILL[f])
-        for f in DeviceTables._fields})
+        for f in _TABLE_FILL})
 
 
 def _reset_state_row(state: EngineState, row: Tuple) -> EngineState:
@@ -210,7 +222,7 @@ def migrate_row(tables: DeviceTables, state: EngineState, src_row: Tuple,
     slot (cross-shard under the sharded layout), leaving the source slot
     vacated.  The queue is untouched: callers drain before migrating."""
     moved_t = {}
-    for f in DeviceTables._fields:
+    for f in _TABLE_FILL:          # per-stream fields only; QoS tables stay
         arr = getattr(tables, f)
         arr = arr.at[dst_row].set(arr[src_row])
         moved_t[f] = arr.at[src_row].set(_TABLE_FILL[f])
@@ -220,6 +232,39 @@ def migrate_row(tables: DeviceTables, state: EngineState, src_row: Tuple,
         arr = arr.at[dst_row].set(arr[src_row])
         moved_s[f] = arr.at[src_row].set(fill)
     return tables._replace(**moved_t), state._replace(**moved_s)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def set_weight(tables: DeviceTables, tid, weight) -> DeviceTables:
+    """Set tenant ``tid``'s fair-share weight in the live weight table —
+    the QoS half of the admission contract: weights are *data* to the
+    weighted-fair pop, so editing them mid-flight never retraces the
+    round.  Weight is clipped to ``[0, FAIR_SCALE]`` (0 = unshaped, the
+    lowered default).  The ``...`` index writes every shard's replicated
+    copy at once under the sharded ``(n_shards, n_tenants)`` layout."""
+    w = jnp.clip(weight, 0, FAIR_SCALE).astype(jnp.int32)
+    return tables._replace(weight=tables.weight.at[..., tid].set(w))
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def set_quota(tables: DeviceTables, state: EngineState, tid, quota, burst
+              ) -> Tuple[DeviceTables, EngineState]:
+    """Set tenant ``tid``'s ingest quota: a token bucket refilled by
+    ``quota`` tokens per engine round up to capacity ``burst``; arrivals
+    beyond it are shed into ``dropped_quota`` (``quota=0`` removes the
+    cap).  The tenant's current bucket is clamped to the new ``burst`` so
+    a tightened quota takes effect immediately.  Both knobs are clipped
+    to ``[0, QUOTA_MAX]`` so the per-round refill ``tokens + quota`` can
+    never overflow int32 (for unlimited, use ``quota=0`` — not a huge
+    number).  Pure table edit — zero retraces, like every op in this
+    module."""
+    q = jnp.clip(quota, 0, QUOTA_MAX).astype(jnp.int32)
+    b = jnp.clip(burst, 0, QUOTA_MAX).astype(jnp.int32)
+    tables = tables._replace(
+        quota=tables.quota.at[..., tid].set(q),
+        burst=tables.burst.at[..., tid].set(b))
+    state = state._replace(tokens=jnp.minimum(state.tokens, tables.burst))
+    return tables, state
 
 
 def reset_windows(store, sid):

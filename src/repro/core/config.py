@@ -13,6 +13,11 @@ import dataclasses
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
+    """Compile-time capacities of one engine: array shapes of every table,
+    state leaf and batch the jitted round is traced for.  Changing any
+    field means a new compiled program; everything *within* these shapes
+    (topologies, user code, QoS weights and quotas) is runtime data.
+    Sizing and tuning guidance lives in docs/OPERATIONS.md."""
     n_streams: int = 256        # stream-id capacity (rows of the state table)
     n_tenants: int = 16
     channels: int = 4           # max channels per Sensor Update
@@ -36,43 +41,53 @@ class EngineConfig:
 
     # ---- register file layout ------------------------------------------
     @property
-    def reg_inputs(self) -> int:        # input slot i, channel c -> i*C + c
+    def reg_inputs(self) -> int:
+        """First input register: slot i, channel c lands at ``i*C + c``."""
         return 0
 
     @property
-    def reg_prev(self) -> int:          # previous self value, C regs
+    def reg_prev(self) -> int:
+        """First of the C registers holding the stream's previous value."""
         return self.max_in * self.channels
 
     @property
-    def reg_ts(self) -> int:            # trigger timestamp (as f32)
+    def reg_ts(self) -> int:
+        """Register carrying the trigger SU's timestamp (as float32)."""
         return self.reg_prev + self.channels
 
     @property
-    def reg_trigger(self) -> int:       # trigger slot index (as f32)
+    def reg_trigger(self) -> int:
+        """Register carrying the triggering input-slot index (as f32)."""
         return self.reg_ts + 1
 
     @property
-    def reg_result(self) -> int:        # transform result, C regs
+    def reg_result(self) -> int:
+        """First of the C registers the transform writes its result to."""
         return self.reg_trigger + 1
 
     @property
-    def reg_pref(self) -> int:          # pre-filter boolean
+    def reg_pref(self) -> int:
+        """Pre-filter boolean register (nonzero = SU passes)."""
         return self.reg_result + self.channels
 
     @property
-    def reg_postf(self) -> int:         # post-filter boolean
+    def reg_postf(self) -> int:
+        """Post-filter boolean register (nonzero = emission passes)."""
         return self.reg_pref + 1
 
     @property
     def reg_tmp(self) -> int:
+        """First of the ``n_temps`` VM scratch registers."""
         return self.reg_postf + 1
 
     @property
     def n_regs(self) -> int:
+        """Total register-file width per work item."""
         return self.reg_tmp + self.n_temps
 
     @property
-    def work(self) -> int:              # work items per round
+    def work(self) -> int:
+        """Work items per round: ``batch * max_out`` (stage-1 fan-out)."""
         return self.batch * self.max_out
 
     @property
@@ -119,6 +134,8 @@ class EngineConfig:
         )
 
     def validate(self) -> "EngineConfig":
+        """Assert the capacity invariants the engine assumes; returns self
+        so constructors can chain it."""
         assert self.n_streams >= 2 and self.channels >= 1
         assert self.max_in >= 1 and self.max_out >= 1
         assert self.queue >= self.batch

@@ -34,27 +34,52 @@ from repro.core.registry import CapacityError, EngineTables, Registry
 INT_MIN = np.iinfo(np.int32).min + 1
 INT_MAX = np.iinfo(np.int32).max
 
+# Virtual-time granularity of the weighted-fair pop: a tenant with weight w
+# advances its virtual clock by FAIR_SCALE // w per queued SU, so weights are
+# meaningful in [1, FAIR_SCALE] (admission.set_weight clips).  Weight 0 (the
+# default) exempts the tenant from shaping entirely — its SUs carry virtual
+# tag 0, which makes the all-zero table bit-identical to the pre-QoS
+# (priority, seq) FIFO pop.
+FAIR_SCALE = 1 << 15
+
 
 class DeviceTables(NamedTuple):
-    in_table: jnp.ndarray
-    in_count: jnp.ndarray
-    out_table: jnp.ndarray
-    out_count: jnp.ndarray
-    progs: jnp.ndarray
-    consts: jnp.ndarray
-    is_composite: jnp.ndarray
-    tenant: jnp.ndarray
-    priority: jnp.ndarray
-    n_channels: jnp.ndarray
-    model_backed: jnp.ndarray
-    active: jnp.ndarray        # live-row mask; admission flips it on device
+    """Device image of :class:`~repro.core.registry.EngineTables`: the
+    per-stream routing/program tables (leading dim ``n_streams``, or
+    ``(n_shards, n_local)`` under the sharded layout) plus the per-tenant
+    QoS tables (leading dim ``n_tenants``, replicated per shard).  All of
+    it is *data* to the compiled round — every field can be edited live by
+    :mod:`repro.core.admission` ops with zero retraces."""
+    in_table: jnp.ndarray      # (N, max_in) int32 input sids, -1 pad
+    in_count: jnp.ndarray      # (N,) int32
+    out_table: jnp.ndarray     # (N, max_out) int32 subscriber sids, -1 pad
+    out_count: jnp.ndarray     # (N,) int32
+    progs: jnp.ndarray         # (N, prog_len, 4) int32 VM bytecode
+    consts: jnp.ndarray        # (N, n_consts) float32 constant pools
+    is_composite: jnp.ndarray  # (N,) bool
+    tenant: jnp.ndarray        # (N,) int32 owning tenant id
+    priority: jnp.ndarray      # (N,) int32, lower = served first (§IV-E)
+    n_channels: jnp.ndarray    # (N,) int32
+    model_backed: jnp.ndarray  # (N,) bool — serviced by the model plane
+    active: jnp.ndarray        # (N,) live-row mask; admission flips it live
+    # ---- tenant QoS plane (per-tenant, NOT per-stream) ------------------
+    weight: jnp.ndarray        # (T,) int32 fair-share weight; 0 = unshaped
+    quota: jnp.ndarray         # (T,) int32 tokens refilled/round; 0 = no cap
+    burst: jnp.ndarray         # (T,) int32 token-bucket capacity
 
     @classmethod
     def from_host(cls, t: EngineTables) -> "DeviceTables":
+        """Move every host (numpy) table of ``t`` onto the default device
+        unchanged in shape and dtype."""
         return cls(**{f: jnp.asarray(getattr(t, f)) for f in cls._fields})
 
 
 class EngineState(NamedTuple):
+    """The mutable half of one engine (or one shard): last values, the
+    pending-SU queue, and the counters.  Per-tenant leaves have leading dim
+    ``n_tenants``; the sharded engine stacks every leaf on a leading
+    ``(n_shards,)`` axis and sums per-tenant leaves across shards on
+    readback."""
     values: jnp.ndarray        # (N, C) last value per stream
     timestamps: jnp.ndarray    # (N,) int32 last emission ts (INT_MIN = never)
     q_sid: jnp.ndarray         # (Q,)
@@ -63,11 +88,17 @@ class EngineState(NamedTuple):
     q_seq: jnp.ndarray         # (Q,) FIFO tiebreaker
     q_valid: jnp.ndarray       # (Q,) bool
     seq: jnp.ndarray           # scalar int32
-    tenant_emitted: jnp.ndarray  # (n_tenants,)
+    tenant_emitted: jnp.ndarray  # (T,) emissions per owning tenant
+    tokens: jnp.ndarray        # (T,) ingest token buckets (quota plane)
+    tenant_queued: jnp.ndarray   # (T,) queue occupancy after the round
+    tenant_dropped_quota: jnp.ndarray     # (T,) SUs shed over quota
+    tenant_dropped_overflow: jnp.ndarray  # (T,) queue/exchange drops
     stats: Dict[str, jnp.ndarray]
 
 
 class IngestBatch(NamedTuple):
+    """One round's external Sensor Updates, padded to ``cfg.batch`` rows
+    (``valid`` masks the live ones); ``ts`` are int32 event timestamps."""
     sid: jnp.ndarray           # (B,)
     vals: jnp.ndarray          # (B, C)
     ts: jnp.ndarray            # (B,)
@@ -87,12 +118,15 @@ STAT_KEYS = (
     "ingested", "ingest_stale", "ingest_coalesced",
     "processed", "discarded_stale", "filtered", "coalesced",
     "emitted", "enqueued", "dropped_overflow", "nonfinite",
-    "dropped_revoked", "dropped_spool",
+    "dropped_revoked", "dropped_spool", "dropped_quota",
 )
 
 
 def init_state(cfg: EngineConfig) -> EngineState:
-    N, C, Q = cfg.n_streams, cfg.channels, cfg.queue
+    """Fresh all-zero :class:`EngineState` for a single-device engine
+    (timestamps at ``INT_MIN`` = never emitted, empty queue, zero counters
+    and token buckets)."""
+    N, C, Q, T = cfg.n_streams, cfg.channels, cfg.queue, cfg.n_tenants
     return EngineState(
         values=jnp.zeros((N, C), jnp.float32),
         timestamps=jnp.full((N,), INT_MIN, jnp.int32),
@@ -102,7 +136,11 @@ def init_state(cfg: EngineConfig) -> EngineState:
         q_seq=jnp.zeros((Q,), jnp.int32),
         q_valid=jnp.zeros((Q,), bool),
         seq=jnp.zeros((), jnp.int32),
-        tenant_emitted=jnp.zeros((cfg.n_tenants,), jnp.int32),
+        tenant_emitted=jnp.zeros((T,), jnp.int32),
+        tokens=jnp.zeros((T,), jnp.int32),
+        tenant_queued=jnp.zeros((T,), jnp.int32),
+        tenant_dropped_quota=jnp.zeros((T,), jnp.int32),
+        tenant_dropped_overflow=jnp.zeros((T,), jnp.int32),
         stats={k: jnp.zeros((), jnp.int32) for k in STAT_KEYS},
     )
 
@@ -111,8 +149,12 @@ def init_state(cfg: EngineConfig) -> EngineState:
 # queue helpers
 # --------------------------------------------------------------------------
 
-def _enqueue(state: EngineState, sid, vals, ts, mask) -> Tuple[EngineState, jnp.ndarray]:
-    """Append masked items into free queue slots; returns #dropped."""
+def _enqueue(state: EngineState, sid, vals, ts, mask, tenant=None
+             ) -> Tuple[EngineState, jnp.ndarray]:
+    """Append masked items into free queue slots; returns #dropped.  With
+    ``tenant`` (an (X,) tenant id per item), overflow drops are also
+    charged to ``state.tenant_dropped_overflow`` so contention for queue
+    slots is attributable per tenant."""
     Q = state.q_valid.shape[0]
     X = sid.shape[0]
     free = jnp.nonzero(~state.q_valid, size=X, fill_value=Q)[0]  # first X free
@@ -129,17 +171,71 @@ def _enqueue(state: EngineState, sid, vals, ts, mask) -> Tuple[EngineState, jnp.
         q_valid=state.q_valid.at[dest].set(True, mode="drop"),
         seq=state.seq + mask.sum(dtype=jnp.int32),
     )
-    dropped = (mask & ~ok).sum(dtype=jnp.int32)
-    return new, dropped
+    drop_mask = mask & ~ok
+    if tenant is not None:
+        T = state.tenant_dropped_overflow.shape[0]
+        new = new._replace(
+            tenant_dropped_overflow=new.tenant_dropped_overflow.at[
+                jnp.where(drop_mask, tenant, T)].add(1, mode="drop"))
+    return new, drop_mask.sum(dtype=jnp.int32)
 
 
-def _pop(state: EngineState, priority_by_sid: jnp.ndarray, batch: int):
-    """Priority pop: lowest (priority, seq) first — §IV-E novelty/§V-C
-    near-source prioritization; priority table all-zero == plain FIFO.
-    ``priority_by_sid`` is indexed by whatever id space ``q_sid`` uses
-    (global sids in the sharded engine, table rows on a single device)."""
+def _tenant_rank(mask: jnp.ndarray, tenant_idx: jnp.ndarray,
+                 n_tenants: int) -> jnp.ndarray:
+    """0-based rank of each masked item among *masked items of the same
+    tenant*, in array order — the shared idiom of the weighted-fair pop
+    (ranks within the (priority, seq)-sorted queue) and the quota gate
+    (arrival number within the ingest batch).  Unmasked lanes read an
+    arbitrary value; callers gate on ``mask``."""
+    onehot = mask[:, None] & \
+        (tenant_idx[:, None] == jnp.arange(n_tenants)[None, :])
+    return jnp.take_along_axis(
+        jnp.cumsum(onehot.astype(jnp.int32), axis=0) - 1,
+        tenant_idx[:, None], axis=1)[:, 0]
+
+
+def _pop(state: EngineState, priority_by_sid: jnp.ndarray, batch: int,
+         tenant_by_sid: Optional[jnp.ndarray] = None,
+         weight: Optional[jnp.ndarray] = None):
+    """Pop up to ``batch`` queued SUs, lowest sort key first.
+
+    Without QoS args this is the §IV-E priority pop: lowest ``(priority,
+    seq)`` wins (priority table all-zero == plain FIFO).  With
+    ``tenant_by_sid`` (id space of ``q_sid``) and a per-tenant ``weight``
+    table, the key generalizes to weighted-fair queueing composed with the
+    per-sid priority: within each tenant, queued SUs are ranked by
+    ``(priority, seq)``; a tenant of weight ``w > 0`` gives its rank-k SU
+    the virtual tag ``k * FAIR_SCALE // w``, and the global order is
+    ``(priority, virtual tag, seq)``.  Backlogged tenants in the same
+    priority class are therefore served proportionally to their weights,
+    and every tenant's head SU carries tag 0 — so while a weighted tenant
+    waits, every pop slot goes to a strictly *older* SU, which bounds any
+    tenant's wait by ``ceil(older_backlog / batch)`` rounds: starvation-
+    free regardless of the weight assignment (tests/test_qos.py holds the
+    pop to this against a brute-force oracle).  Weight 0 (the default)
+    exempts a tenant: its tags are all 0, and an all-zero weight table
+    reproduces the pre-QoS pop bit-exactly.
+
+    ``priority_by_sid``/``tenant_by_sid`` are indexed by whatever id space
+    ``q_sid`` uses (global sids in the sharded engine, table rows on a
+    single device)."""
     key = jnp.where(state.q_valid, priority_by_sid[state.q_sid], INT_MAX)
-    order = jnp.lexsort((state.q_seq, key))
+    if tenant_by_sid is None:
+        order = jnp.lexsort((state.q_seq, key))
+    else:
+        T = weight.shape[0]
+        order0 = jnp.lexsort((state.q_seq, key))     # (priority, seq) order
+        t_sort = jnp.clip(tenant_by_sid[state.q_sid], 0, T - 1)[order0]
+        v_sort = state.q_valid[order0]
+        rank = _tenant_rank(v_sort, t_sort, T)       # within-tenant rank
+        w = weight[t_sort]
+        # saturate the rank so rank*FAIR_SCALE stays inside int32 at any
+        # queue depth (beyond ~64k queued SUs per tenant the tags plateau
+        # and ties fall back to seq — still starvation-free)
+        rank = jnp.minimum(rank, INT_MAX // FAIR_SCALE - 1)
+        vtag = jnp.where(v_sort & (w > 0), rank * FAIR_SCALE // w, 0)
+        reorder = jnp.lexsort((state.q_seq[order0], vtag, key[order0]))
+        order = order0[reorder]
     take = order[:batch]
     pvalid = state.q_valid[take]
     popped = (state.q_sid[take], state.q_vals[take], state.q_ts[take], pvalid)
@@ -157,12 +253,41 @@ def ingest_phase(state: EngineState, stats: Dict[str, jnp.ndarray],
                  q_sid: jnp.ndarray,        # (B,) ids to enqueue (global sids)
                  active: jnp.ndarray,       # (B,) row active mask
                  n_rows: int,
+                 tenant_of_row: Optional[jnp.ndarray] = None,  # (B,)
+                 quota: Optional[jnp.ndarray] = None,          # (T,)
+                 burst: Optional[jnp.ndarray] = None,          # (T,)
                  ) -> Tuple[EngineState, Dict[str, jnp.ndarray]]:
     """Phase 0: admit external SUs — store last-value/timestamp, enqueue for
     dispatch.  On a single device ``row == q_sid == sid``; the sharded step
     stores to shard-local rows but queues global sids.  SUs addressed to
-    revoked rows are dropped into ``dropped_revoked``."""
-    i_live = ingest.valid & active
+    revoked rows are dropped into ``dropped_revoked``.
+
+    With the QoS args, per-tenant ingest quotas are enforced first: each
+    tenant's token bucket refills by ``quota[t]`` tokens per round up to
+    ``burst[t]``, every arriving SU (valid, active row) consumes one
+    token, and arrivals beyond the bucket are *shed* — counted in
+    ``stats["dropped_quota"]`` and ``state.tenant_dropped_quota[t]``, and
+    neither stored nor enqueued, so an over-quota tenant cannot crowd the
+    queue.  ``quota[t] == 0`` (the default) means unlimited — the
+    pre-quota behavior bit-exactly."""
+    arrive = ingest.valid & active
+    if tenant_of_row is None:
+        i_live = arrive
+    else:
+        T = quota.shape[0]
+        t_of = jnp.clip(tenant_of_row, 0, T - 1)
+        tokens = jnp.minimum(state.tokens + quota, burst)  # per-round refill
+        arrival_no = _tenant_rank(arrive, t_of, T)  # rank among same-tenant
+        in_quota = (quota[t_of] == 0) | (arrival_no < tokens[t_of])
+        shed = arrive & ~in_quota
+        i_live = arrive & in_quota
+        spent = jnp.zeros((T,), jnp.int32).at[t_of].add(
+            (arrive & in_quota).astype(jnp.int32))
+        state = state._replace(
+            tokens=jnp.where(quota > 0, tokens - spent, tokens),
+            tenant_dropped_quota=state.tenant_dropped_quota.at[
+                jnp.where(shed, t_of, T)].add(1, mode="drop"))
+        stats["dropped_quota"] += shed.sum(dtype=jnp.int32)
     i_keep = i_live & (ingest.ts > state.timestamps[row])
     i_win = consistency.resolve_winners(row, ingest.ts, i_keep, n_rows)
     i_dest = jnp.where(i_win, row, n_rows)
@@ -174,7 +299,8 @@ def ingest_phase(state: EngineState, stats: Dict[str, jnp.ndarray],
     stats["dropped_revoked"] += (ingest.valid & ~active).sum(dtype=jnp.int32)
     stats["ingest_stale"] += (i_live & ~i_keep).sum(dtype=jnp.int32)
     stats["ingest_coalesced"] += (i_keep & ~i_win).sum(dtype=jnp.int32)
-    state, dropped = _enqueue(state, q_sid, ingest.vals, ingest.ts, i_win)
+    state, dropped = _enqueue(state, q_sid, ingest.vals, ingest.ts, i_win,
+                              tenant_of_row)
     stats["dropped_overflow"] += dropped
     return state, stats
 
@@ -204,9 +330,11 @@ def store_and_emit(cfg: EngineConfig, tables: DeviceTables,
         ].add(1, mode="drop"),
     )
 
-    # re-dispatch winners that themselves have subscribers
+    # re-dispatch winners that themselves have subscribers (queue drops
+    # charged to the emitting stream's owner tenant)
     fanout_more = win & (tables.out_count[rows] > 0)
-    state, dropped = _enqueue(state, emit_sid, new_vals, ts_out, fanout_more)
+    state, dropped = _enqueue(state, emit_sid, new_vals, ts_out, fanout_more,
+                              tables.tenant[rows])
     stats["dropped_overflow"] += dropped
     stats["enqueued"] += fanout_more.sum(dtype=jnp.int32)
 
@@ -221,6 +349,16 @@ def store_and_emit(cfg: EngineConfig, tables: DeviceTables,
         valid=jnp.zeros((S,), bool).at[sdest].set(True, mode="drop"),
     )
     return state, stats, sink
+
+
+def tenant_occupancy(state: EngineState, tenant_by_sid: jnp.ndarray,
+                     n_tenants: int) -> jnp.ndarray:
+    """Per-tenant pending-SU queue occupancy — the backpressure signal
+    surfaced to the host in ``state.tenant_queued`` after every round.
+    ``tenant_by_sid`` is indexed by ``q_sid``'s id space (like ``_pop``)."""
+    q_t = jnp.clip(tenant_by_sid[state.q_sid], 0, n_tenants - 1)
+    return jnp.zeros((n_tenants,), jnp.int32).at[q_t].add(
+        state.q_valid.astype(jnp.int32))
 
 
 # --------------------------------------------------------------------------
@@ -340,13 +478,16 @@ def make_step(
              ) -> Tuple[EngineState, SinkBatch]:
         stats = dict(state.stats)
 
-        # ---- phase 0: ingest external SUs (store + enqueue) -------------
+        # ---- phase 0: ingest external SUs (quota-gate, store, enqueue) --
         i_sid = jnp.clip(ingest.sid, 0, N - 1)
         state, stats = ingest_phase(state, stats, ingest, i_sid, i_sid,
-                                    tables.active[i_sid], N)
+                                    tables.active[i_sid], N,
+                                    tables.tenant[i_sid],
+                                    tables.quota, tables.burst)
 
-        # ---- pop this round's events ------------------------------------
-        state, (e_sid, e_vals, e_ts, e_pop) = _pop(state, tables.priority, B)
+        # ---- pop this round's events (weighted-fair across tenants) -----
+        state, (e_sid, e_vals, e_ts, e_pop) = _pop(
+            state, tables.priority, B, tables.tenant, tables.weight)
         # events whose stream was revoked while queued drop here
         e_act = tables.active[jnp.clip(e_sid, 0, N - 1)]
         e_valid = e_pop & e_act
@@ -377,7 +518,10 @@ def make_step(
         state, stats, sink = store_and_emit(cfg, tables, state, stats,
                                             t, t, wi_src, new_vals, ts_out,
                                             keep, N)
-        state = state._replace(stats=stats)
+        state = state._replace(
+            stats=stats,
+            tenant_queued=tenant_occupancy(state, tables.tenant,
+                                           cfg.n_tenants))
         return state, sink
 
     if not jit:
@@ -425,6 +569,8 @@ class SinkSpool(NamedTuple):
 
 
 def init_ring(cfg: EngineConfig, K: int) -> IngestRing:
+    """Empty K-round ingest ring: ``cfg.ring_slots(K)`` free slots, every
+    tag at ``rnd == K`` (carried / unused)."""
     R, C = cfg.ring_slots(K), cfg.channels
     return IngestRing(
         sid=jnp.zeros((R,), jnp.int32),
@@ -624,6 +770,8 @@ class StreamEngine:
 
     # --------------------------------------------------------------- rounds
     def round(self) -> SinkBatch:
+        """Run one four-stage engine round: ship the pending ingest batch,
+        dispatch the compiled step, return the round's external sink."""
         self.state, sink = self._step(self.tables, self.state, self._take_ingest())
         return sink
 
@@ -915,28 +1063,97 @@ class StreamEngine:
             self.tables, self._table_row(s.sid), prog, consts)
         self._sync_admitted()
 
-    # back-compat alias (pre-admission-plane name)
     def inject_code(self, stream, transform: Dict[str, str],
                     pre_filter: Optional[str] = None,
                     post_filter: Optional[str] = None) -> None:
+        """Back-compat alias of :meth:`swap_program` (its pre-admission-
+        plane name)."""
         self.swap_program(stream, transform, pre_filter, post_filter)
 
     def rewire(self) -> None:
         """Re-lower the registry after subscribe()/new streams — still no
-        recompilation (same-shaped tables)."""
+        recompilation (same-shaped tables).  The per-tenant QoS tables
+        (weight/quota/burst) are preserved: they are placement-independent
+        data the registry does not mirror."""
         prio = np.asarray(self.tables.priority)
-        self.tables = DeviceTables.from_host(self.registry.build_tables(prio))
+        self.tables = DeviceTables.from_host(
+            self.registry.build_tables(prio))._replace(
+                weight=self.tables.weight, quota=self.tables.quota,
+                burst=self.tables.burst)
+
+    # ----------------------------------------------------- tenant QoS plane
+    @staticmethod
+    def _tid(tenant) -> np.int32:
+        return np.int32(tenant.tid if hasattr(tenant, "tid") else int(tenant))
+
+    def set_weight(self, tenant, weight: int) -> None:
+        """Set a tenant's fair-share weight *live* — one jitted table edit
+        (:func:`repro.core.admission.set_weight`), zero retraces.  Queued
+        SUs of backlogged tenants are then popped proportionally to their
+        weights (see :func:`_pop`); ``weight=0`` (the default) exempts the
+        tenant from shaping.  Weights are clipped to ``[0, FAIR_SCALE]``."""
+        from repro.core import admission
+        self.tables = admission.set_weight(self.tables, self._tid(tenant),
+                                           np.int32(weight))
+        self._sync_admitted()
+
+    def set_quota(self, tenant, quota: int,
+                  burst: Optional[int] = None) -> None:
+        """Set a tenant's ingest quota *live*: a token bucket refilled by
+        ``quota`` tokens per engine round up to ``burst`` (default
+        ``quota``).  Arrivals beyond the bucket are shed into
+        ``dropped_quota`` instead of crowding the queue; ``quota=0`` (the
+        default) removes the cap.  One jitted table edit, zero retraces."""
+        from repro.core import admission
+        b = quota if burst is None else burst
+        self.tables, self.state = admission.set_quota(
+            self.tables, self.state, self._tid(tenant),
+            np.int32(quota), np.int32(b))
+        self._sync_admitted()
+
+    def tenant_backlog(self, tenant=None):
+        """Per-tenant pending-SU queue occupancy after the last round —
+        the backpressure signal (summed across shards on the sharded
+        engine).  Returns the int for one ``tenant``, or the full
+        ``(n_tenants,)`` numpy array when ``tenant is None``.  The serving
+        bridge throttles a tenant's pump when this crosses its
+        watermark."""
+        occ = np.asarray(self.state.tenant_queued)
+        if occ.ndim == 2:
+            occ = occ.sum(axis=0)
+        if tenant is None:
+            return occ
+        return int(occ[self._tid(tenant)])
+
+    def tenant_counters(self) -> Dict[str, np.ndarray]:
+        """Per-tenant counters as host arrays (summed across shards):
+        ``emitted`` (stage-4 emissions by owner), ``queued`` (occupancy
+        after the last round), ``dropped_quota`` (SUs shed over quota) and
+        ``dropped_overflow`` (queue/exchange slots lost to contention)."""
+        out = {}
+        for key, field in (("emitted", "tenant_emitted"),
+                           ("queued", "tenant_queued"),
+                           ("dropped_quota", "tenant_dropped_quota"),
+                           ("dropped_overflow", "tenant_dropped_overflow")):
+            a = np.asarray(getattr(self.state, field))
+            out[key] = a.sum(axis=0) if a.ndim == 2 else a
+        return out
 
     # ------------------------------------------------------------- readback
     def value_of(self, stream) -> np.ndarray:
+        """Last stored value of ``stream`` — a host ``(channels,)`` f32
+        array (zeros until the stream first emits)."""
         sid = stream.sid if hasattr(stream, "sid") else int(stream)
         return np.asarray(self.state.values[sid])
 
     def ts_of(self, stream) -> int:
+        """Last emission timestamp of ``stream`` (``INT_MIN`` = never)."""
         sid = stream.sid if hasattr(stream, "sid") else int(stream)
         return int(self.state.timestamps[sid])
 
     def counters(self) -> Dict[str, int]:
+        """The engine's scalar stat counters as a host dict (summed across
+        shards on the sharded engine); keys are :data:`STAT_KEYS`."""
         return {k: int(v) for k, v in self.state.stats.items()}
 
 

@@ -44,6 +44,11 @@ class CapacityError(ValueError):
 
 @dataclasses.dataclass
 class Tenant:
+    """A platform tenant: the unit of ownership, accounting (per-tenant
+    emission/drop counters) and QoS (fair-share weight, ingest quota —
+    both live in the engine's device tables, set via
+    ``StreamEngine.set_weight`` / ``set_quota``).  ``quota_streams`` is
+    the *control-plane* cap on how many streams the tenant may own."""
     tid: int
     name: str
     quota_streams: int = 1_000_000
@@ -51,6 +56,9 @@ class Tenant:
 
 @dataclasses.dataclass
 class Stream:
+    """One data stream: ``sid`` indexes every engine table/state row.
+    Simple streams are device-fed via ingest; composite streams subscribe
+    to ``inputs`` and run user ``transform`` code per triggering SU."""
     sid: int
     tenant: int
     name: str
@@ -67,7 +75,10 @@ class Stream:
 
 @dataclasses.dataclass
 class EngineTables:
-    """Dense device-table images (numpy; moved to device by the engine)."""
+    """Dense device-table images (numpy; moved to device by the engine).
+    Per-stream rows are (N, ...); the trailing three are the per-tenant
+    QoS tables, (n_tenants,), lowered at zero (QoS off) and edited live
+    through ``repro.core.admission.set_weight`` / ``set_quota``."""
     in_table: np.ndarray       # (N, M) int32, input stream ids, -1 pad
     in_count: np.ndarray       # (N,) int32
     out_table: np.ndarray      # (N, F) int32, subscriber ids, -1 pad
@@ -80,9 +91,18 @@ class EngineTables:
     n_channels: np.ndarray     # (N,) int32
     model_backed: np.ndarray   # (N,) bool
     active: np.ndarray         # (N,) bool — live rows; spare capacity is False
+    weight: np.ndarray         # (T,) int32 fair-share weight, 0 = unshaped
+    quota: np.ndarray          # (T,) int32 ingest tokens/round, 0 = no cap
+    burst: np.ndarray          # (T,) int32 token-bucket capacity
 
 
 class Registry:
+    """The host-side control plane (paper §II-1): owns tenants, streams
+    and subscriptions, compiles user code to VM bytecode, and lowers the
+    whole graph into the dense :class:`EngineTables` the compiled engine
+    consumes — plus the host mirror of live churn (sid recycling,
+    capacity pre-checks) for the admission plane."""
+
     def __init__(self, cfg: EngineConfig):
         self.cfg = cfg.validate()
         self.tenants: List[Tenant] = []
@@ -102,6 +122,8 @@ class Registry:
 
     # ------------------------------------------------------------- tenants
     def create_tenant(self, name: str, quota_streams: int = 1_000_000) -> Tenant:
+        """Register a new tenant (capped by ``cfg.n_tenants``); its tid
+        indexes every per-tenant engine counter and QoS table."""
         if len(self.tenants) >= self.cfg.n_tenants:
             raise CapacityError("tenant capacity exhausted")
         t = Tenant(len(self.tenants), name, quota_streams)
@@ -132,6 +154,8 @@ class Registry:
         return s
 
     def stream_of(self, sid: int) -> Stream:
+        """The live :class:`Stream` occupying ``sid`` (raises on a revoked
+        or never-allocated row)."""
         s = self.streams[sid]
         if s is None:
             raise ValueError(f"sid {sid} is revoked")
@@ -139,6 +163,7 @@ class Registry:
 
     @property
     def n_active(self) -> int:
+        """Number of live (non-revoked) streams across all tenants."""
         return sum(1 for s in self.streams if s is not None)
 
     def create_stream(
@@ -301,6 +326,12 @@ class Registry:
 
     # ---------------------------------------------------------- lowering
     def build_tables(self, priority: Optional[np.ndarray] = None) -> EngineTables:
+        """Lower the whole subscription graph into dense
+        :class:`EngineTables` images — same shapes for any topology that
+        fits the capacities, so re-lowering after pipeline changes feeds
+        the *same* compiled engine new data and never retraces.  The QoS
+        tables lower at zero (shaping off); ``priority`` is the optional
+        (n_streams,) per-sid pop priority (lower = served first)."""
         cfg, N = self.cfg, self.cfg.n_streams
         in_table = np.full((N, cfg.max_in), -1, np.int32)
         in_count = np.zeros((N,), np.int32)
@@ -339,12 +370,16 @@ class Registry:
 
         if priority is None:
             priority = np.zeros((N,), np.int32)
+        T = cfg.n_tenants
         return EngineTables(
             in_table=in_table, in_count=in_count,
             out_table=out_table, out_count=out_count,
             progs=progs, consts=consts, is_composite=is_comp,
             tenant=tenant, priority=np.asarray(priority, np.int32),
             n_channels=n_ch, model_backed=model_backed, active=active,
+            weight=np.zeros((T,), np.int32),
+            quota=np.zeros((T,), np.int32),
+            burst=np.zeros((T,), np.int32),
         )
 
     def build_sharded_tables(

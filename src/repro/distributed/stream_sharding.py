@@ -67,7 +67,7 @@ from repro.core.engine import (INT_MIN, STAT_KEYS, DeviceTables, EngineState,
                                IngestBatch, IngestRing, SinkBatch, SinkSpool,
                                StreamEngine, _pop, fanout_reference,
                                ingest_phase, process_work_items, scan_rounds,
-                               store_and_emit)
+                               store_and_emit, tenant_occupancy)
 from repro.core.registry import EngineTables, Registry
 
 AXIS = "shards"
@@ -155,6 +155,12 @@ def shard_tables(tables: EngineTables, plan: ShardPlan) -> EngineTables:
         n_channels=scatter(tables.n_channels, 1),
         model_backed=scatter(tables.model_backed, False),
         active=scatter(tables.active, False),
+        # per-tenant QoS tables ride replicated: every shard carries its
+        # own (n_tenants,) copy, so fairness/quota hold per shard and the
+        # admission ops' ``...``-indexed edits hit all copies at once
+        weight=np.tile(tables.weight[None], (S, 1)),
+        quota=np.tile(tables.quota[None], (S, 1)),
+        burst=np.tile(tables.burst[None], (S, 1)),
     )
 
 
@@ -195,6 +201,7 @@ def _place_sid_op(gmap: GlobalMaps, sid, shard, local, n_local, priority
 def sharded_init_state(cfg: EngineConfig, plan: ShardPlan) -> EngineState:
     """Per-shard EngineState slices stacked on a leading shard axis."""
     S, L, C, Q = plan.n_shards, plan.n_local, cfg.channels, cfg.queue
+    T = cfg.n_tenants
     return EngineState(
         values=jnp.zeros((S, L, C), jnp.float32),
         timestamps=jnp.full((S, L), INT_MIN, jnp.int32),
@@ -204,7 +211,11 @@ def sharded_init_state(cfg: EngineConfig, plan: ShardPlan) -> EngineState:
         q_seq=jnp.zeros((S, Q), jnp.int32),
         q_valid=jnp.zeros((S, Q), bool),
         seq=jnp.zeros((S,), jnp.int32),
-        tenant_emitted=jnp.zeros((S, cfg.n_tenants), jnp.int32),
+        tenant_emitted=jnp.zeros((S, T), jnp.int32),
+        tokens=jnp.zeros((S, T), jnp.int32),
+        tenant_queued=jnp.zeros((S, T), jnp.int32),
+        tenant_dropped_quota=jnp.zeros((S, T), jnp.int32),
+        tenant_dropped_overflow=jnp.zeros((S, T), jnp.int32),
         stats={k: jnp.zeros((S,), jnp.int32) for k in STAT_KEYS},
     )
 
@@ -240,15 +251,24 @@ def make_shard_round(
     def shard_round(tables: DeviceTables, gmap: GlobalMaps,
                     state: EngineState, ingest: IngestBatch):
         stats = dict(state.stats)
+        # tenant of every *global* sid (queues/exchange carry global sids);
+        # this shard's queue only ever holds sids it owns, so the local
+        # tenant table resolves them
+        tenant_by_sid = tables.tenant[
+            jnp.clip(gmap.sid_to_local, 0, n_local - 1)]
 
-        # ---- phase 0: ingest SUs routed to this shard (global sids) -----
+        # ---- phase 0: ingest SUs routed to this shard (global sids),
+        # quota-gated against this shard's token buckets ------------------
         g_sid = jnp.clip(ingest.sid, 0, N - 1)
         l_sid = jnp.clip(gmap.sid_to_local[g_sid], 0, n_local - 1)
         state, stats = ingest_phase(state, stats, ingest, l_sid, g_sid,
-                                    tables.active[l_sid], n_local)
+                                    tables.active[l_sid], n_local,
+                                    tables.tenant[l_sid],
+                                    tables.quota, tables.burst)
 
-        # ---- pop this round's events (queues hold global sids) ----------
-        state, (e_sid, e_vals, e_ts, e_pop) = _pop(state, gmap.priority, B)
+        # ---- pop this round's events (weighted-fair; global sids) -------
+        state, (e_sid, e_vals, e_ts, e_pop) = _pop(
+            state, gmap.priority, B, tenant_by_sid, tables.weight)
         e_loc = jnp.clip(gmap.sid_to_local[jnp.clip(e_sid, 0, N - 1)],
                          0, n_local - 1)
         # events whose stream was revoked while queued drop here
@@ -295,7 +315,18 @@ def make_shard_round(
             .at[slot].set(payload_i, mode="drop").reshape(n_shards, E, 3)
         xf = jnp.zeros((n_shards * E, C), jnp.float32) \
             .at[slot].set(wi_vals, mode="drop").reshape(n_shards, E, C)
-        stats["dropped_overflow"] += (routed & ~fits).sum(dtype=jnp.int32)
+        x_drop = routed & ~fits
+        stats["dropped_overflow"] += x_drop.sum(dtype=jnp.int32)
+        # exchange-slot contention is attributable per tenant: charge the
+        # *emitting* stream's owner (wi_src is always owned by this shard,
+        # so the local tenant map resolves it; the flooding producer pays,
+        # consistent with queue-overflow and quota accounting)
+        Tn = cfg.n_tenants
+        src_safe = jnp.clip(wi_src, 0, N - 1)
+        state = state._replace(
+            tenant_dropped_overflow=state.tenant_dropped_overflow.at[
+                jnp.where(x_drop, tenant_by_sid[src_safe], Tn)
+            ].add(1, mode="drop"))
 
         ri = jax.lax.all_to_all(xi, AXIS, split_axis=0, concat_axis=0)
         rf = jax.lax.all_to_all(xf, AXIS, split_axis=0, concat_axis=0)
@@ -319,7 +350,11 @@ def make_shard_round(
         state, stats, sink = store_and_emit(cfg, tables, state, stats,
                                             r_loc, r_t, r_src, new_vals,
                                             ts_out, keep, n_local)
-        return state._replace(stats=stats), sink
+        state = state._replace(
+            stats=stats,
+            tenant_queued=tenant_occupancy(state, tenant_by_sid,
+                                           cfg.n_tenants))
+        return state, sink
 
     return shard_round
 
@@ -719,8 +754,11 @@ class ShardedStreamEngine(StreamEngine):
                                                self._fanout_fn)
                 self._superstep_fns = {}
         self.plan = new_plan
-        self.tables = jax.device_put(DeviceTables.from_host(host_tables),
-                                     self._shard)
+        qos = self.tables            # weight/quota/burst survive re-lowers
+        self.tables = jax.device_put(
+            DeviceTables.from_host(host_tables)._replace(
+                weight=qos.weight, quota=qos.quota, burst=qos.burst),
+            self._shard)
         self.gmap = jax.device_put(GlobalMaps.build(prio, new_plan),
                                    self._repl)
         self._init_slots()

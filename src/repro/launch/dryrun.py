@@ -332,24 +332,33 @@ def _lower_engine(mesh, mode: str = "sharded",
     rep = NamedSharding(mesh, P())
     row = NamedSharding(mesh, P(stream_axes)) if mode == "sharded" else rep
 
+    T = ecfg.n_tenants
     tables_abs = eng.DeviceTables(
         in_table=sds((N, ecfg.max_in), i32), in_count=sds((N,), i32),
         out_table=sds((N, ecfg.max_out), i32), out_count=sds((N,), i32),
         progs=sds((N, ecfg.prog_len, 4), i32), consts=sds((N, ecfg.n_consts), f32),
         is_composite=sds((N,), b_), tenant=sds((N,), i32),
         priority=sds((N,), i32), n_channels=sds((N,), i32),
-        model_backed=sds((N,), b_), active=sds((N,), b_))
-    tables_sh = eng.DeviceTables(*([row] * len(eng.DeviceTables._fields)))
+        model_backed=sds((N,), b_), active=sds((N,), b_),
+        weight=sds((T,), i32), quota=sds((T,), i32), burst=sds((T,), i32))
+    _per_tenant = ("weight", "quota", "burst")
+    tables_sh = eng.DeviceTables(**{
+        f: (rep if f in _per_tenant else row)
+        for f in eng.DeviceTables._fields})
 
     state_abs = eng.EngineState(
         values=sds((N, C), f32), timestamps=sds((N,), i32),
         q_sid=sds((Q,), i32), q_vals=sds((Q, C), f32), q_ts=sds((Q,), i32),
         q_seq=sds((Q,), i32), q_valid=sds((Q,), b_), seq=sds((), i32),
-        tenant_emitted=sds((ecfg.n_tenants,), i32),
+        tenant_emitted=sds((T,), i32), tokens=sds((T,), i32),
+        tenant_queued=sds((T,), i32), tenant_dropped_quota=sds((T,), i32),
+        tenant_dropped_overflow=sds((T,), i32),
         stats={k: sds((), i32) for k in eng.STAT_KEYS})
     state_sh = eng.EngineState(
         values=row, timestamps=row, q_sid=rep, q_vals=rep, q_ts=rep,
-        q_seq=rep, q_valid=rep, seq=rep, tenant_emitted=rep,
+        q_seq=rep, q_valid=rep, seq=rep, tenant_emitted=rep, tokens=rep,
+        tenant_queued=rep, tenant_dropped_quota=rep,
+        tenant_dropped_overflow=rep,
         stats={k: rep for k in eng.STAT_KEYS})
 
     ingest_abs = eng.IngestBatch(sid=sds((B,), i32), vals=sds((B, C), f32),

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional
 
 import numpy as np
 
@@ -52,15 +52,34 @@ class ContinuousBatcher:
         self.budget: Dict[int, int] = {}         # remaining tokens per request
         self.queue: Deque[Request] = deque()
         self.ticks = 0
+        # backpressure hook (QoS plane): when set, queued requests for
+        # which throttle(req) is True wait — they keep their queue order
+        # but are passed over for decode slots until the hook clears
+        # (the serving bridge points this at the engine's per-tenant
+        # queue-occupancy watermark)
+        self.throttle: Optional[Callable[[Request], bool]] = None
 
     # ------------------------------------------------------------ admission
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
+    def _next_admittable(self) -> Optional[Request]:
+        """Pop the oldest queued request the throttle hook allows (all of
+        them, when no hook is set); None when every queued request waits."""
+        if self.throttle is None:
+            return self.queue.popleft() if self.queue else None
+        for i, req in enumerate(self.queue):
+            if not self.throttle(req):
+                del self.queue[i]
+                return req
+        return None
+
     def _admit(self) -> None:
         for s in range(self.slots):
             if self.live[s] is None and self.queue:
-                req = self.queue.popleft()
+                req = self._next_admittable()
+                if req is None:
+                    break
                 # prefill the slot by feeding prompt tokens one at a time
                 # through the shared decode step (slot-local positions make
                 # this safe next to running slots)
@@ -113,10 +132,16 @@ class ContinuousBatcher:
         token by token around its own bookkeeping."""
         done: List[Request] = []
         for _ in range(n):
-            if not self.queue and all(r is None for r in self.live):
-                break
+            if all(r is None for r in self.live) and (
+                    not self.queue or (self.throttle is not None and
+                                       all(map(self.throttle, self.queue)))):
+                break           # nothing live, nothing admittable
             done += self.tick()
         return done
 
     def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
+        """Run ticks until nothing is left to decode (bounded by
+        ``max_ticks``); returns the finished requests.  With a
+        ``throttle`` hook set, backpressured requests may remain queued —
+        they decode after the hook clears (the bridge's release path)."""
         return self.run_ticks(max_ticks)

@@ -12,11 +12,18 @@ stream — re-entering the pipeline like any other Sensor Update.
 This makes an LM just another multi-tenant subscriber: tenants compose
 "raw stream -> transform -> LM scorer -> downstream aggregation" pipelines
 with the exact subscription semantics of the paper.
+
+Backpressure (QoS plane): with a ``watermark``, the bridge consults the
+engine's per-tenant queue occupancy (``engine.tenant_backlog``) before
+submitting — a tenant whose occupancy crossed the watermark has its pump
+*slowed*: its emissions are deferred host-side (and its queued batcher
+requests are not admitted to decode slots) until the backlog drains below
+the watermark again.  Other tenants' requests flow unimpeded.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -29,22 +36,51 @@ class _Route:
     source_sid: int
     response_stream: object          # registry Stream
     prompt_len: int = 8
+    tenant: int = 0                  # owner of the model stream (QoS)
 
 
 class ModelBackedStreams:
-    def __init__(self, engine: StreamEngine, batcher: ContinuousBatcher):
+    def __init__(self, engine: StreamEngine, batcher: ContinuousBatcher,
+                 watermark: Optional[int] = None):
         self.engine = engine
         self.batcher = batcher
+        self.watermark = watermark
         self.routes: Dict[int, _Route] = {}
         self._next_rid = 0
         self.inflight: Dict[int, _Route] = {}
         self.completed: List[Request] = []
+        self.deferred: List[Tuple[int, np.ndarray]] = []   # (sid, vals)
+        self._occ: Optional[np.ndarray] = None   # host occupancy snapshot
+        if watermark is not None and hasattr(batcher, "throttle"):
+            # the batcher half of the hook: backlogged tenants' queued
+            # requests wait for a decode slot until they drain
+            batcher.throttle = lambda req: self._throttled(req.tenant)
+
+    def _throttled(self, tenant: int) -> bool:
+        """True when ``tenant``'s engine queue occupancy has crossed the
+        backpressure watermark (always False with no watermark set).
+        Occupancy is read from a host snapshot taken at most once per
+        pump/drain burst — the engine only advances between bursts, so
+        the snapshot is exact while avoiding a blocking device readback
+        per queued request."""
+        if self.watermark is None:
+            return False
+        if self._occ is None:
+            self._occ = np.asarray(self.engine.tenant_backlog())
+        return int(self._occ[tenant]) > self.watermark
+
+    def _refresh_backpressure(self) -> None:
+        """Drop the occupancy snapshot (the engine may have advanced)."""
+        self._occ = None
 
     def route(self, model_stream, response_stream, prompt_len: int = 8):
         """Emissions of ``model_stream`` become LM requests; completions are
         posted as SUs on ``response_stream``."""
         sid = model_stream.sid if hasattr(model_stream, "sid") else int(model_stream)
-        self.routes[sid] = _Route(sid, response_stream, prompt_len)
+        tenant = getattr(model_stream, "tenant", None)
+        if tenant is None:
+            tenant = self.engine.registry.stream_of(sid).tenant
+        self.routes[sid] = _Route(sid, response_stream, prompt_len, tenant)
 
     # ------------------------------------------------- dynamic admission
     def admit_route(self, tenant, name: str, inputs, *,
@@ -92,6 +128,7 @@ class ModelBackedStreams:
 
     def pump(self, sink: SinkBatch, ts: int) -> int:
         """Scan one round's sink for model-backed emissions -> requests."""
+        self._refresh_backpressure()
         sid = np.asarray(sink.sid)
         vals = np.asarray(sink.vals)
         valid = np.asarray(sink.valid)
@@ -109,6 +146,7 @@ class ModelBackedStreams:
         the per-shard stacked spool of the sharded engine; submissions run
         round-major (round, then shard, then emission order) so request
         ids match the per-round pump path exactly."""
+        self._refresh_backpressure()
         sid = np.asarray(spool.sid)
         vals = np.asarray(spool.vals)
         rnd = np.asarray(spool.rnd)
@@ -127,13 +165,28 @@ class ModelBackedStreams:
         r = self.routes.get(sid)
         if r is None:
             return 0
+        if self._throttled(r.tenant):      # pump slowed: hold host-side
+            self.deferred.append((sid, np.asarray(vals)))
+            return 0
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid=rid, prompt=self._tokenize(vals, r.prompt_len),
-                      max_tokens=4)
+                      max_tokens=4, tenant=r.tenant)
         self.batcher.submit(req)
         self.inflight[rid] = r
         return 1
+
+    def release_deferred(self) -> int:
+        """Re-try emissions deferred by backpressure; those whose tenant is
+        still over the watermark re-defer (and revoked routes drop).
+        Returns the number actually submitted."""
+        self._refresh_backpressure()
+        pending, self.deferred = self.deferred, []
+        n = 0
+        for sid, vals in pending:
+            if sid in self.routes:
+                n += self._submit(sid, vals)
+        return n
 
     def serve(self, ts: int, K: Optional[int] = None,
               max_rounds: int = 256) -> int:
@@ -142,14 +195,17 @@ class ModelBackedStreams:
         K <= 1), submit the model-backed emissions, then drain the batcher
         so completions re-enter the engine as SUs.  Both paths process the
         whole backlog up to ``max_rounds``; K only sets how many rounds
-        share one dispatch.  Returns the number of requests submitted."""
+        share one dispatch.  Emissions deferred by backpressure are
+        re-tried first (draining lowers occupancy, so watermarked tenants
+        resume here).  Returns the number of requests submitted."""
         K = K or self.engine.cfg.superstep
+        n = self.release_deferred()
         if K <= 1:
-            n = sum(self.pump(sink, ts)
-                    for sink in self.engine.drain(max_rounds))
+            n += sum(self.pump(sink, ts)
+                     for sink in self.engine.drain(max_rounds))
         else:
-            n = sum(self.pump_spool(spool, ts) for spool in
-                    self.engine.drain_spools(K, max_rounds))
+            n += sum(self.pump_spool(spool, ts) for spool in
+                     self.engine.drain_spools(K, max_rounds))
         self.drain(ts=ts)
         return n
 
@@ -157,6 +213,7 @@ class ModelBackedStreams:
         """Run the batcher to completion (one ``run_ticks`` burst — it
         stops by itself when nothing is queued or live); post completions
         back into the engine as SUs."""
+        self._refresh_backpressure()
         done = []
         for req in self.batcher.run_ticks(max_ticks):
             r = self.inflight.pop(req.rid)
