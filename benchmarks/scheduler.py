@@ -1,0 +1,191 @@
+"""Scheduler hot path — rounds/s vs queue depth, packed vs lexsort pop.
+
+The pop is the engine's per-round serial bottleneck: the lexsort
+scheduler pays two full-queue multi-key sorts plus a (Q, T) rank cumsum
+— O(Q log Q) over *all* ``queue`` slots — to extract ``batch`` << Q
+winners, once per round and K times inside every superstep scan.  The
+packed scheduler (`EngineConfig.scheduler="packed"`, the default)
+replaces that with a selection pop (`repro.kernels.sched_pop`):
+O(Q·batch) vectorized argmin steps, no sort.  Pop cost therefore scales
+*linearly* in ``queue`` — this sweep records rounds/s for queue_slots ∈
+{256, 1024, 4096} under both schedulers on a deliberately latency-bound
+topology (small batch, shallow programs: the round is dominated by the
+scheduler, not the VM), with the queue kept saturated so the sort
+actually has a full queue to chew on.
+
+Run ``python -m benchmarks.scheduler [--rounds R] [--queues 256,1024,4096]
+[--json BENCH_sched.json] [--min-speedup X] [--smoke]``.  ``--smoke`` is
+the CI mode: one tiny queue, few rounds, still failing (exit 1) if any
+round retraces.  The two schedulers are timed in *interleaved* blocks so
+host drift cancels.  JSON schema: benchmarks/README.md.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+if __package__ in (None, ""):  # `python benchmarks/scheduler.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import numpy as np                                            # noqa: E402
+
+import jax                                                    # noqa: E402
+
+from repro.core import EngineConfig, Registry, create_engine  # noqa: E402
+
+N_SOURCES = 8           # posted every round (ingest is capped at batch)
+FAN = 8                 # L1 composites per source: the amplification
+BATCH = 8               # small on purpose: B << Q isolates the pop
+
+
+def _build(queue_slots: int, scheduler: str):
+    """Two-hop fan topology sized to pin the queue at capacity: each of
+    the 8 sources (2 per tenant, tenants weighted 4:3:2:1) feeds FAN L1
+    composites, each of which feeds one terminal L2 — so every popped
+    source SU *re-enqueues* FAN L1 SUs (stage-4 fan-out amplification,
+    the part the per-round ingest cap cannot throttle).  Posting all
+    sources every round injects 8 SUs whose amplified backlog grows the
+    queue by ~FAN·BATCH per round until it saturates, and keeps it
+    pinned there through the measured window — identical load under
+    both schedulers."""
+    n_nodes = N_SOURCES * (2 + FAN)
+    cfg = EngineConfig(
+        n_streams=n_nodes, n_tenants=4, batch=BATCH, queue=queue_slots,
+        max_in=max(FAN, 2), max_out=FAN, prog_len=16, n_temps=12,
+        sink_buffer=BATCH * FAN, scheduler=scheduler,
+    )
+    reg = Registry(cfg)
+    tenants = [reg.create_tenant(f"t{i}", quota_streams=10 ** 9)
+               for i in range(4)]
+    srcs = []
+    for i in range(N_SOURCES):
+        ten = tenants[i % 4]
+        s = reg.create_stream(ten, f"s{i}", ["v"])
+        srcs.append(s)
+        l1 = [reg.create_composite(ten, f"c{i}_{j}", ["v"], [s],
+                                   {"v": f"in0.v + {j}"})
+              for j in range(FAN)]
+        reg.create_composite(ten, f"z{i}", ["v"], l1, {"v": "in0.v * 2"})
+    eng = create_engine(reg)
+    for i, t in enumerate(tenants):
+        eng.set_weight(t, 4 - i)
+    return eng, srcs
+
+
+class _Phase:
+    """One engine (one scheduler) under the saturating load, with its
+    warm-up, accumulated timed rounds and retrace baseline."""
+
+    def __init__(self, queue_slots: int, scheduler: str):
+        self.eng, self.srcs = _build(queue_slots, scheduler)
+        self.ts = 1
+        self.time = 0.0
+        self.rounds = 0
+        self._wave()
+        self.eng.round()                       # trace once
+        # saturate: amplification grows the queue by ~FAN*BATCH per round
+        fill = queue_slots // (FAN * BATCH) + 16
+        for _ in range(fill):
+            self._wave()
+            self.eng.round()
+        jax.block_until_ready(self.eng.state.timestamps)
+        self.cache0 = self.eng._step._cache_size()
+
+    def _wave(self):
+        for i, s in enumerate(self.srcs):
+            self.eng.post(s, [float(i + self.ts)], self.ts)
+        self.ts += 1
+
+    def occupancy(self) -> int:
+        return int(np.asarray(self.eng.state.q_valid).sum())
+
+    def run_block(self, n: int) -> None:
+        t0 = time.perf_counter()
+        for _ in range(n):
+            self._wave()
+            self.eng.round()
+        jax.block_until_ready(self.eng.state.timestamps)
+        self.time += time.perf_counter() - t0
+        self.rounds += n
+
+    def report(self, queue_slots: int, scheduler: str) -> dict:
+        return {
+            "queue_slots": queue_slots,
+            "scheduler": scheduler,
+            "rounds_per_s": self.rounds / self.time,
+            "queue_occupancy": self.occupancy(),
+            "retraces": int(self.eng._step._cache_size() - self.cache0),
+            "counters": {k: int(v) for k, v in self.eng.counters().items()},
+        }
+
+
+def bench_queue(queue_slots: int, rounds: int):
+    """Both schedulers at one queue depth, timed in interleaved blocks
+    (same wall-clock neighborhood -> host drift cancels)."""
+    phases = {"lexsort": _Phase(queue_slots, "lexsort"),
+              "packed": _Phase(queue_slots, "packed")}
+    block = max(rounds // 4, 1)
+    done = 0
+    while done < rounds:
+        n = min(block, rounds - done)
+        for p in phases.values():
+            p.run_block(n)
+        done += n
+    return [p.report(queue_slots, name) for name, p in phases.items()]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=60,
+                    help="measured rounds per (queue, scheduler) point")
+    ap.add_argument("--queues", default="256,1024,4096")
+    ap.add_argument("--json", default="BENCH_sched.json")
+    ap.add_argument("--min-speedup", type=float, default=0.0,
+                    help="exit non-zero if packed/lexsort rounds/s at the "
+                         "largest queue falls below this (0 = record only)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: one small queue, few rounds")
+    args = ap.parse_args()
+    queues = [int(x) for x in args.queues.split(",")]
+    if args.smoke:
+        queues, args.rounds = [256], 4
+
+    res = {"config": {"rounds": args.rounds, "sources": N_SOURCES,
+                      "fan": FAN, "batch": BATCH,
+                      "platform": jax.devices()[0].platform,
+                      "smoke": bool(args.smoke)},
+           "sweep": [], "speedup": {}}
+    print(f"{'queue':>6} {'scheduler':>9} {'rounds/s':>10} {'occ':>6} "
+          f"{'retraces':>9}")
+    for q in queues:
+        rows = bench_queue(q, args.rounds)
+        res["sweep"] += rows
+        by = {r["scheduler"]: r for r in rows}
+        res["speedup"][str(q)] = (by["packed"]["rounds_per_s"]
+                                  / by["lexsort"]["rounds_per_s"])
+        for r in rows:
+            print(f"{q:>6} {r['scheduler']:>9} {r['rounds_per_s']:>10.1f} "
+                  f"{r['queue_occupancy']:>6} {r['retraces']:>9}")
+        print(f"{q:>6} {'speedup':>9} {res['speedup'][str(q)]:>9.2f}x")
+
+    if args.json:        # write the artifact even (especially) on failure
+        with open(args.json, "w") as f:
+            json.dump(res, f, indent=2)
+        print(f"wrote {args.json}")
+    if any(r["retraces"] for r in res["sweep"]):
+        print("WARNING: a scheduler round caused recompilation",
+              file=sys.stderr)
+        sys.exit(1)
+    top = str(max(queues))
+    if args.min_speedup and res["speedup"][top] < args.min_speedup:
+        print(f"WARNING: packed speedup {res['speedup'][top]:.2f}x at "
+              f"queue={top} below required {args.min_speedup}x",
+              file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -39,6 +39,13 @@ class EngineConfig:
     superstep: int = 1          # rounds fused per compiled scan (1 = off)
     sink_spool_slots: int = 0   # per-superstep sink spool rows (0 -> K*sink)
 
+    # ---- scheduler hot path (engine._pop) ------------------------------
+    # "packed": selection pop over packed key planes — O(queue*batch), the
+    #           Pallas sched_pop kernel on TPU, pure-jnp ref elsewhere.
+    # "lexsort": the O(queue log queue) full-sort reference pop (the
+    #           differential oracle).  Both are bit-identical.
+    scheduler: str = "packed"
+
     # ---- register file layout ------------------------------------------
     @property
     def reg_inputs(self) -> int:
@@ -143,4 +150,5 @@ class EngineConfig:
         assert self.partition in ("block", "tenant")
         assert self.superstep >= 1
         assert self.sink_spool_slots >= 0
+        assert self.scheduler in ("packed", "lexsort")
         return self

@@ -42,6 +42,15 @@ INT_MAX = np.iinfo(np.int32).max
 # (priority, seq) FIFO pop.
 FAIR_SCALE = 1 << 15
 
+# Within-tenant ranks saturate at RANK_LIM so the virtual tag
+# ``rank * FAIR_SCALE // weight`` stays inside int32 at any queue depth and
+# any weight (beyond ~64k queued SUs per tenant the tags plateau and ties
+# fall back to seq — still starvation-free).  Both scheduler paths apply the
+# same clamp (repro.kernels.sched_pop.ref mirrors this constant), which is
+# what keeps them bit-identical at the boundary
+# (tests/test_sched_pop.py::test_rank_clamp_boundary).
+RANK_LIM = INT_MAX // FAIR_SCALE - 1
+
 
 class DeviceTables(NamedTuple):
     """Device image of :class:`~repro.core.registry.EngineTables`: the
@@ -149,6 +158,36 @@ def init_state(cfg: EngineConfig) -> EngineState:
 # queue helpers
 # --------------------------------------------------------------------------
 
+# _first_free implementation cutover: the X-step selection loop costs
+# X * O(Q) while the nonzero scatter costs one O(Q) pass with a ~80x
+# larger per-element constant (XLA CPU scatter), so selection wins for
+# small request widths (phase-0 ingest: X = batch) and loses for wide
+# ones (stage-4 re-enqueue: X = work = batch * max_out).
+_FREE_SCAN_MAX = 64
+
+
+def _first_free(q_valid: jnp.ndarray, X: int) -> jnp.ndarray:
+    """Indices of the first ``X`` free queue slots, ascending, padded
+    with ``Q`` — ``jnp.nonzero(~q_valid, size=X, fill_value=Q)[0]``
+    bit-exactly.  For ``X <= _FREE_SCAN_MAX`` it runs as ``X``
+    vectorized argmin steps (the packed scheduler pop's selection
+    idiom, ~10x cheaper than the full-queue scatter ``nonzero`` lowers
+    to); wider requests keep the scatter, which is flat in ``X``."""
+    Q = q_valid.shape[0]
+    if X > _FREE_SCAN_MAX:
+        return jnp.nonzero(~q_valid, size=X, fill_value=Q)[0]
+    val0 = jnp.where(~q_valid, jnp.arange(Q, dtype=jnp.int32), Q)
+
+    def step(k, carry):
+        out, val = carry
+        m = jnp.min(val)
+        return out.at[k].set(m), jnp.where(val == m, Q, val)
+
+    out, _ = jax.lax.fori_loop(
+        0, X, step, (jnp.full((X,), Q, jnp.int32), val0))
+    return out
+
+
 def _enqueue(state: EngineState, sid, vals, ts, mask, tenant=None
              ) -> Tuple[EngineState, jnp.ndarray]:
     """Append masked items into free queue slots; returns #dropped.  With
@@ -157,7 +196,7 @@ def _enqueue(state: EngineState, sid, vals, ts, mask, tenant=None
     slots is attributable per tenant."""
     Q = state.q_valid.shape[0]
     X = sid.shape[0]
-    free = jnp.nonzero(~state.q_valid, size=X, fill_value=Q)[0]  # first X free
+    free = _first_free(state.q_valid, X)                         # first X free
     rank = jnp.cumsum(mask.astype(jnp.int32)) - 1               # slot per item
     dest = jnp.where(mask, free[jnp.clip(rank, 0, X - 1)], Q)   # Q -> dropped
     ok = mask & (dest < Q)
@@ -196,7 +235,8 @@ def _tenant_rank(mask: jnp.ndarray, tenant_idx: jnp.ndarray,
 
 def _pop(state: EngineState, priority_by_sid: jnp.ndarray, batch: int,
          tenant_by_sid: Optional[jnp.ndarray] = None,
-         weight: Optional[jnp.ndarray] = None):
+         weight: Optional[jnp.ndarray] = None,
+         scheduler: str = "packed"):
     """Pop up to ``batch`` queued SUs, lowest sort key first.
 
     Without QoS args this is the §IV-E priority pop: lowest ``(priority,
@@ -216,9 +256,35 @@ def _pop(state: EngineState, priority_by_sid: jnp.ndarray, batch: int,
     exempts a tenant: its tags are all 0, and an all-zero weight table
     reproduces the pre-QoS pop bit-exactly.
 
+    ``scheduler`` selects the implementation — identical results, very
+    different cost:
+
+    * ``"packed"`` (the default): selection pop.  Per-slot key planes are
+      built once, then the ``batch`` winners are extracted by repeated
+      vectorized lexicographic argmin with the fair tag maintained
+      incrementally (:mod:`repro.kernels.sched_pop` — fused Pallas kernel
+      on TPU, pure-jnp ref elsewhere).  O(Q·batch), no sort.
+    * ``"lexsort"``: the reference two-full-queue-sort pop, O(Q log Q) —
+      kept as the oracle the differential suite pins ``"packed"`` to.
+
     ``priority_by_sid``/``tenant_by_sid`` are indexed by whatever id space
     ``q_sid`` uses (global sids in the sharded engine, table rows on a
     single device)."""
+    if scheduler == "packed":
+        from repro.kernels.sched_pop.ops import sched_pop
+        prio_slot = priority_by_sid[state.q_sid]
+        if tenant_by_sid is None:
+            t_slot = jnp.zeros_like(state.q_sid)
+            w_slot = jnp.zeros_like(state.q_sid)
+        else:
+            T = weight.shape[0]
+            t_slot = jnp.clip(tenant_by_sid[state.q_sid], 0, T - 1)
+            w_slot = weight[t_slot]
+        take, popped = sched_pop(prio_slot, state.q_seq, state.q_valid,
+                                 t_slot, w_slot, state.q_sid, state.q_vals,
+                                 state.q_ts, batch)
+        return state._replace(
+            q_valid=state.q_valid.at[take].set(False)), popped
     key = jnp.where(state.q_valid, priority_by_sid[state.q_sid], INT_MAX)
     if tenant_by_sid is None:
         order = jnp.lexsort((state.q_seq, key))
@@ -229,10 +295,7 @@ def _pop(state: EngineState, priority_by_sid: jnp.ndarray, batch: int,
         v_sort = state.q_valid[order0]
         rank = _tenant_rank(v_sort, t_sort, T)       # within-tenant rank
         w = weight[t_sort]
-        # saturate the rank so rank*FAIR_SCALE stays inside int32 at any
-        # queue depth (beyond ~64k queued SUs per tenant the tags plateau
-        # and ties fall back to seq — still starvation-free)
-        rank = jnp.minimum(rank, INT_MAX // FAIR_SCALE - 1)
+        rank = jnp.minimum(rank, RANK_LIM)           # int32-safe tags
         vtag = jnp.where(v_sort & (w > 0), rank * FAIR_SCALE // w, 0)
         reorder = jnp.lexsort((state.q_seq[order0], vtag, key[order0]))
         order = order0[reorder]
@@ -355,10 +418,13 @@ def tenant_occupancy(state: EngineState, tenant_by_sid: jnp.ndarray,
                      n_tenants: int) -> jnp.ndarray:
     """Per-tenant pending-SU queue occupancy — the backpressure signal
     surfaced to the host in ``state.tenant_queued`` after every round.
-    ``tenant_by_sid`` is indexed by ``q_sid``'s id space (like ``_pop``)."""
+    ``tenant_by_sid`` is indexed by ``q_sid``'s id space (like ``_pop``).
+    Computed as a one-hot reduction rather than a scatter-add: same sums,
+    no O(Q) serial scatter on the per-round hot path."""
     q_t = jnp.clip(tenant_by_sid[state.q_sid], 0, n_tenants - 1)
-    return jnp.zeros((n_tenants,), jnp.int32).at[q_t].add(
-        state.q_valid.astype(jnp.int32))
+    onehot = (q_t[:, None] == jnp.arange(n_tenants)[None, :]) \
+        & state.q_valid[:, None]
+    return onehot.sum(axis=0, dtype=jnp.int32)
 
 
 # --------------------------------------------------------------------------
@@ -487,7 +553,8 @@ def make_step(
 
         # ---- pop this round's events (weighted-fair across tenants) -----
         state, (e_sid, e_vals, e_ts, e_pop) = _pop(
-            state, tables.priority, B, tables.tenant, tables.weight)
+            state, tables.priority, B, tables.tenant, tables.weight,
+            cfg.scheduler)
         # events whose stream was revoked while queued drop here
         e_act = tables.active[jnp.clip(e_sid, 0, N - 1)]
         e_valid = e_pop & e_act
@@ -592,13 +659,11 @@ def _init_spool(P: int, C: int) -> SinkSpool:
     )
 
 
-@functools.partial(jax.jit, donate_argnums=(0,))
-def stage_ring(ring: IngestRing, w_slot, w_sid, w_vals, w_ts,
-               rnd, pos, valid) -> IngestRing:
-    """The one host->device edit per superstep boundary: scatter newly
-    posted SU payloads into free ring slots (``w_*`` are (R,)-padded;
-    ``w_slot == R`` entries drop) and rewrite every slot's routing tag.
-    Carried-over slots keep their payloads — only tags travel again."""
+def _stage_ring(ring: IngestRing, w_slot, w_sid, w_vals, w_ts,
+                rnd, pos, valid) -> IngestRing:
+    """Unjitted :func:`stage_ring` body — the sharded engine vmaps it
+    over the shard axis (one staging edit for every shard's ring slice
+    in a single dispatch)."""
     return IngestRing(
         sid=ring.sid.at[w_slot].set(w_sid, mode="drop"),
         vals=ring.vals.at[w_slot].set(w_vals, mode="drop"),
@@ -606,6 +671,16 @@ def stage_ring(ring: IngestRing, w_slot, w_sid, w_vals, w_ts,
         rnd=jnp.asarray(rnd), pos=jnp.asarray(pos),
         valid=jnp.asarray(valid),
     )
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def stage_ring(ring: IngestRing, w_slot, w_sid, w_vals, w_ts,
+               rnd, pos, valid) -> IngestRing:
+    """The one host->device edit per superstep boundary: scatter newly
+    posted SU payloads into free ring slots (``w_*`` are (R,)-padded;
+    ``w_slot == R`` entries drop) and rewrite every slot's routing tag.
+    Carried-over slots keep their payloads — only tags travel again."""
+    return _stage_ring(ring, w_slot, w_sid, w_vals, w_ts, rnd, pos, valid)
 
 
 def ring_grid(ring: IngestRing, K: int, B: int, C: int) -> IngestBatch:
@@ -764,9 +839,14 @@ class StreamEngine:
         for i, (s, v, t, slot) in enumerate(take):
             sid[i], vals[i], ts[i], valid[i] = s, v, t, True
             if slot is not None:        # consumed via the per-round API:
-                self._ring_free.append(slot)  # release its staged ring slot
+                self._release_ring_slot(slot)  # release its staged ring slot
         return IngestBatch(jnp.asarray(sid), jnp.asarray(vals),
                            jnp.asarray(ts), jnp.asarray(valid))
+
+    def _release_ring_slot(self, slot) -> None:
+        """Return a consumed SU's staged ingest-ring slot to the free
+        pool (the sharded engine keys its pool per shard)."""
+        self._ring_free.append(slot)
 
     # --------------------------------------------------------------- rounds
     def round(self) -> SinkBatch:

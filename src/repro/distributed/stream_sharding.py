@@ -65,8 +65,9 @@ from repro.core import admission
 from repro.core.config import EngineConfig
 from repro.core.engine import (INT_MIN, STAT_KEYS, DeviceTables, EngineState,
                                IngestBatch, IngestRing, SinkBatch, SinkSpool,
-                               StreamEngine, _pop, fanout_reference,
-                               ingest_phase, process_work_items, scan_rounds,
+                               StreamEngine, _pop, _stage_ring,
+                               fanout_reference, ingest_phase,
+                               process_work_items, scan_rounds,
                                store_and_emit, tenant_occupancy)
 from repro.core.registry import EngineTables, Registry
 
@@ -198,6 +199,17 @@ def _place_sid_op(gmap: GlobalMaps, sid, shard, local, n_local, priority
     )
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _stage_ring_op(ring: IngestRing, w_slot, w_sid, w_vals, w_ts, rnd, pos,
+                   valid) -> IngestRing:
+    """Per-shard :func:`repro.core.engine.stage_ring` vmapped over the
+    leading shard axis: every shard's payload deltas are scattered into
+    its resident ring slice and every slot's routing tag rewritten, in
+    one dispatch (the inputs arrive pre-placed by one ``device_put``)."""
+    return jax.vmap(_stage_ring)(ring, w_slot, w_sid, w_vals, w_ts,
+                                 rnd, pos, valid)
+
+
 def sharded_init_state(cfg: EngineConfig, plan: ShardPlan) -> EngineState:
     """Per-shard EngineState slices stacked on a leading shard axis."""
     S, L, C, Q = plan.n_shards, plan.n_local, cfg.channels, cfg.queue
@@ -268,7 +280,8 @@ def make_shard_round(
 
         # ---- pop this round's events (weighted-fair; global sids) -------
         state, (e_sid, e_vals, e_ts, e_pop) = _pop(
-            state, gmap.priority, B, tenant_by_sid, tables.weight)
+            state, gmap.priority, B, tenant_by_sid, tables.weight,
+            cfg.scheduler)
         e_loc = jnp.clip(gmap.sid_to_local[jnp.clip(e_sid, 0, N - 1)],
                          0, n_local - 1)
         # events whose stream was revoked while queued drop here
@@ -478,7 +491,8 @@ class ShardedStreamEngine(StreamEngine):
         self._superstep_fns = {}
         self._ring = None
         self._ring_K = 0
-        self._ring_free: List[int] = []
+        self._ring_free: List[List[int]] = []
+        self._ring_dirty = False    # placement changed: re-stage everything
         self._init_slots()
 
     def _init_slots(self) -> None:
@@ -541,37 +555,94 @@ class ShardedStreamEngine(StreamEngine):
                 self.cfg, self.plan, self.mesh, K, self._fanout_fn)
         return fn
 
+    def _release_ring_slot(self, slot) -> None:
+        s, j = slot
+        self._ring_free[s].append(j)
+
     def _stage(self, K: int) -> None:
         """Superstep boundary, sharded: assign rounds exactly like K
-        sequential ``_take_ingest`` calls, route every staged SU to its
-        owner shard's ring slice (fill order per shard, like the per-round
-        ingest router), and ship the whole grid in one ``device_put``.
-        The sharded ring is rebuilt each boundary — placements may have
-        moved between supersteps (admission, rebalance, rewire) — so
-        carried overflow SUs stay host-side in ``_pending`` and simply
-        stage later, preserving the single transfer per superstep."""
+        sequential ``_take_ingest`` calls and route every staged SU to
+        its owner shard's ring slice.  The per-shard ring layout (and its
+        sharding) is *cached* across boundaries: carried SUs keep their
+        resident payloads and only the small routing-tag planes travel
+        again — new payloads plus all tags ship pre-placed in one
+        ``device_put``, then one jitted vmapped edit
+        (:func:`_stage_ring_op`) applies them, mirroring the
+        single-device ``stage_ring`` boundary.  Placement changes
+        (admission routing, ``rebalance``, ``rewire``) set
+        ``_ring_dirty``, which voids the cache — the next boundary
+        re-stages everything from the host copy, so a moved sid can
+        never consume a stale shard's slot."""
         S, R, C = self.plan.n_shards, self.cfg.ring_slots(K), self.cfg.channels
         N = self.cfg.n_streams
-        self._ring_K = K
+        if self._ring is None or self._ring_K != K or self._ring_dirty:
+            self._ring = jax.device_put(IngestRing(
+                sid=np.zeros((S, R), np.int32),
+                vals=np.zeros((S, R, C), np.float32),
+                ts=np.zeros((S, R), np.int32),
+                rnd=np.full((S, R), K, np.int32),
+                pos=np.zeros((S, R), np.int32),
+                valid=np.zeros((S, R), bool)), self._shard)
+            self._ring_K = K
+            self._ring_free = [list(range(R)) for _ in range(S)]
+            for e in self._pending:     # slots of the old ring are void
+                e[3] = None
+            self._ring_dirty = False
+
+        def shard_of(e):
+            # route on the same clipped sid the per-shard step stores to
+            return int(self.plan.sid_to_shard[min(max(int(e[0]), 0), N - 1)])
+
         assigned = self._assign_rounds(K)
-        sid = np.zeros((S, R), np.int32)
-        vals = np.zeros((S, R, C), np.float32)
-        ts = np.zeros((S, R), np.int32)
+        carried = [e for e in self._pending if e[3] is not None]
+        writes = []
+        for e, _k, _i in assigned:
+            s = shard_of(e)
+            if e[3] is not None and e[3][0] != s:   # placement moved and the
+                self._ring_free[e[3][0]].append(e[3][1])   # dirty reset
+                e[3] = None                          # missed it: release the
+            if e[3] is None:                         # stale shard's slot and
+                if self._ring_free[s]:               # re-ship
+                    e[3] = (s, self._ring_free[s].pop())
+                else:           # youngest carried SU on s spills its slot
+                    victim = next(x for x in reversed(carried)
+                                  if x[3] is not None and x[3][0] == s)
+                    e[3], victim[3] = victim[3], None
+                writes.append(e)
+        for e in self._pending:     # pre-ship: earliest carried SUs claim
+            if e[3] is None:        # leftover slots, cutting future ships
+                s = shard_of(e)
+                if self._ring_free[s]:
+                    e[3] = (s, self._ring_free[s].pop())
+                    writes.append(e)
+        w_slot = np.full((S, R), R, np.int32)
+        w_sid = np.zeros((S, R), np.int32)
+        w_vals = np.zeros((S, R, C), np.float32)
+        w_ts = np.zeros((S, R), np.int32)
+        wn = np.zeros((S,), np.int64)
+        for e in writes:
+            s, j = e[3]
+            q = int(wn[s]); wn[s] += 1
+            w_slot[s, q], w_sid[s, q] = j, min(max(int(e[0]), 0), N - 1)
+            w_vals[s, q], w_ts[s, q] = e[1], e[2]
         rnd = np.full((S, R), K, np.int32)
         pos = np.zeros((S, R), np.int32)
         valid = np.zeros((S, R), bool)
-        nxt = np.zeros((S,), np.int64)        # next free ring slot per shard
         col: dict = {}                        # (shard, round) -> next column
         for e, k, _i in assigned:             # (round, take-order) order
-            # route on the same clipped sid the per-shard step stores to
-            g = min(max(int(e[0]), 0), N - 1)
-            s = int(self.plan.sid_to_shard[g])
-            j = int(nxt[s]); nxt[s] += 1
+            s, j = e[3]
             c = col.get((s, k), 0); col[(s, k)] = c + 1
-            sid[s, j], vals[s, j], ts[s, j] = g, e[1], e[2]
             rnd[s, j], pos[s, j], valid[s, j] = k, c, True
-        self._ring = jax.device_put(
-            IngestRing(sid, vals, ts, rnd, pos, valid), self._shard)
+        for e in self._pending:
+            if e[3] is not None:
+                s, j = e[3]
+                valid[s, j] = True            # carried overflow stays resident
+        args = jax.device_put((w_slot, w_sid, w_vals, w_ts, rnd, pos, valid),
+                              self._shard)
+        self._ring = _stage_ring_op(self._ring, *args)
+        for e, _k, _i in assigned:            # consumed by this superstep:
+            s, j = e[3]                       # slots reusable next boundary
+            self._ring_free[s].append(j)
 
     def _run_superstep(self, K: int) -> SinkSpool:
         self.state, spool, self._ring = self._superstep_fn(K)(
@@ -671,6 +742,7 @@ class ShardedStreamEngine(StreamEngine):
             if partner is not None:
                 self._set_gmap(partner, 0)
             cur = want
+            self._ring_dirty = True     # sid routing moved: void ring cache
         self._occupancy[cur] += 1
         self._set_gmap(sid, priority)
 
@@ -721,6 +793,7 @@ class ShardedStreamEngine(StreamEngine):
             self._set_gmap(sid, int(prio[sid]))
             moved += 1
         if moved:
+            self._ring_dirty = True
             self._sync_admitted()
         return moved
 
@@ -761,6 +834,7 @@ class ShardedStreamEngine(StreamEngine):
             self._shard)
         self.gmap = jax.device_put(GlobalMaps.build(prio, new_plan),
                                    self._repl)
+        self._ring_dirty = True         # plan rebuilt: void the ring cache
         self._init_slots()
 
     # ------------------------------------------------------------- readback

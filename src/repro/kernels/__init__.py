@@ -1,9 +1,13 @@
 """Pallas TPU kernels for the perf-critical layers.
 
-Five kernels, each with kernel.py (pl.pallas_call + explicit BlockSpec
+Six kernels, each with kernel.py (pl.pallas_call + explicit BlockSpec
 VMEM tiling), ops.py (jit wrapper; interpret mode on non-TPU backends)
 and ref.py (pure jnp/numpy oracle):
 
+  sched_pop       — the scheduler hot path: fused key-build + top-B
+                    selection + winner gather (engine default via
+                    EngineConfig.scheduler="packed"; the jnp ref is the
+                    CPU fallback, not interpret mode)
   stream_dispatch — the paper's dispatch/fetch hot path as one-hot MXU
                     gathers (engine drop-in via ops.make_fanout)
   flash_attention — causal/sliding-window GQA, online softmax, block skip

@@ -1,0 +1,3 @@
+"""Fused scheduler-pop kernel (engine hot path): key build + top-B
+selection + winner gather.  ``ops.sched_pop`` dispatches the Pallas
+kernel on TPU and the pure-jnp selection ref elsewhere."""

@@ -1,0 +1,48 @@
+"""Dispatch wrapper for the selection-based scheduler pop.
+
+``sched_pop()`` is the one entry point the engine's ``_pop`` calls on
+the ``"packed"`` scheduler: it picks the fused Pallas kernel on TPU and
+the pure-jnp selection loop (``ref.sched_pop_ref``) everywhere else —
+the interpreted ref *is* the CPU fallback, so a CPU round never pays
+Pallas interpret-mode overhead on its hottest path.  Both paths are
+bit-identical to each other and to the lexsort pop (the differential
+suite in ``tests/test_sched_pop.py`` holds all three together).
+
+The function is deliberately *not* jitted: it is traced inline into the
+engine round (and the superstep scan), so the selection fuses with the
+rest of the step like the lexsort it replaces.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sched_pop.ref import sched_pop_ref
+
+
+def sched_pop(prio, seq, valid, tenant, w_slot, sid, vals, ts, batch: int,
+              *, use_kernel: Optional[bool] = None,
+              interpret: Optional[bool] = None) -> Tuple:
+    """Pop the ``batch`` winning queue slots and gather their payloads.
+
+    prio/seq/tenant/w_slot/sid/ts: (Q,) int32 per-slot planes; valid:
+    (Q,) bool; vals: (Q, C) float32.  Returns ``(take, (p_sid, p_vals,
+    p_ts, p_valid))``: the winning slot indices (batch,) in pop order —
+    exactly the lexsort pop's ``order[:batch]`` — and their gathered
+    rows.  ``use_kernel=None`` auto-selects the Pallas kernel on TPU;
+    ``interpret`` forces the kernel's interpret mode (tests)."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        from repro.kernels.sched_pop.kernel import sched_pop_call
+        interp = (jax.default_backend() != "tpu") if interpret is None \
+            else interpret
+        return sched_pop_call(prio, seq, valid, tenant, w_slot, sid, vals,
+                              ts, batch, interpret=interp)
+    take = sched_pop_ref(jnp.asarray(prio, jnp.int32),
+                         jnp.asarray(seq, jnp.int32), valid,
+                         jnp.asarray(tenant, jnp.int32),
+                         jnp.asarray(w_slot, jnp.int32), batch)
+    return take, (sid[take], vals[take], ts[take], valid[take])

@@ -1,0 +1,91 @@
+"""Pure-jnp selection pop: the oracle and the CPU fallback of the
+scheduler hot path (engine ``_pop`` with ``EngineConfig.scheduler ==
+"packed"``).
+
+The lexsort pop orders the *whole* queue by the composite key
+``(priority, virtual fair tag, seq)`` and takes the first ``batch`` —
+two full-queue sorts plus a (Q, T) rank cumsum, O(Q log Q) work to
+extract B << Q winners.  The selection pop exploits the weighted-fair-
+queueing head property instead: within one tenant the composite key is
+monotone along the tenant's own ``(priority, seq)`` order, so the
+globally sorted queue is a merge of per-tenant monotone runs — and
+popping the global minimum ``batch`` times, bumping only the winning
+tenant's virtual tag (``popped-so-far * FAIR_SCALE // weight``, the tag
+its next head would have carried in the static sort), visits exactly
+the same slots in exactly the same order.  Each step is a vectorized
+lexicographic argmin over three (Q,) key planes: O(Q·batch) with tiny
+constants, no sort anywhere, and bit-identical to the lexsort pop —
+ties (equal priority *and* tag *and* seq, only reachable through
+never-used or stale slots) resolve to the lowest slot index, matching
+``jnp.lexsort``'s stability end to end.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INT_MAX = np.iinfo(np.int32).max
+# Virtual-time granularity shared with repro.core.engine.FAIR_SCALE (kept
+# literal here so the kernels package stays importable without the core).
+FAIR_SCALE = 1 << 15
+# Within-tenant ranks saturate here so rank * FAIR_SCALE stays inside
+# int32 at any queue depth (the same clamp the lexsort path applies —
+# beyond it the tags plateau and ties fall back to seq).
+RANK_LIM = INT_MAX // FAIR_SCALE - 1
+
+
+def sched_pop_ref(prio, seq, valid, tenant, w_slot, batch: int):
+    """Select the ``batch`` winning queue slots, lowest sort key first.
+
+    prio/seq/tenant/w_slot: (Q,) int32 per-slot planes (priority by slot,
+    FIFO seq, clipped owning tenant, the tenant's fair-share weight);
+    valid: (Q,) bool.  Returns ``take``: (batch,) int32 slot indices —
+    the exact slots (and order) the lexsort pop's ``order[:batch]``
+    yields, invalid filler slots included.
+
+    The loop pops the global minimum of ``(key, tag, seq, slot)`` where
+    ``key = priority`` for valid slots and ``INT_MAX`` otherwise, and
+    ``tag`` is the winner's tenant's *current* virtual tag — every valid
+    slot of a tenant carries the tag of the tenant's head (deeper slots
+    are shadowed by their own head, so understating them is harmless),
+    and a pop of a valid slot advances its tenant's tag to
+    ``min(popped, RANK_LIM) * FAIR_SCALE // w``.  Taken slots are
+    retired by raising their key *and* tag planes to ``INT_MAX``, a pair
+    no live slot can reach (live tags are clamped below it)."""
+    Q = prio.shape[0]
+    iota = jnp.arange(Q, dtype=jnp.int32)
+    key0 = jnp.where(valid, prio, INT_MAX)
+    seq = seq.astype(jnp.int32)
+
+    def step(b, carry):
+        take, k1, tag, taken = carry
+        # lexicographic argmin over (k1, tag, seq), first index on ties
+        m1 = jnp.min(k1)
+        c1 = k1 == m1
+        m2 = jnp.min(jnp.where(c1, tag, INT_MAX))
+        c2 = c1 & (tag == m2)
+        m3 = jnp.min(jnp.where(c2, seq, INT_MAX))
+        c3 = c2 & (seq == m3)
+        i = jnp.min(jnp.where(c3, iota, Q)).astype(jnp.int32)
+        was_valid = valid[i]
+        t_i = tenant[i]
+        w_i = w_slot[i]
+        # valid pops of tenant t_i so far (incl. this one) == the static
+        # within-tenant rank of t_i's next head in the lexsort pop
+        cnt = (taken & valid & (tenant == t_i)).sum(dtype=jnp.int32) \
+            + was_valid.astype(jnp.int32)
+        rank = jnp.minimum(cnt, RANK_LIM)
+        tagval = jnp.where(w_i > 0, rank * FAIR_SCALE
+                           // jnp.maximum(w_i, 1), 0)
+        bump = was_valid & (tenant == t_i) & valid & (w_i > 0) & ~taken
+        tag = jnp.where(bump, tagval, tag)
+        tag = tag.at[i].set(INT_MAX)
+        k1 = k1.at[i].set(INT_MAX)
+        return (take.at[b].set(i), k1, tag, taken.at[i].set(True))
+
+    take, _, _, _ = jax.lax.fori_loop(
+        0, batch, step,
+        (jnp.zeros((batch,), jnp.int32), key0,
+         jnp.zeros((Q,), jnp.int32), jnp.zeros((Q,), bool)))
+    return take

@@ -9,6 +9,8 @@ from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.mlstm_chunk.ops import mlstm_pallas
 from repro.kernels.mlstm_chunk.ref import mlstm_ref
+from repro.kernels.sched_pop.kernel import sched_pop_call
+from repro.kernels.sched_pop.ref import sched_pop_ref
 from repro.kernels.selective_scan.ops import ssm_scan_pallas
 from repro.kernels.selective_scan.ref import selective_scan_ref
 from repro.kernels.stream_dispatch.kernel import onehot_gather
@@ -48,6 +50,30 @@ def test_stream_dispatch_sweep(N, F, B):
                                    jnp.asarray(tstab))
     np.testing.assert_array_equal(np.asarray(tg), np.asarray(tg2))
     np.testing.assert_array_equal(np.asarray(ea), np.asarray(ea2))
+
+
+# -------------------------------------------------------------- sched pop
+@pytest.mark.parametrize("Q,T,B,C", [(4, 1, 2, 1), (64, 4, 16, 4),
+                                     (300, 3, 24, 2), (1024, 8, 64, 4)])
+def test_sched_pop_sweep(Q, T, B, C):
+    prio = RNG.choice([0, 1, 3, 2**31 - 1, -4], Q).astype(np.int32)
+    seq = RNG.integers(-5, 60, Q).astype(np.int32)      # collisions likely
+    valid = RNG.random(Q) < 0.6
+    tenant = RNG.integers(0, T, Q).astype(np.int32)
+    w_slot = RNG.choice([0, 1, 2, 7, 2**15], T).astype(np.int32)[tenant]
+    sid = RNG.integers(0, 2**24, Q).astype(np.int32)
+    ts = RNG.integers(-2**31 + 1, 2**31 - 1, Q).astype(np.int32)
+    vals = RNG.standard_normal((Q, C)).astype(np.float32)
+    args = tuple(map(jnp.asarray, (prio, seq, valid, tenant, w_slot)))
+    want = sched_pop_ref(*args, B)
+    got, popped = sched_pop_call(*args, jnp.asarray(sid), jnp.asarray(vals),
+                                 jnp.asarray(ts), B, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    take = np.asarray(want)
+    np.testing.assert_array_equal(np.asarray(popped[0]), sid[take])
+    np.testing.assert_array_equal(np.asarray(popped[1]), vals[take])
+    np.testing.assert_array_equal(np.asarray(popped[2]), ts[take])
+    np.testing.assert_array_equal(np.asarray(popped[3]), valid[take])
 
 
 # ------------------------------------------------------------- attention
