@@ -1,4 +1,4 @@
-from repro.checkpoint.ckpt import (CheckpointManager, latest_step, restore,
-                                   save)
+from repro.checkpoint.ckpt import (CheckpointManager, latest_step, load,
+                                   restore, save)
 
-__all__ = ["CheckpointManager", "save", "restore", "latest_step"]
+__all__ = ["CheckpointManager", "save", "restore", "load", "latest_step"]

@@ -2,8 +2,14 @@
 
 Production posture (1000+ nodes):
   * **atomic** — a checkpoint directory is written as ``step_N.tmp`` and
-    renamed to ``step_N`` only after every leaf + manifest is fsynced;
-    a crash mid-write never corrupts the latest checkpoint;
+    renamed to ``step_N`` only after every leaf + manifest + the directory
+    itself are fsynced (``sync=True``, the default); a crash mid-write
+    never corrupts the latest checkpoint.  ``sync=False`` skips the fsync
+    barrier — the rename is still atomic against *process* death, but a
+    machine crash can lose a just-renamed checkpoint to the page cache.
+    That is the async-manager path: `CheckpointManager.save_async` trades
+    the barrier for I/O overlap, and the previous (fully-synced or aged)
+    checkpoint remains the durable fallback;
   * **async** — `CheckpointManager.save_async` snapshots device arrays to
     host (blocking only for the device->host copy) and writes in a
     background thread, overlapping I/O with the next train steps;
@@ -13,7 +19,8 @@ Production posture (1000+ nodes):
     Rescaling pods therefore needs no reshard tool.  (On a real multi-host
     fleet each host would write its owned shards via tensorstore/OCDBT —
     the manifest format and atomicity protocol are the same.)
-  * **self-pruning** — keeps the newest ``keep`` checkpoints.
+  * **self-pruning** — keeps the newest ``keep`` checkpoints (``keep`` must
+    be >= 1; the newest checkpoint is never pruned).
 """
 from __future__ import annotations
 
@@ -38,27 +45,79 @@ def _flatten(tree) -> List[Tuple[str, Any]]:
     return out
 
 
-def save(path: str, step: int, tree, *, sync: bool = True) -> str:
-    """Write one checkpoint atomically.  Returns the final directory."""
+def _leaf_filenames(keys: List[str]) -> Dict[str, str]:
+    """Map each leaf key to a unique ``.npy`` filename.
+
+    Sanitization (``/`` and friends -> ``_``) can collide — ``a/b`` and
+    ``a_b`` both sanitize to ``a_b`` — which used to silently overwrite one
+    leaf with the other.  Collisions are now disambiguated deterministically
+    (in key order: ``a_b.npy``, ``a_b.1.npy``, ...) and any residual
+    duplicate is a hard error."""
+    if len(set(keys)) != len(keys):
+        dupes = sorted({k for k in keys if keys.count(k) > 1})
+        raise ValueError(f"duplicate pytree leaf keys: {dupes}")
+    fnames: Dict[str, str] = {}
+    used = set()
+    for key in keys:
+        base = re.sub(r"[^A-Za-z0-9_.-]", "_", key)
+        name, n = base, 0
+        while name in used:
+            n += 1
+            name = f"{base}.{n}"
+        used.add(name)
+        fnames[key] = name + ".npy"
+    if len(set(fnames.values())) != len(keys):
+        raise ValueError("leaf filename disambiguation failed")
+    return fnames
+
+
+def _fsync_dir(d: str) -> None:
+    fd = os.open(d, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def save(path: str, step: int, tree, *, sync: bool = True,
+         extra: Optional[dict] = None) -> str:
+    """Write one checkpoint atomically.  Returns the final directory.
+
+    ``sync=True`` fsyncs every leaf file, the manifest, and the checkpoint
+    directory before the rename (and the parent directory after), so the
+    rename is a durability barrier.  ``sync=False`` skips the fsyncs — the
+    async-manager path.  ``extra`` is an optional JSON-able dict stored in
+    the manifest and returned by :func:`load`."""
     final = os.path.join(path, f"step_{step:08d}")
     tmp = final + ".tmp"
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(tree)
+    fnames = _leaf_filenames([k for k, _ in flat])
     manifest: Dict[str, Dict] = {}
-    for key, leaf in _flatten(tree):
+    for key, leaf in flat:
         arr = np.asarray(leaf)
-        fname = re.sub(r"[^A-Za-z0-9_.-]", "_", key) + ".npy"
-        np.save(os.path.join(tmp, fname), arr)
+        fname = fnames[key]
+        with open(os.path.join(tmp, fname), "wb") as f:
+            np.save(f, arr)
+            if sync:
+                f.flush()
+                os.fsync(f.fileno())
         manifest[key] = {"file": fname, "shape": list(arr.shape),
                          "dtype": str(arr.dtype)}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump({"step": step, "leaves": manifest}, f)
-        f.flush()
-        os.fsync(f.fileno())
+        json.dump({"step": step, "leaves": manifest, "extra": extra}, f)
+        if sync:
+            f.flush()
+            os.fsync(f.fileno())
+    if sync:
+        _fsync_dir(tmp)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+    if sync:
+        _fsync_dir(path)
     return final
 
 
@@ -68,6 +127,21 @@ def latest_step(path: str) -> Optional[int]:
     steps = [int(m.group(1)) for d in os.listdir(path)
              if (m := re.fullmatch(r"step_(\d+)", d))]
     return max(steps) if steps else None
+
+
+def load(path: str, step: int) -> Tuple[Dict[str, np.ndarray], Optional[dict]]:
+    """Read every leaf of checkpoint ``step`` without a like-tree.
+
+    Returns ``(leaves, extra)`` where ``leaves`` maps each flattened key to
+    its host array and ``extra`` is the dict passed to :func:`save` (or
+    None).  The flat form suits consumers (like engine restore) that
+    rebuild their own structures from the keys."""
+    d = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        m = json.load(f)
+    leaves = {key: np.load(os.path.join(d, info["file"]))
+              for key, info in m["leaves"].items()}
+    return leaves, m.get("extra")
 
 
 def restore(path: str, step: int, like, *, shardings=None):
@@ -94,41 +168,84 @@ def restore(path: str, step: int, like, *, shardings=None):
 
 
 class CheckpointManager:
+    """Async writer + pruner over one checkpoint directory.
+
+    All disk mutation (save, prune) and the list-then-read of restore run
+    under one lock, so ``restore_latest``/``load_latest`` can never read a
+    checkpoint that a background prune is deleting out from under them."""
+
     def __init__(self, path: str, keep: int = 3):
+        if keep < 1:
+            raise ValueError(
+                f"keep must be >= 1, got {keep}: keep=0 would delete every "
+                "checkpoint the moment it lands")
         self.path = path
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
+        self._lock = threading.RLock()
         os.makedirs(path, exist_ok=True)
 
     def wait(self):
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
+        """Block until any in-flight background save (and its prune) lands."""
+        t = self._thread
+        if t is not None:
+            t.join()
+            if self._thread is t:       # don't clobber a newer save
+                self._thread = None
 
-    def save_async(self, step: int, tree) -> None:
-        """Device->host snapshot now; disk writes in the background."""
+    def save_async(self, step: int, tree, extra: Optional[dict] = None) -> None:
+        """Device->host snapshot now; disk writes in the background
+        (``sync=False`` — see the module docstring for the durability
+        tradeoff)."""
         self.wait()
         host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
 
         def work():
-            save(self.path, step, host_tree)
-            self._prune()
+            with self._lock:
+                save(self.path, step, host_tree, sync=False, extra=extra)
+                self._prune()
 
-        self._thread = threading.Thread(target=work, daemon=True)
-        self._thread.start()
+        t = threading.Thread(target=work, daemon=True)
+        t.start()                       # started before it is published, so
+        self._thread = t                # a concurrent wait() can always join
 
-    def save_sync(self, step: int, tree) -> str:
+    def save_sync(self, step: int, tree, extra: Optional[dict] = None) -> str:
+        """Fully-synced (fsync-barrier) save on the calling thread."""
         self.wait()
-        out = save(self.path, step, tree)
-        self._prune()
+        with self._lock:
+            out = save(self.path, step, tree, sync=True, extra=extra)
+            self._prune()
         return out
 
     def restore_latest(self, like, shardings=None):
+        """Restore the newest checkpoint into the structure of ``like``;
+        returns ``(step, tree)`` or ``(None, None)`` when none exist."""
         self.wait()
-        step = latest_step(self.path)
-        if step is None:
-            return None, None
-        return step, restore(self.path, step, like, shardings=shardings)
+        with self._lock:
+            while True:
+                step = latest_step(self.path)
+                if step is None:
+                    return None, None
+                try:
+                    return step, restore(self.path, step, like,
+                                         shardings=shardings)
+                except FileNotFoundError:
+                    continue    # that step vanished; re-list
+
+    def load_latest(self):
+        """Like :meth:`restore_latest` but with no like-tree: returns
+        ``(step, leaves, extra)`` via :func:`load`, or ``(None, None, None)``."""
+        self.wait()
+        with self._lock:
+            while True:
+                step = latest_step(self.path)
+                if step is None:
+                    return None, None, None
+                try:
+                    leaves, extra = load(self.path, step)
+                    return step, leaves, extra
+                except FileNotFoundError:
+                    continue
 
     def _prune(self):
         steps = sorted(int(m.group(1)) for d in os.listdir(self.path)

@@ -1,9 +1,10 @@
 """Core of the reproduction: the multi-tenant pub/sub stream runtime."""
 from repro.core.config import EngineConfig
-from repro.core.engine import (DeviceTables, EngineState, IngestBatch,
-                               IngestRing, SinkBatch, SinkSpool,
-                               StreamEngine, create_engine, init_state,
-                               make_step, make_superstep)
+from repro.core.engine import (DLQ_REASONS, DeadLetter, DeviceTables,
+                               EngineState, IngestBatch, IngestRing,
+                               SinkBatch, SinkSpool, StreamEngine,
+                               create_engine, init_state, make_step,
+                               make_superstep, restore_engine)
 from repro.core.graph import PipelineGraph
 from repro.core.registry import Registry, Stream, Tenant
 
@@ -11,7 +12,8 @@ __all__ = [
     "EngineConfig", "Registry", "Stream", "Tenant", "StreamEngine",
     "DeviceTables", "EngineState", "IngestBatch", "SinkBatch",
     "IngestRing", "SinkSpool", "init_state", "make_step", "make_superstep",
-    "PipelineGraph", "create_engine", "admission",
+    "PipelineGraph", "create_engine", "restore_engine", "DeadLetter",
+    "DLQ_REASONS", "admission",
 ]
 
 from repro.core import admission  # noqa: E402  (jitted table-edit ops)

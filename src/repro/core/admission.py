@@ -29,6 +29,11 @@ round consumes —
                          live weight table (QoS plane)
     set_quota            edit one tenant's ingest token bucket
                          (tokens/round + burst capacity; QoS plane)
+    requeue              enqueue SUs directly, bypassing phase 0 — the
+                         retention-replay / dead-letter-redelivery edit
+                         (durability plane; ``requeue_shard`` routes one
+                         shard's slice on the sharded engine)
+    clear_dead_letters   reset the dead-letter spool cursor after a drain
 
 All ops address rows by an *index tuple*: ``(sid,)`` on a single device,
 ``(shard, local)`` against the sharded tables — the same code traces once
@@ -56,8 +61,9 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import (FAIR_SCALE, INT_MAX, INT_MIN, DeviceTables,
-                               EngineState)
+from repro.core.engine import (DLQ_REVOKED, FAIR_SCALE, INT_MAX, INT_MIN,
+                               DeviceTables, EngineState, _enqueue,
+                               dlq_append)
 
 # token buckets refill as tokens + quota with tokens <= burst, so both
 # knobs are clipped to half the int32 range to make the sum overflow-proof
@@ -73,7 +79,10 @@ _TABLE_FILL = {
     "progs": 0, "consts": 0.0, "is_composite": False, "tenant": 0,
     "priority": 0, "n_channels": 1, "model_backed": False, "active": False,
 }
-_STATE_FILL = {"values": 0.0, "timestamps": INT_MIN}
+# per-stream state-slice fills: last value/timestamp plus the retention
+# ring (a recycled sid must never replay its predecessor's emissions)
+_STATE_FILL = {"values": 0.0, "timestamps": INT_MIN,
+               "ret_vals": 0.0, "ret_ts": 0, "ret_count": 0}
 
 
 def _clear_row(tables: DeviceTables, row: Tuple) -> DeviceTables:
@@ -83,9 +92,9 @@ def _clear_row(tables: DeviceTables, row: Tuple) -> DeviceTables:
 
 
 def _reset_state_row(state: EngineState, row: Tuple) -> EngineState:
-    return state._replace(
-        values=state.values.at[row].set(0.0),
-        timestamps=state.timestamps.at[row].set(INT_MIN))
+    return state._replace(**{
+        f: getattr(state, f).at[row].set(fill)
+        for f, fill in _STATE_FILL.items()})
 
 
 # --------------------------------------------------------------------------
@@ -121,7 +130,9 @@ def revoke_stream(tables: DeviceTables, state: EngineState, row: Tuple,
     """Remove a stream: clear its row, sever every edge referencing ``sid``
     (subscribers keep running on their remaining inputs), and purge its
     queued SUs into ``stats["dropped_revoked"]`` so in-flight work drops
-    cleanly instead of firing into a recycled row."""
+    cleanly instead of firing into a recycled row.  Purged SUs spill into
+    the dead-letter spool (reason ``revoked``) when one is configured."""
+    t_rev = tables.tenant[row]      # owner, read before the row clears
     in_scrub = jnp.where(tables.in_table == sid, -1, tables.in_table)
     out_scrub = jnp.where(tables.out_table == sid, -1, tables.out_table)
     tables = tables._replace(
@@ -136,6 +147,14 @@ def revoke_stream(tables: DeviceTables, state: EngineState, row: Tuple,
     stats = dict(state.stats)
     stats["dropped_revoked"] = stats["dropped_revoked"] + \
         hit.sum(axis=-1, dtype=jnp.int32)
+    if state.dlq_fill.ndim:         # sharded layout: per-shard spools
+        state = jax.vmap(lambda st, s_, v_, t_, m_: dlq_append(
+            st, s_, v_, t_, jnp.full_like(s_, t_rev), DLQ_REVOKED, m_))(
+                state, state.q_sid, state.q_vals, state.q_ts, hit)
+    else:
+        state = dlq_append(state, state.q_sid, state.q_vals, state.q_ts,
+                           jnp.full_like(state.q_sid, t_rev),
+                           DLQ_REVOKED, hit)
     state = _reset_state_row(state, row)._replace(
         q_valid=state.q_valid & ~hit, stats=stats)
     return tables, state
@@ -265,6 +284,51 @@ def set_quota(tables: DeviceTables, state: EngineState, tid, quota, burst
         burst=tables.burst.at[..., tid].set(b))
     state = state._replace(tokens=jnp.minimum(state.tokens, tables.burst))
     return tables, state
+
+
+def _requeue_body(state: EngineState, sid, vals, ts, valid, tenant
+                  ) -> EngineState:
+    """Shared body of :func:`requeue` / :func:`requeue_shard`."""
+    state, dropped = _enqueue(state, sid, vals, ts, valid, tenant)
+    stats = dict(state.stats)
+    stats["dropped_overflow"] = stats["dropped_overflow"] + dropped
+    stats["replayed"] = stats["replayed"] + \
+        valid.sum(dtype=jnp.int32) - dropped
+    return state._replace(stats=stats)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def requeue(state: EngineState, sid, vals, ts, valid, tenant) -> EngineState:
+    """Enqueue SUs *directly* into the pending queue — the durability
+    plane's replay / dead-letter-redelivery edit.  Bypasses phase 0 (and
+    its monotone-timestamp gate), so retained historical SUs survive even
+    though the stream has since emitted newer data; downstream, Listing-2
+    consistency still discards them at subscribers that already processed
+    them.  Queue overflow drops are counted, charged to ``tenant`` and
+    dead-lettered like any enqueue; SUs that land count in
+    ``stats["replayed"]``.  Zero retraces: one trace per pad width."""
+    return _requeue_body(state, sid, vals, ts, valid, tenant)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def requeue_shard(state: EngineState, shard, sid, vals, ts, valid, tenant
+                  ) -> EngineState:
+    """Sharded :func:`requeue`: apply the edit to shard ``shard``'s state
+    slice.  The host routes each item to its owner shard first (``q_sid``
+    holds global sids, so the payload arrays travel unchanged).  ``shard``
+    is traced — one trace serves every shard."""
+    loc = jax.tree.map(lambda x: x[shard], state)
+    loc = _requeue_body(loc, sid, vals, ts, valid, tenant)
+    return jax.tree.map(lambda full, leaf: full.at[shard].set(leaf),
+                        state, loc)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def clear_dead_letters(state: EngineState) -> EngineState:
+    """Reset the dead-letter spool cursor after a host drain; payloads
+    need no scrub — ``dlq_fill`` gates every read.  Works on both the
+    single-device scalar cursor and the sharded per-shard cursors."""
+    return state._replace(dlq_fill=jnp.zeros_like(state.dlq_fill))
 
 
 def reset_windows(store, sid):

@@ -39,6 +39,11 @@ class EngineConfig:
     superstep: int = 1          # rounds fused per compiled scan (1 = off)
     sink_spool_slots: int = 0   # per-superstep sink spool rows (0 -> K*sink)
 
+    # ---- durability & replay plane (repro.checkpoint, engine DLQ) ------
+    checkpoint_every: int = 0   # async snapshot every N supersteps (0 = off)
+    retention_slots: int = 0    # retained emissions per stream (0 = off)
+    dlq_slots: int = 0          # dead-letter spool rows (0 = off)
+
     # ---- scheduler hot path (engine._pop) ------------------------------
     # "packed": selection pop over packed key planes — O(queue*batch), the
     #           Pallas sched_pop kernel on TPU, pure-jnp ref elsewhere.
@@ -151,4 +156,7 @@ class EngineConfig:
         assert self.superstep >= 1
         assert self.sink_spool_slots >= 0
         assert self.scheduler in ("packed", "lexsort")
+        assert self.checkpoint_every >= 0
+        assert self.retention_slots >= 0
+        assert self.dlq_slots >= 0
         return self

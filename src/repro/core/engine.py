@@ -21,6 +21,7 @@ is the non-parallelizable dimension while in/out-degree work is parallel.
 from __future__ import annotations
 
 import functools
+import os
 from typing import Callable, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
@@ -102,6 +103,17 @@ class EngineState(NamedTuple):
     tenant_queued: jnp.ndarray   # (T,) queue occupancy after the round
     tenant_dropped_quota: jnp.ndarray     # (T,) SUs shed over quota
     tenant_dropped_overflow: jnp.ndarray  # (T,) queue/exchange drops
+    # ---- durability plane (sized by retention_slots / dlq_slots; both
+    # default to 0, which keeps every leaf empty and every update a no-op) -
+    ret_vals: jnp.ndarray      # (N, Rr, C) per-stream retained emissions
+    ret_ts: jnp.ndarray        # (N, Rr) their timestamps
+    ret_count: jnp.ndarray     # (N,) emissions ever retained (ring cursor)
+    dlq_sid: jnp.ndarray       # (D,) dead-letter stream ids
+    dlq_vals: jnp.ndarray      # (D, C) dead-letter payloads
+    dlq_ts: jnp.ndarray        # (D,) dead-letter timestamps
+    dlq_reason: jnp.ndarray    # (D,) drop class (see DLQ_REASONS)
+    dlq_tenant: jnp.ndarray    # (D,) charged tenant
+    dlq_fill: jnp.ndarray      # scalar int32 spool cursor
     stats: Dict[str, jnp.ndarray]
 
 
@@ -123,12 +135,29 @@ class SinkBatch(NamedTuple):
     valid: jnp.ndarray         # (S,) bool
 
 
+class DeadLetter(NamedTuple):
+    """One recovered drop, drained from the device dead-letter spool by
+    ``StreamEngine.dead_letters()``: the SU's payload, the drop class
+    (a :data:`DLQ_REASONS` name) and the tenant it was charged to."""
+    sid: int
+    vals: np.ndarray
+    ts: int
+    reason: str
+    tenant: int
+
+
 STAT_KEYS = (
     "ingested", "ingest_stale", "ingest_coalesced",
     "processed", "discarded_stale", "filtered", "coalesced",
     "emitted", "enqueued", "dropped_overflow", "nonfinite",
     "dropped_revoked", "dropped_spool", "dropped_quota",
+    "replayed",
 )
+
+# Dead-letter drop classes: every ``dropped_*`` stat has a DLQ reason code,
+# so a drained letter names which counter it was charged to.
+DLQ_OVERFLOW, DLQ_REVOKED, DLQ_SPOOL, DLQ_QUOTA = range(4)
+DLQ_REASONS = ("overflow", "revoked", "spool", "quota")
 
 
 def init_state(cfg: EngineConfig) -> EngineState:
@@ -136,6 +165,7 @@ def init_state(cfg: EngineConfig) -> EngineState:
     (timestamps at ``INT_MIN`` = never emitted, empty queue, zero counters
     and token buckets)."""
     N, C, Q, T = cfg.n_streams, cfg.channels, cfg.queue, cfg.n_tenants
+    Rr, D = cfg.retention_slots, cfg.dlq_slots
     return EngineState(
         values=jnp.zeros((N, C), jnp.float32),
         timestamps=jnp.full((N,), INT_MIN, jnp.int32),
@@ -150,7 +180,41 @@ def init_state(cfg: EngineConfig) -> EngineState:
         tenant_queued=jnp.zeros((T,), jnp.int32),
         tenant_dropped_quota=jnp.zeros((T,), jnp.int32),
         tenant_dropped_overflow=jnp.zeros((T,), jnp.int32),
+        ret_vals=jnp.zeros((N, Rr, C), jnp.float32),
+        ret_ts=jnp.zeros((N, Rr), jnp.int32),
+        ret_count=jnp.zeros((N,), jnp.int32),
+        dlq_sid=jnp.zeros((D,), jnp.int32),
+        dlq_vals=jnp.zeros((D, C), jnp.float32),
+        dlq_ts=jnp.zeros((D,), jnp.int32),
+        dlq_reason=jnp.zeros((D,), jnp.int32),
+        dlq_tenant=jnp.zeros((D,), jnp.int32),
+        dlq_fill=jnp.zeros((), jnp.int32),
         stats={k: jnp.zeros((), jnp.int32) for k in STAT_KEYS},
+    )
+
+
+def dlq_append(state: EngineState, sid, vals, ts, tenant, reason: int, mask
+               ) -> EngineState:
+    """Spill the masked dropped SUs into the dead-letter spool: payload +
+    timestamp + charged tenant + drop-class ``reason`` (a ``DLQ_*`` code),
+    appended behind ``dlq_fill``.  The spool saturates — letters beyond
+    ``cfg.dlq_slots`` are lost (the ``dropped_*`` stats still count them) —
+    and with ``dlq_slots == 0`` this is a Python-level no-op, so the DLQ
+    costs nothing when off."""
+    D = state.dlq_sid.shape[0]
+    if D == 0:
+        return state
+    if tenant is None:
+        tenant = jnp.zeros_like(sid)
+    rank = state.dlq_fill + jnp.cumsum(mask.astype(jnp.int32)) - 1
+    dest = jnp.where(mask & (rank < D), rank, D)
+    return state._replace(
+        dlq_sid=state.dlq_sid.at[dest].set(sid, mode="drop"),
+        dlq_vals=state.dlq_vals.at[dest].set(vals, mode="drop"),
+        dlq_ts=state.dlq_ts.at[dest].set(ts, mode="drop"),
+        dlq_reason=state.dlq_reason.at[dest].set(reason, mode="drop"),
+        dlq_tenant=state.dlq_tenant.at[dest].set(tenant, mode="drop"),
+        dlq_fill=jnp.minimum(state.dlq_fill + mask.sum(dtype=jnp.int32), D),
     )
 
 
@@ -216,6 +280,7 @@ def _enqueue(state: EngineState, sid, vals, ts, mask, tenant=None
         new = new._replace(
             tenant_dropped_overflow=new.tenant_dropped_overflow.at[
                 jnp.where(drop_mask, tenant, T)].add(1, mode="drop"))
+    new = dlq_append(new, sid, vals, ts, tenant, DLQ_OVERFLOW, drop_mask)
     return new, drop_mask.sum(dtype=jnp.int32)
 
 
@@ -351,6 +416,8 @@ def ingest_phase(state: EngineState, stats: Dict[str, jnp.ndarray],
             tenant_dropped_quota=state.tenant_dropped_quota.at[
                 jnp.where(shed, t_of, T)].add(1, mode="drop"))
         stats["dropped_quota"] += shed.sum(dtype=jnp.int32)
+        state = dlq_append(state, q_sid, ingest.vals, ingest.ts, t_of,
+                           DLQ_QUOTA, shed)
     i_keep = i_live & (ingest.ts > state.timestamps[row])
     i_win = consistency.resolve_winners(row, ingest.ts, i_keep, n_rows)
     i_dest = jnp.where(i_win, row, n_rows)
@@ -358,8 +425,19 @@ def ingest_phase(state: EngineState, stats: Dict[str, jnp.ndarray],
         values=state.values.at[i_dest].set(ingest.vals, mode="drop"),
         timestamps=state.timestamps.at[i_dest].set(ingest.ts, mode="drop"),
     )
+    Rr = state.ret_ts.shape[-1]     # static: retention ring width
+    if Rr:                          # a source's stored SU is its emission
+        slot = state.ret_count[row] % Rr
+        state = state._replace(
+            ret_vals=state.ret_vals.at[i_dest, slot].set(
+                ingest.vals, mode="drop"),
+            ret_ts=state.ret_ts.at[i_dest, slot].set(
+                ingest.ts, mode="drop"),
+            ret_count=state.ret_count.at[i_dest].add(1, mode="drop"))
     stats["ingested"] += ingest.valid.sum(dtype=jnp.int32)
     stats["dropped_revoked"] += (ingest.valid & ~active).sum(dtype=jnp.int32)
+    state = dlq_append(state, q_sid, ingest.vals, ingest.ts, tenant_of_row,
+                       DLQ_REVOKED, ingest.valid & ~active)
     stats["ingest_stale"] += (i_live & ~i_keep).sum(dtype=jnp.int32)
     stats["ingest_coalesced"] += (i_keep & ~i_win).sum(dtype=jnp.int32)
     state, dropped = _enqueue(state, q_sid, ingest.vals, ingest.ts, i_win,
@@ -392,6 +470,18 @@ def store_and_emit(cfg: EngineConfig, tables: DeviceTables,
             jnp.where(win, tables.tenant[rows], cfg.n_tenants)
         ].add(1, mode="drop"),
     )
+
+    # per-stream retention ring: each winner also lands in its row's ring
+    # at cursor `ret_count % Rr` (at most one winner per row per round, so
+    # the scatter indices are unique).  Off (Rr == 0) costs nothing.
+    Rr = cfg.retention_slots
+    if Rr:
+        slot = state.ret_count[rows] % Rr
+        state = state._replace(
+            ret_vals=state.ret_vals.at[dest, slot].set(new_vals, mode="drop"),
+            ret_ts=state.ret_ts.at[dest, slot].set(ts_out, mode="drop"),
+            ret_count=state.ret_count.at[dest].add(1, mode="drop"),
+        )
 
     # re-dispatch winners that themselves have subscribers (queue drops
     # charged to the emitting stream's owner tenant)
@@ -559,6 +649,9 @@ def make_step(
         e_act = tables.active[jnp.clip(e_sid, 0, N - 1)]
         e_valid = e_pop & e_act
         stats["dropped_revoked"] += (e_pop & ~e_act).sum(dtype=jnp.int32)
+        state = dlq_append(state, e_sid, e_vals, e_ts,
+                           tables.tenant[jnp.clip(e_sid, 0, N - 1)],
+                           DLQ_REVOKED, e_pop & ~e_act)
 
         # ---- stage 1: subscriber dispatching ----------------------------
         # The engine applies the stale check in process_work_items'
@@ -704,38 +797,48 @@ def ring_grid(ring: IngestRing, K: int, B: int, C: int) -> IngestBatch:
 def spool_append(spool: SinkSpool, sink: SinkBatch, k
                  ) -> Tuple[SinkSpool, jnp.ndarray]:
     """Append one round's valid sink entries behind the fill cursor;
-    returns the spool and the overflow count (-> ``dropped_spool``)."""
+    returns the spool and the per-entry overflow mask (its sum feeds
+    ``dropped_spool``; the mask itself feeds the dead-letter spool)."""
     P = spool.sid.shape[0]
     add = sink.valid
     rank = spool.fill + jnp.cumsum(add.astype(jnp.int32)) - 1
     dest = jnp.where(add & (rank < P), rank, P)
-    dropped = (add & (rank >= P)).sum(dtype=jnp.int32)
+    over = add & (rank >= P)
     return SinkSpool(
         sid=spool.sid.at[dest].set(sink.sid, mode="drop"),
         vals=spool.vals.at[dest].set(sink.vals, mode="drop"),
         ts=spool.ts.at[dest].set(sink.ts, mode="drop"),
         rnd=spool.rnd.at[dest].set(k, mode="drop"),
         fill=jnp.minimum(spool.fill + add.sum(dtype=jnp.int32), P),
-    ), dropped
+    ), over
 
 
 def scan_rounds(round_fn: Callable, state: EngineState, ring: IngestRing,
-                K: int, B: int, C: int, P: int
+                K: int, B: int, C: int, P: int,
+                tenant_by_sid: Optional[jnp.ndarray] = None,
                 ) -> Tuple[EngineState, SinkSpool, IngestRing]:
     """The superstep harness shared by the single-device and sharded
     planes: materialize the (K, B) grid from the ring, ``lax.scan`` the
     round body over it spooling each round's sink, and invalidate the
-    consumed ring slots.  ``round_fn(state, ingest) -> (state, sink)``."""
+    consumed ring slots.  ``round_fn(state, ingest) -> (state, sink)``.
+    ``tenant_by_sid`` (indexed by sink sids) attributes spool-overflow
+    dead letters to their emitting tenant."""
     grid = ring_grid(ring, K, B, C)
 
     def body(carry, xs):
         st, sp = carry
         k, ingest = xs
         st, sink = round_fn(st, ingest)
-        sp, n_drop = spool_append(sp, sink, k)
+        sp, over = spool_append(sp, sink, k)
         stats = dict(st.stats)
-        stats["dropped_spool"] = stats["dropped_spool"] + n_drop
-        return (st._replace(stats=stats), sp), None
+        stats["dropped_spool"] = stats["dropped_spool"] + \
+            over.sum(dtype=jnp.int32)
+        st = st._replace(stats=stats)
+        s_ten = None if tenant_by_sid is None else tenant_by_sid[
+            jnp.clip(sink.sid, 0, tenant_by_sid.shape[0] - 1)]
+        st = dlq_append(st, sink.sid, sink.vals, sink.ts, s_ten,
+                        DLQ_SPOOL, over)
+        return (st, sp), None
 
     (state, spool), _ = jax.lax.scan(
         body, (state, _init_spool(P, C)),
@@ -767,7 +870,7 @@ def make_superstep(
     def superstep(tables: DeviceTables, state: EngineState, ring: IngestRing
                   ) -> Tuple[EngineState, SinkSpool, IngestRing]:
         return scan_rounds(lambda st, ing: step(tables, st, ing),
-                           state, ring, K, B, C, P)
+                           state, ring, K, B, C, P, tables.tenant)
 
     if not jit:
         return superstep
@@ -800,6 +903,9 @@ class StreamEngine:
         self._ring: Optional[IngestRing] = None
         self._ring_K = 0
         self._ring_free: List[int] = []
+        # durability plane: snapshot cadence (see checkpoint_to)
+        self._ckpt = None
+        self._steps_done = 0
 
     # -------------------------------------------------------------- ingest
     def post(self, stream, values: Sequence[float], ts: int) -> None:
@@ -853,6 +959,7 @@ class StreamEngine:
         """Run one four-stage engine round: ship the pending ingest batch,
         dispatch the compiled step, return the round's external sink."""
         self.state, sink = self._step(self.tables, self.state, self._take_ingest())
+        self._maybe_checkpoint()
         return sink
 
     def drain(self, max_rounds: int = 256) -> List[SinkBatch]:
@@ -964,7 +1071,9 @@ class StreamEngine:
         feed it to the serving bridge's ``pump_spool``)."""
         K = K or self.cfg.superstep
         self._stage(K)
-        return self._run_superstep(K)
+        spool = self._run_superstep(K)
+        self._maybe_checkpoint()
+        return spool
 
     def _run_superstep(self, K: int) -> SinkSpool:
         """Hook: the sharded engine threads its gmap through here."""
@@ -1090,9 +1199,17 @@ class StreamEngine:
         self._released_sid(sid)
         self._sync_admitted()
 
-    def admit_subscription(self, stream, new_input) -> bool:
+    def admit_subscription(self, stream, new_input, *,
+                           replay: bool = False) -> bool:
         """Add a subscription edge to a running composite.  Returns False
-        (counted) when in/out-degree capacity is exhausted."""
+        (counted) when in/out-degree capacity is exhausted.  With
+        ``replay=True`` (and ``cfg.retention_slots > 0``), ``new_input``'s
+        retained emissions are re-enqueued oldest-first *before* live data,
+        so the late joiner catches up on history — at-least-once: existing
+        subscribers see the replayed SUs too but discard them as stale
+        (Listing-2 ``keep_mask``), while the joiner (never-emitted, ts at
+        ``INT_MIN``) processes all of them.  Replay is a jitted requeue
+        table edit — zero retraces under churn."""
         try:
             self.registry.subscribe(stream, new_input)
         except CapacityError:
@@ -1100,6 +1217,8 @@ class StreamEngine:
             return False
         self._admit_edge(stream.sid, new_input.sid)
         self._sync_admitted()
+        if replay:
+            self._replay_retained(new_input)
         return True
 
     def revoke_subscription(self, stream, old_input) -> None:
@@ -1219,6 +1338,185 @@ class StreamEngine:
             out[key] = a.sum(axis=0) if a.ndim == 2 else a
         return out
 
+    # ------------------------------------------------- durability & replay
+    def snapshot(self) -> Tuple[Dict[str, np.ndarray], dict]:
+        """Capture the full engine as ``(arrays, meta)``: device tables,
+        engine state (stats included), and the host-side pending backlog,
+        plus a JSON-able ``meta`` holding the registry mirror and host
+        counters.  The ingest ring is deliberately *not* captured — every
+        unconsumed SU payload is retained host-side in the pending list
+        (the ring is a device cache of it), so restore re-stages from the
+        backlog alone and the continuation is bit-identical.  Feed the pair
+        to :func:`restore_engine` (directly, or through a checkpoint)."""
+        arrays: Dict[str, np.ndarray] = {}
+        for f in DeviceTables._fields:
+            arrays[f"tables/{f}"] = np.asarray(getattr(self.tables, f))
+        for f in EngineState._fields:
+            if f != "stats":
+                arrays[f"state/{f}"] = np.asarray(getattr(self.state, f))
+        for k in STAT_KEYS:
+            arrays[f"state/stats/{k}"] = np.asarray(self.state.stats[k])
+        C = self.cfg.channels
+        arrays["pending/sid"] = np.array(
+            [e[0] for e in self._pending], np.int32)
+        arrays["pending/vals"] = (
+            np.stack([e[1] for e in self._pending]).astype(np.float32)
+            if self._pending else np.zeros((0, C), np.float32))
+        arrays["pending/ts"] = np.array(
+            [e[2] for e in self._pending], np.int32)
+        meta = {"format": 1, "kind": "single",
+                "registry": self.registry.to_snapshot(),
+                "admission_rejected": self.admission_rejected,
+                "steps_done": self._steps_done}
+        return arrays, meta
+
+    def _install_snapshot(self, arrays: Dict[str, np.ndarray],
+                          meta: dict) -> None:
+        """Overwrite this (freshly built) engine with a snapshot's tables,
+        state and backlog — the restore half of :meth:`snapshot`."""
+        self.tables = DeviceTables(**{
+            f: jnp.asarray(arrays[f"tables/{f}"])
+            for f in DeviceTables._fields})
+        st = {f: jnp.asarray(arrays[f"state/{f}"])
+              for f in EngineState._fields if f != "stats"}
+        st["stats"] = {k: jnp.asarray(arrays[f"state/stats/{k}"])
+                       for k in STAT_KEYS}
+        self.state = EngineState(**st)
+        p_sid, p_vals, p_ts = (arrays["pending/sid"], arrays["pending/vals"],
+                               arrays["pending/ts"])
+        # ring slots are process-local; restored SUs re-stage from here
+        self._pending = [[int(p_sid[i]), np.array(p_vals[i], np.float32),
+                          int(p_ts[i]), None] for i in range(p_sid.shape[0])]
+        self.admission_rejected = int(meta.get("admission_rejected", 0))
+        self._steps_done = int(meta.get("steps_done", 0))
+        self._ring, self._ring_K, self._ring_free = None, 0, []
+        self._sync_admitted()
+
+    def checkpoint_to(self, path: Optional[str], keep: int = 3):
+        """Attach a :class:`~repro.checkpoint.ckpt.CheckpointManager` at
+        ``path``: every ``cfg.checkpoint_every``-th superstep boundary
+        (rounds count as supersteps of one) snapshots the engine and writes
+        it asynchronously, keeping the newest ``keep`` checkpoints.
+        Returns the manager (use its ``wait()`` before reading the
+        directory; recover with :func:`restore_engine`).  ``path=None``
+        detaches the manager after awaiting any in-flight write."""
+        from repro.checkpoint.ckpt import CheckpointManager
+        if path is None:
+            if self._ckpt is not None:
+                self._ckpt.wait()
+            self._ckpt = None
+            return None
+        self._ckpt = CheckpointManager(path, keep=keep)
+        return self._ckpt
+
+    def _maybe_checkpoint(self) -> None:
+        """Superstep-boundary hook: count the boundary and, when the
+        cadence lands and a manager is attached, snapshot + async-save."""
+        self._steps_done += 1
+        every = self.cfg.checkpoint_every
+        if self._ckpt is not None and every > 0 \
+                and self._steps_done % every == 0:
+            arrays, meta = self.snapshot()
+            self._ckpt.save_async(self._steps_done, arrays, extra=meta)
+
+    def dead_letters(self, clear: bool = True) -> List[DeadLetter]:
+        """Drain the device dead-letter spool: every SU dropped into a
+        ``dropped_*`` counter since the last drain (up to ``cfg.dlq_slots``
+        per drain interval), as host :class:`DeadLetter` records in drop
+        order (shard-major on the sharded engine).  ``clear`` resets the
+        spool cursor so subsequent drops refill from the top."""
+        sid = np.asarray(self.state.dlq_sid)
+        if sid.shape[-1] == 0:
+            return []
+        vals = np.asarray(self.state.dlq_vals)
+        ts = np.asarray(self.state.dlq_ts)
+        reason = np.asarray(self.state.dlq_reason)
+        tenant = np.asarray(self.state.dlq_tenant)
+        fill = np.atleast_1d(np.asarray(self.state.dlq_fill))
+        if sid.ndim == 1:
+            sid, vals, ts = sid[None], vals[None], ts[None]
+            reason, tenant = reason[None], tenant[None]
+        letters = [
+            DeadLetter(int(sid[s, i]), np.array(vals[s, i]), int(ts[s, i]),
+                       DLQ_REASONS[int(reason[s, i])], int(tenant[s, i]))
+            for s in range(sid.shape[0]) for i in range(int(fill[s]))]
+        if clear and letters:
+            from repro.core import admission
+            self.state = admission.clear_dead_letters(self.state)
+            self._sync_admitted()
+        return letters
+
+    def redeliver(self, letters: Optional[List[DeadLetter]] = None) -> int:
+        """Resubmit dead letters (default: drain-and-clear the spool now).
+        Quota-shed SUs were rejected *before* phase 0 stored them, so they
+        re-enter through normal ingest (store + fanout + admission — a
+        still-exhausted quota sheds them again); every other class was
+        already stored when it dropped, so it re-enqueues through the
+        jitted requeue edit, bypassing the phase-0 stale gate so
+        historical timestamps survive.  Letters whose stream is no longer
+        registered are skipped; re-enqueues that overflow the queue drop
+        (and dead-letter) again.  Returns the number submitted."""
+        if letters is None:
+            letters = self.dead_letters(clear=True)
+        live = [lt for lt in letters
+                if 0 <= lt.sid < len(self.registry.streams)
+                and self.registry.streams[lt.sid] is not None]
+        for lt in live:
+            if lt.reason == "quota":
+                self.post(lt.sid, lt.vals, lt.ts)
+        self._requeue_batch([(lt.sid, lt.vals, lt.ts, lt.tenant)
+                             for lt in live if lt.reason != "quota"])
+        return len(live)
+
+    def _replay_retained(self, src) -> int:
+        """Re-enqueue ``src``'s retained emissions oldest-first — the
+        replay half of ``admit_subscription(..., replay=True)``."""
+        Rr = self.cfg.retention_slots
+        sid = src.sid if hasattr(src, "sid") else int(src)
+        if Rr == 0:
+            return 0
+        row = self._table_row(sid)
+        count = int(self.state.ret_count[row])
+        if count == 0:
+            return 0
+        vals = np.asarray(self.state.ret_vals[row])
+        ts = np.asarray(self.state.ret_ts[row])
+        tenant = self.registry.stream_of(sid).tenant
+        n = min(count, Rr)
+        items = [(sid, vals[(count - n + i) % Rr],
+                  int(ts[(count - n + i) % Rr]), tenant) for i in range(n)]
+        return self._requeue_batch(items)
+
+    def _requeue_batch(self, items: List[Tuple]) -> int:
+        """Ship ``(sid, vals, ts, tenant)`` items into the queue through
+        the requeue table edit, chunked to one static pad width so churn
+        never retraces."""
+        if not items:
+            return 0
+        W = max(self.cfg.retention_slots, self.cfg.dlq_slots, 1)
+        C = self.cfg.channels
+        for ofs in range(0, len(items), W):
+            chunk = items[ofs:ofs + W]
+            sid = np.zeros((W,), np.int32)
+            vals = np.zeros((W, C), np.float32)
+            ts = np.zeros((W,), np.int32)
+            valid = np.zeros((W,), bool)
+            tenant = np.zeros((W,), np.int32)
+            for i, (s, v, t, tn) in enumerate(chunk):
+                sid[i], vals[i], ts[i] = s, v, t
+                valid[i], tenant[i] = True, tn
+            self._apply_requeue(sid, vals, ts, valid, tenant)
+        return len(items)
+
+    def _apply_requeue(self, sid, vals, ts, valid, tenant) -> None:
+        """Hook: one padded requeue edit (the sharded engine routes each
+        item to its owner shard here)."""
+        from repro.core import admission
+        self.state = admission.requeue(
+            self.state, jnp.asarray(sid), jnp.asarray(vals),
+            jnp.asarray(ts), jnp.asarray(valid), jnp.asarray(tenant))
+        self._sync_admitted()
+
     # ------------------------------------------------------------- readback
     def value_of(self, stream) -> np.ndarray:
         """Last stored value of ``stream`` — a host ``(channels,)`` f32
@@ -1249,3 +1547,45 @@ def create_engine(registry: Registry, *, mesh=None, **kw):
         raise ValueError("mesh given but cfg.n_shards == 1; set "
                          "EngineConfig.n_shards to shard the stream plane")
     return StreamEngine(registry, **kw)
+
+
+def restore_engine(source, *, step: Optional[int] = None, mesh=None,
+                   fanout_fn: Callable = fanout_reference):
+    """Rebuild a running engine from a snapshot — the recovery half of
+    ``StreamEngine.snapshot()``.
+
+    ``source`` is a checkpoint directory path, a
+    :class:`~repro.checkpoint.ckpt.CheckpointManager`, or an in-memory
+    ``(arrays, meta)`` pair.  The registry mirror in ``meta`` rebuilds the
+    host control plane (including the exact :class:`EngineConfig`), the
+    engine class is chosen by the snapshot's kind (single vs sharded), and
+    tables/state/backlog are installed verbatim — the continuation is
+    bit-identical to the uninterrupted run.  Returns ``None`` when no
+    checkpoint exists yet (``step=None`` picks the newest)."""
+    if isinstance(source, tuple):
+        arrays, meta = source
+    else:
+        from repro.checkpoint import ckpt as _ckpt
+        if isinstance(source, _ckpt.CheckpointManager):
+            if step is None:
+                step, arrays, meta = source.load_latest()
+                if step is None:
+                    return None
+            else:
+                source.wait()
+                arrays, meta = _ckpt.load(source.path, step)
+        else:
+            path = os.fspath(source)
+            if step is None:
+                step = _ckpt.latest_step(path)
+                if step is None:
+                    return None
+            arrays, meta = _ckpt.load(path, step)
+    registry = Registry.from_snapshot(meta["registry"])
+    if meta.get("kind") == "sharded":
+        from repro.distributed.stream_sharding import ShardedStreamEngine
+        eng = ShardedStreamEngine(registry, mesh=mesh, fanout_fn=fanout_fn)
+    else:
+        eng = StreamEngine(registry, fanout_fn=fanout_fn)
+    eng._install_snapshot(arrays, meta)
+    return eng

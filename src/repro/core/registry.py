@@ -65,6 +65,10 @@ class Stream:
     channels: List[str]                      # channel names, len <= cfg.channels
     composite: bool = False
     inputs: List[int] = dataclasses.field(default_factory=list)
+    # slot -> [name, channels] of a revoked input (slot kept as -1 so the
+    # remaining `in<i>` bindings — and stale expressions — stay stable,
+    # mirroring the device tables, which null edges in place):
+    dead_inputs: Dict[str, List] = dataclasses.field(default_factory=dict)
     # user code (expression strings), per output channel:
     transform: Dict[str, str] = dataclasses.field(default_factory=dict)
     pre_filter: Optional[str] = None
@@ -229,7 +233,8 @@ class Registry:
             raise ValueError("can only subscribe composite streams")
         self._check_live(stream)
         self._check_live(new_input)
-        if len(stream.inputs) >= self.cfg.max_in:
+        free = [i for i, x in enumerate(stream.inputs) if x < 0]
+        if not free and len(stream.inputs) >= self.cfg.max_in:
             raise CapacityError("in-degree capacity reached")
         subs = sum(1 for t in self.streams
                    if t is not None and t.composite and new_input.sid in t.inputs)
@@ -237,7 +242,11 @@ class Registry:
             raise CapacityError(
                 f"out-degree of {new_input.name} exceeds max_out "
                 f"{self.cfg.max_out}")
-        stream.inputs.append(new_input.sid)
+        if free:            # device writes into the first -1 slot: mirror it
+            stream.inputs[free[0]] = new_input.sid
+            stream.dead_inputs.pop(str(free[0]), None)
+        else:
+            stream.inputs.append(new_input.sid)
 
     def unsubscribe(self, stream: Stream, old_input: Stream) -> None:
         """Remove one subscription edge (the host mirror of
@@ -245,7 +254,10 @@ class Registry:
         if old_input.sid not in stream.inputs:
             raise ValueError(
                 f"{stream.name} does not subscribe to {old_input.name}")
-        stream.inputs.remove(old_input.sid)
+        i = stream.inputs.index(old_input.sid)   # first occurrence, as device
+        stream.inputs[i] = -1
+        stream.dead_inputs[str(i)] = [old_input.name,
+                                      list(old_input.channels)]
 
     def remove_stream(self, stream) -> None:
         """Release a stream's sid: every subscription edge referencing it is
@@ -253,11 +265,15 @@ class Registry:
         sid is recycled by the next admission.  Host mirror of
         :func:`repro.core.admission.revoke_stream`."""
         sid = stream.sid if hasattr(stream, "sid") else int(stream)
-        if self.streams[sid] is None:
+        src = self.streams[sid]
+        if src is None:
             raise ValueError(f"sid {sid} already revoked")
         for t in self.streams:
             if t is not None and t.composite and sid in t.inputs:
-                t.inputs = [i for i in t.inputs if i != sid]
+                for j, i in enumerate(t.inputs):  # null in place, as device
+                    if i == sid:
+                        t.inputs[j] = -1
+                        t.dead_inputs[str(j)] = [src.name, list(src.channels)]
         self.streams[sid] = None
         bisect.insort(self._free_sids, sid)
 
@@ -272,13 +288,19 @@ class Registry:
         cfg = self.cfg
         env: Dict[str, int] = {"ts": cfg.reg_ts, "trigger": cfg.reg_trigger}
         for i, sid in enumerate(s.inputs):
-            src = self.streams[sid]
-            for c, ch in enumerate(src.channels):
+            if sid >= 0:
+                src = self.streams[sid]
+                name, channels = src.name, src.channels
+            elif str(i) in s.dead_inputs:   # tombstone: revoked input — the
+                name, channels = s.dead_inputs[str(i)]  # slot's stale
+            else:                           # expressions must still compile
+                continue
+            for c, ch in enumerate(channels):
                 reg = cfg.reg_inputs + i * cfg.channels + c
                 env[f"in{i}.{ch}"] = reg
-                env.setdefault(f"{src.name}.{ch}", reg)
+                env.setdefault(f"{name}.{ch}", reg)
             env[f"in{i}"] = cfg.reg_inputs + i * cfg.channels  # 1-channel shorthand
-            env.setdefault(src.name, cfg.reg_inputs + i * cfg.channels)
+            env.setdefault(name, cfg.reg_inputs + i * cfg.channels)
         for c, ch in enumerate(s.channels):
             env[f"prev.{ch}"] = cfg.reg_prev + c
             env[f"out.{ch}"] = cfg.reg_result + c
@@ -353,9 +375,11 @@ class Registry:
             model_backed[s.sid] = s.model_backed
             if s.composite:
                 is_comp[s.sid] = True
-                in_count[s.sid] = len(s.inputs)
-                in_table[s.sid, : len(s.inputs)] = s.inputs
+                in_count[s.sid] = sum(1 for i in s.inputs if i >= 0)
+                in_table[s.sid, : len(s.inputs)] = s.inputs  # -1 == pad
                 for src in s.inputs:
+                    if src < 0:             # tombstoned (revoked) slot
+                        continue
                     if s.sid not in out_lists[src]:
                         out_lists[src].append(s.sid)
                 progs[s.sid], consts[s.sid] = self._compile_stream(s)
@@ -381,6 +405,31 @@ class Registry:
             quota=np.zeros((T,), np.int32),
             burst=np.zeros((T,), np.int32),
         )
+
+    # ---------------------------------------------------------- durability
+    def to_snapshot(self) -> Dict:
+        """JSON-able mirror of the whole control plane — config, tenants,
+        streams (holes included) and the recycled-sid pool — the host half
+        of an engine checkpoint.  :meth:`from_snapshot` reverses it
+        exactly, so a restored engine recompiles identical bytecode and
+        recycles sids in the same order."""
+        return {
+            "cfg": dataclasses.asdict(self.cfg),
+            "tenants": [dataclasses.asdict(t) for t in self.tenants],
+            "streams": [None if s is None else dataclasses.asdict(s)
+                        for s in self.streams],
+            "free_sids": list(self._free_sids),
+        }
+
+    @classmethod
+    def from_snapshot(cls, snap: Dict) -> "Registry":
+        """Rebuild the registry captured by :meth:`to_snapshot`."""
+        reg = cls(EngineConfig(**snap["cfg"]))
+        reg.tenants = [Tenant(**t) for t in snap["tenants"]]
+        reg.streams = [None if s is None else Stream(**s)
+                       for s in snap["streams"]]
+        reg._free_sids = list(snap["free_sids"])
+        return reg
 
     def build_sharded_tables(
         self, priority: Optional[np.ndarray] = None,

@@ -63,9 +63,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import admission
 from repro.core.config import EngineConfig
-from repro.core.engine import (INT_MIN, STAT_KEYS, DeviceTables, EngineState,
-                               IngestBatch, IngestRing, SinkBatch, SinkSpool,
-                               StreamEngine, _pop, _stage_ring,
+from repro.core.engine import (DLQ_OVERFLOW, DLQ_REVOKED, INT_MIN, STAT_KEYS,
+                               DeviceTables, EngineState, IngestBatch,
+                               IngestRing, SinkBatch, SinkSpool, StreamEngine,
+                               _pop, _stage_ring, dlq_append,
                                fanout_reference, ingest_phase,
                                process_work_items, scan_rounds,
                                store_and_emit, tenant_occupancy)
@@ -214,6 +215,7 @@ def sharded_init_state(cfg: EngineConfig, plan: ShardPlan) -> EngineState:
     """Per-shard EngineState slices stacked on a leading shard axis."""
     S, L, C, Q = plan.n_shards, plan.n_local, cfg.channels, cfg.queue
     T = cfg.n_tenants
+    Rr, D = cfg.retention_slots, cfg.dlq_slots
     return EngineState(
         values=jnp.zeros((S, L, C), jnp.float32),
         timestamps=jnp.full((S, L), INT_MIN, jnp.int32),
@@ -228,6 +230,15 @@ def sharded_init_state(cfg: EngineConfig, plan: ShardPlan) -> EngineState:
         tenant_queued=jnp.zeros((S, T), jnp.int32),
         tenant_dropped_quota=jnp.zeros((S, T), jnp.int32),
         tenant_dropped_overflow=jnp.zeros((S, T), jnp.int32),
+        ret_vals=jnp.zeros((S, L, Rr, C), jnp.float32),
+        ret_ts=jnp.zeros((S, L, Rr), jnp.int32),
+        ret_count=jnp.zeros((S, L), jnp.int32),
+        dlq_sid=jnp.zeros((S, D), jnp.int32),
+        dlq_vals=jnp.zeros((S, D, C), jnp.float32),
+        dlq_ts=jnp.zeros((S, D), jnp.int32),
+        dlq_reason=jnp.zeros((S, D), jnp.int32),
+        dlq_tenant=jnp.zeros((S, D), jnp.int32),
+        dlq_fill=jnp.zeros((S,), jnp.int32),
         stats={k: jnp.zeros((S,), jnp.int32) for k in STAT_KEYS},
     )
 
@@ -288,6 +299,9 @@ def make_shard_round(
         e_act = tables.active[e_loc]
         e_valid = e_pop & e_act
         stats["dropped_revoked"] += (e_pop & ~e_act).sum(dtype=jnp.int32)
+        state = dlq_append(state, e_sid, e_vals, e_ts,
+                           tenant_by_sid[jnp.clip(e_sid, 0, N - 1)],
+                           DLQ_REVOKED, e_pop & ~e_act)
 
         # ---- post-ingest snapshot: the lock-free global view ------------
         vals_all = jax.lax.all_gather(state.values, AXIS)
@@ -340,6 +354,8 @@ def make_shard_round(
             tenant_dropped_overflow=state.tenant_dropped_overflow.at[
                 jnp.where(x_drop, tenant_by_sid[src_safe], Tn)
             ].add(1, mode="drop"))
+        state = dlq_append(state, wi_src, wi_vals, wi_ts,
+                           tenant_by_sid[src_safe], DLQ_OVERFLOW, x_drop)
 
         ri = jax.lax.all_to_all(xi, AXIS, split_axis=0, concat_axis=0)
         rf = jax.lax.all_to_all(xf, AXIS, split_axis=0, concat_axis=0)
@@ -428,9 +444,11 @@ def make_sharded_superstep(
         tables = jax.tree.map(lambda x: x[0], tables)
         state = jax.tree.map(lambda x: x[0], state)
         ring = jax.tree.map(lambda x: x[0], ring)
+        tenant_by_sid = tables.tenant[
+            jnp.clip(gmap.sid_to_local, 0, plan.n_local - 1)]
         state, spool, ring = scan_rounds(
             lambda st, ing: shard_round(tables, gmap, st, ing),
-            state, ring, K, B, C, P_spool)
+            state, ring, K, B, C, P_spool, tenant_by_sid)
         return (jax.tree.map(lambda x: x[None], state),
                 jax.tree.map(lambda x: x[None], spool),
                 jax.tree.map(lambda x: x[None], ring))
@@ -493,6 +511,8 @@ class ShardedStreamEngine(StreamEngine):
         self._ring_K = 0
         self._ring_free: List[List[int]] = []
         self._ring_dirty = False    # placement changed: re-stage everything
+        self._ckpt = None
+        self._steps_done = 0
         self._init_slots()
 
     def _init_slots(self) -> None:
@@ -545,6 +565,7 @@ class ShardedStreamEngine(StreamEngine):
     def round(self) -> SinkBatch:
         self.state, sink = self._step(self.tables, self.gmap, self.state,
                                       self._take_ingest())
+        self._maybe_checkpoint()
         return SinkBatch(*(x.reshape((-1,) + x.shape[2:]) for x in sink))
 
     # ----------------------------------------------------------- supersteps
@@ -813,15 +834,29 @@ class ShardedStreamEngine(StreamEngine):
                     "rewire() changed stream placement while SUs are in "
                     "flight; drain() before rewiring")
             S, L, C = new_plan.n_shards, new_plan.n_local, self.cfg.channels
+            Rr = self.cfg.retention_slots
             v = np.zeros((S * L, C), np.float32)
             ts = np.full((S * L,), INT_MIN, np.int32)
+            rv = np.zeros((S * L, Rr, C), np.float32)
+            rt = np.zeros((S * L, Rr), np.int32)
+            rc = np.zeros((S * L,), np.int32)
             v[new_plan.sid_to_flat] = np.asarray(
                 self.state.values).reshape(-1, C)[old.sid_to_flat]
             ts[new_plan.sid_to_flat] = np.asarray(
                 self.state.timestamps).reshape(-1)[old.sid_to_flat]
+            F_old = old.n_shards * old.n_local  # explicit: -1 fails at Rr=0
+            rv[new_plan.sid_to_flat] = np.asarray(
+                self.state.ret_vals).reshape(F_old, Rr, C)[old.sid_to_flat]
+            rt[new_plan.sid_to_flat] = np.asarray(
+                self.state.ret_ts).reshape(F_old, Rr)[old.sid_to_flat]
+            rc[new_plan.sid_to_flat] = np.asarray(
+                self.state.ret_count).reshape(-1)[old.sid_to_flat]
             self.state = jax.device_put(self.state._replace(
                 values=jnp.asarray(v.reshape(S, L, C)),
-                timestamps=jnp.asarray(ts.reshape(S, L))), self._shard)
+                timestamps=jnp.asarray(ts.reshape(S, L)),
+                ret_vals=jnp.asarray(rv.reshape(S, L, Rr, C)),
+                ret_ts=jnp.asarray(rt.reshape(S, L, Rr)),
+                ret_count=jnp.asarray(rc.reshape(S, L))), self._shard)
             if L != old.n_local:    # step closures are shaped by n_local
                 self._step = make_sharded_step(self.cfg, new_plan, self.mesh,
                                                self._fanout_fn)
@@ -850,3 +885,58 @@ class ShardedStreamEngine(StreamEngine):
 
     def counters(self):
         return {k: int(v.sum()) for k, v in self.state.stats.items()}
+
+    # ------------------------------------------------- durability & replay
+    def snapshot(self):
+        """Sharded :meth:`StreamEngine.snapshot`: the base capture (state
+        leaves carry their leading shard axis) plus the replicated lookup
+        maps and the host placement plan, under ``kind="sharded"``."""
+        arrays, meta = StreamEngine.snapshot(self)
+        for f in GlobalMaps._fields:
+            arrays[f"gmap/{f}"] = np.asarray(getattr(self.gmap, f))
+        p = self.plan
+        arrays["plan/sid_to_shard"] = p.sid_to_shard.copy()
+        arrays["plan/sid_to_local"] = p.sid_to_local.copy()
+        arrays["plan/sid_to_flat"] = p.sid_to_flat.copy()
+        arrays["plan/local_to_sid"] = p.local_to_sid.copy()
+        meta["kind"] = "sharded"
+        return arrays, meta
+
+    def _install_snapshot(self, arrays, meta) -> None:
+        """Restore half of the sharded :meth:`snapshot`: rebuild the host
+        placement plan first (the step program is shaped by ``n_local``),
+        then install maps/tables/state/backlog re-pinned to their mesh
+        shardings, and rebuild the slot bookkeeping from the restored
+        registry."""
+        local_to_sid = np.array(arrays["plan/local_to_sid"], np.int32)
+        plan = ShardPlan(
+            n_shards=self.plan.n_shards,
+            n_local=int(local_to_sid.shape[1]),
+            sid_to_shard=np.array(arrays["plan/sid_to_shard"], np.int32),
+            sid_to_local=np.array(arrays["plan/sid_to_local"], np.int32),
+            sid_to_flat=np.array(arrays["plan/sid_to_flat"], np.int32),
+            local_to_sid=local_to_sid)
+        if plan.n_local != self.plan.n_local:
+            self._step = make_sharded_step(self.cfg, plan, self.mesh,
+                                           self._fanout_fn)
+            self._superstep_fns = {}
+        self.plan = plan
+        self.gmap = GlobalMaps(**{
+            f: jnp.asarray(arrays[f"gmap/{f}"])
+            for f in GlobalMaps._fields})
+        StreamEngine._install_snapshot(self, arrays, meta)
+        self._ring_dirty = True
+        self._init_slots()
+
+    def _apply_requeue(self, sid, vals, ts, valid, tenant) -> None:
+        """Route each padded requeue item to its owner shard, then apply
+        one :func:`admission.requeue_shard` edit per shard touched (the
+        shard index is traced, so churn stays at one trace total)."""
+        owner = self.plan.sid_to_shard[
+            np.clip(sid, 0, self.cfg.n_streams - 1)]
+        for s in sorted(set(owner[valid].tolist())):
+            self.state = admission.requeue_shard(
+                self.state, jnp.int32(s), jnp.asarray(sid),
+                jnp.asarray(vals), jnp.asarray(ts),
+                jnp.asarray(valid & (owner == s)), jnp.asarray(tenant))
+        self._sync_admitted()

@@ -346,6 +346,7 @@ def _lower_engine(mesh, mode: str = "sharded",
         f: (rep if f in _per_tenant else row)
         for f in eng.DeviceTables._fields})
 
+    Rr, D = ecfg.retention_slots, ecfg.dlq_slots
     state_abs = eng.EngineState(
         values=sds((N, C), f32), timestamps=sds((N,), i32),
         q_sid=sds((Q,), i32), q_vals=sds((Q, C), f32), q_ts=sds((Q,), i32),
@@ -353,12 +354,20 @@ def _lower_engine(mesh, mode: str = "sharded",
         tenant_emitted=sds((T,), i32), tokens=sds((T,), i32),
         tenant_queued=sds((T,), i32), tenant_dropped_quota=sds((T,), i32),
         tenant_dropped_overflow=sds((T,), i32),
+        ret_vals=sds((N, Rr, C), f32), ret_ts=sds((N, Rr), i32),
+        ret_count=sds((N,), i32),
+        dlq_sid=sds((D,), i32), dlq_vals=sds((D, C), f32),
+        dlq_ts=sds((D,), i32), dlq_reason=sds((D,), i32),
+        dlq_tenant=sds((D,), i32), dlq_fill=sds((), i32),
         stats={k: sds((), i32) for k in eng.STAT_KEYS})
     state_sh = eng.EngineState(
         values=row, timestamps=row, q_sid=rep, q_vals=rep, q_ts=rep,
         q_seq=rep, q_valid=rep, seq=rep, tenant_emitted=rep, tokens=rep,
         tenant_queued=rep, tenant_dropped_quota=rep,
         tenant_dropped_overflow=rep,
+        ret_vals=row, ret_ts=row, ret_count=row,
+        dlq_sid=rep, dlq_vals=rep, dlq_ts=rep, dlq_reason=rep,
+        dlq_tenant=rep, dlq_fill=rep,
         stats={k: rep for k in eng.STAT_KEYS})
 
     ingest_abs = eng.IngestBatch(sid=sds((B,), i32), vals=sds((B, C), f32),

@@ -209,6 +209,46 @@ class ModelBackedStreams:
         self.drain(ts=ts)
         return n
 
+    # ------------------------------------------------- durability & replay
+    def snapshot(self) -> Dict:
+        """JSON-able bridge control state for the durability plane: the
+        route table, the request-id cursor and the backpressure-deferred
+        emissions.  In-flight batcher requests are deliberately *not*
+        captured — the bridge is at-most-once across a crash (completions
+        of requests in flight at snapshot time are lost), while the engine
+        underneath stays exactly-once on its own state.  Pair with the
+        engine snapshot taken at the same boundary."""
+        return {
+            "routes": [[sid, int(self._sid_of(r.response_stream)),
+                        r.prompt_len, r.tenant]
+                       for sid, r in sorted(self.routes.items())],
+            "next_rid": self._next_rid,
+            "deferred": [[int(sid), np.asarray(vals).tolist()]
+                         for sid, vals in self.deferred],
+        }
+
+    def restore(self, snap: Dict) -> None:
+        """Rebuild routes/cursor/deferred from :meth:`snapshot` against a
+        restored engine (``self.engine``'s registry resolves the response
+        streams); routes whose streams were revoked since are dropped."""
+        self.routes = {}
+        streams = self.engine.registry.streams
+        for sid, resp_sid, prompt_len, tenant in snap["routes"]:
+            if sid < len(streams) and streams[sid] is not None \
+                    and streams[resp_sid] is not None:
+                self.routes[sid] = _Route(sid, streams[resp_sid],
+                                          prompt_len, tenant)
+        self._next_rid = int(snap["next_rid"])
+        self.deferred = [(int(sid), np.asarray(vals, np.float32))
+                         for sid, vals in snap["deferred"]]
+        self.inflight = {}
+        self._occ = None
+
+    @staticmethod
+    def _sid_of(stream) -> int:
+        """Accept a registry Stream or a bare sid."""
+        return stream.sid if hasattr(stream, "sid") else int(stream)
+
     def drain(self, max_ticks: int = 1000, ts: int = 0) -> List[Request]:
         """Run the batcher to completion (one ``run_ticks`` burst — it
         stops by itself when nothing is queued or live); post completions

@@ -416,19 +416,25 @@ def test_registry_capacity_and_recycling():
     t = reg.create_tenant("t")
     a = reg.create_stream(t, "a", ["v"])
     b = reg.create_stream(t, "b", ["v"])
-    # reference inputs by stream name: "a.v" survives b's removal (a
-    # positional "in1.v" would rightly fail to recompile host-side, while
-    # the device program keeps running with the vacated slot reading 0)
-    c = reg.create_composite(t, "c", ["v"], [a, b], {"v": "a.v + 1"})
+    c = reg.create_composite(t, "c", ["v"], [a, b], {"v": "a.v + in1.v"})
     reg.remove_stream(b)
     assert reg.streams[b.sid] is None
-    assert c.inputs == [a.sid]                # edge severed
+    # the edge is severed *in place* — the slot tombstones to -1 exactly
+    # like the device in_table, so surviving slots keep their in<i>
+    # register bindings and b-referencing expressions still recompile
+    # (the tombstone remembers b's name/channels)
+    assert c.inputs == [a.sid, -1]
     tab = reg.build_tables()
     assert tab.active.tolist() == [True, False, True] + [False] * 5
     assert tab.in_count[c.sid] == 1
+    assert tab.in_table[c.sid].tolist() == [a.sid, -1, -1]
     d = reg.create_stream(t, "d", ["v"])
     assert d.sid == b.sid                     # lowest free sid recycled
     assert reg.n_active == 3
+    # a new subscription reuses the tombstoned slot, as the device does
+    reg.subscribe(c, d)
+    assert c.inputs == [a.sid, d.sid]
+    assert reg.build_tables().in_count[c.sid] == 2
 
 
 def test_windows_reset_rows():

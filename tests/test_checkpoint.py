@@ -1,0 +1,221 @@
+"""Checkpoint atomicity and round-trip guarantees: the ``sync`` flag must
+actually fsync, colliding sanitized leaf filenames must disambiguate
+instead of silently overwriting, the manager must reject ``keep < 1`` and
+never let a restore race a background prune, and every pytree must
+round-trip bit-exactly through save/load/restore."""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import (CheckpointManager, _leaf_filenames,
+                                   latest_step, load, restore, save)
+
+
+# --------------------------------------------------------------------------
+# satellite 1: the sync flag must be honored
+# --------------------------------------------------------------------------
+
+def test_sync_true_fsyncs_leaves_and_dirs(tmp_path, monkeypatch):
+    calls = []
+    real_fsync = os.fsync
+    monkeypatch.setattr(os, "fsync", lambda fd: (calls.append(fd),
+                                                 real_fsync(fd))[1])
+    save(str(tmp_path), 1, {"a": np.arange(4)}, sync=True)
+    # one per leaf + manifest + tmp dir + parent dir = at least 4
+    assert len(calls) >= 4
+
+
+def test_sync_false_skips_fsync_but_writes_atomically(tmp_path, monkeypatch):
+    calls = []
+    monkeypatch.setattr(os, "fsync", lambda fd: calls.append(fd))
+    out = save(str(tmp_path), 2, {"a": np.arange(4)}, sync=False)
+    assert calls == []                      # the flag is not dead anymore
+    assert os.path.basename(out) == "step_00000002"
+    assert not os.path.exists(out + ".tmp")  # tmp dir was renamed away
+    leaves, _ = load(str(tmp_path), 2)
+    np.testing.assert_array_equal(leaves["a"], np.arange(4))
+
+
+# --------------------------------------------------------------------------
+# satellite 2: filename sanitization collisions
+# --------------------------------------------------------------------------
+
+def test_colliding_keys_disambiguate_deterministically():
+    fn = _leaf_filenames(["a/b", "a_b", "a.b"])
+    assert len(set(fn.values())) == 3
+    # deterministic: first in key order keeps the plain name
+    assert fn["a/b"] == "a_b.npy"
+    assert fn["a_b"] == "a_b.1.npy"
+
+
+def test_duplicate_keys_raise():
+    with pytest.raises(ValueError, match="duplicate"):
+        _leaf_filenames(["x", "x"])
+
+
+def test_colliding_leaves_round_trip(tmp_path):
+    tree = {"a": {"b": np.float32(1.5)}, "a_b": np.float32(2.5)}
+    save(str(tmp_path), 1, tree)
+    leaves, _ = load(str(tmp_path), 1)
+    assert leaves["a/b"] == np.float32(1.5)
+    assert leaves["a_b"] == np.float32(2.5)
+    got = restore(str(tmp_path), 1, tree)
+    assert got["a"]["b"] == np.float32(1.5)
+    assert got["a_b"] == np.float32(2.5)
+
+
+# --------------------------------------------------------------------------
+# satellite 3: manager keep validation + prune/restore race
+# --------------------------------------------------------------------------
+
+def test_keep_zero_rejected(tmp_path):
+    with pytest.raises(ValueError, match="keep"):
+        CheckpointManager(str(tmp_path), keep=0)
+    with pytest.raises(ValueError, match="keep"):
+        CheckpointManager(str(tmp_path), keep=-1)
+
+
+def test_keep_one_retains_newest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=1)
+    for step in (1, 2, 3):
+        mgr.save_sync(step, {"a": np.full((2,), step)})
+    assert latest_step(str(tmp_path)) == 3
+    assert sorted(os.listdir(tmp_path)) == ["step_00000003"]
+    step, leaves, _ = mgr.load_latest()
+    assert step == 3
+    np.testing.assert_array_equal(leaves["a"], [3, 3])
+
+
+def test_restore_latest_survives_concurrent_prune(tmp_path):
+    """Hammer async saves (each of which prunes) against load_latest —
+    the lock means a reader can never observe a half-deleted step."""
+    mgr = CheckpointManager(str(tmp_path), keep=1)
+    mgr.save_sync(0, {"a": np.zeros((4,))})
+    errs = []
+
+    def writer():
+        for step in range(1, 20):
+            mgr.save_async(step, {"a": np.full((4,), step)})
+        mgr.wait()
+
+    def reader():
+        try:
+            for _ in range(50):
+                step, leaves, _ = mgr.load_latest()
+                assert step is not None
+                np.testing.assert_array_equal(leaves["a"],
+                                              np.full((4,), step))
+        except Exception as e:          # surfaced below
+            errs.append(e)
+
+    threads = [threading.Thread(target=writer),
+               threading.Thread(target=reader)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs, errs
+
+
+def test_save_async_lands_with_extra(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save_async(7, {"x": np.arange(3)}, extra={"kind": "test", "n": 7})
+    mgr.wait()
+    step, leaves, extra = mgr.load_latest()
+    assert step == 7
+    np.testing.assert_array_equal(leaves["x"], np.arange(3))
+    assert extra == {"kind": "test", "n": 7}
+
+
+# --------------------------------------------------------------------------
+# satellite 4: property-based round-trip (skipped without hypothesis)
+# --------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                          # pragma: no cover
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    _KEY = st.text(
+        alphabet=st.sampled_from("ab_/."), min_size=1, max_size=6)
+    _ARRAY = st.builds(
+        lambda shape, dtype, seed: (
+            np.random.RandomState(seed).standard_normal(shape).astype(dtype)
+            if np.issubdtype(dtype, np.floating)
+            else np.random.RandomState(seed).randint(-99, 99, shape, dtype)),
+        st.lists(st.integers(0, 4), min_size=0, max_size=3).map(tuple),
+        st.sampled_from([np.float32, np.int32, np.int8, np.float64]),
+        st.integers(0, 2**31 - 1))
+    _TREE = st.recursive(
+        _ARRAY,
+        lambda kids: st.dictionaries(_KEY, kids, min_size=1, max_size=4),
+        max_leaves=8)
+
+
+def _roundtrip_case(tree, step, path):
+    """save -> load and save -> restore reproduce every leaf bit-exactly,
+    regardless of how badly the keys collide after sanitization; keys
+    containing ``/`` that alias a nesting path must raise, not clobber."""
+    flat = {}
+    dupes = []
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(prefix + [k], v)
+        else:
+            key = "/".join(prefix)
+            if key in flat:
+                dupes.append(key)
+            flat[key] = node
+
+    walk([], tree)
+    if dupes:                      # e.g. key "a/b" aliasing nested a -> b
+        with pytest.raises(ValueError, match="duplicate"):
+            save(path, step, tree)
+        return
+    save(path, step, tree)
+    assert latest_step(path) == step
+    leaves, _ = load(path, step)
+    assert set(leaves) == set(flat)
+    for k, arr in flat.items():
+        assert leaves[k].dtype == arr.dtype
+        np.testing.assert_array_equal(leaves[k], arr)
+    got = restore(path, step, tree)
+
+    def compare(a, b):
+        if isinstance(a, dict):
+            assert set(a) == set(b)
+            for k in a:
+                compare(a[k], b[k])
+        else:
+            np.testing.assert_array_equal(a, b)
+
+    compare(tree, got)
+
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(tree=st.dictionaries(_KEY, _TREE, min_size=1, max_size=4),
+           step=st.integers(0, 10**6))
+    def test_roundtrip_property(tree, step, tmp_path_factory):
+        _roundtrip_case(tree, step, str(tmp_path_factory.mktemp("ckpt")))
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_roundtrip_property():
+        pass
+
+
+def test_roundtrip_fixed_cases(tmp_path):
+    """The property test's worst cases, pinned so they run even without
+    hypothesis installed."""
+    _roundtrip_case({"a": {"b": np.arange(3, dtype=np.int8)},
+                     "a_b": np.float64(7.0),
+                     "a.b": np.zeros((0, 2), np.float32)}, 3,
+                    str(tmp_path / "one"))
+    _roundtrip_case({"a/b": np.int32(1), "a": {"b": np.int32(2)}}, 4,
+                    str(tmp_path / "two"))
