@@ -144,6 +144,27 @@ def load(path: str, step: int) -> Tuple[Dict[str, np.ndarray], Optional[dict]]:
     return leaves, m.get("extra")
 
 
+def peek_extra(path: str, step: Optional[int] = None
+               ) -> Tuple[Optional[int], Optional[dict]]:
+    """Read only the manifest's ``extra`` dict of checkpoint ``step``
+    (newest when None) — no leaf I/O.  Returns ``(step, extra)``, or
+    ``(None, None)`` when no checkpoint exists.
+
+    This is how the elastic plane inspects a checkpoint's engine shape
+    before committing to a restore: an engine snapshot's ``extra`` carries
+    ``kind`` ("single"/"sharded") and ``registry.cfg`` (``n_shards``,
+    ``partition``, capacities), so an operator can decide the target mesh
+    — or whether a cross-shard-count restore is needed at all — without
+    loading a single array."""
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            return None, None
+    d = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        return step, json.load(f).get("extra")
+
+
 def restore(path: str, step: int, like, *, shardings=None):
     """Rebuild the pytree of ``like`` (a pytree of arrays or
     ShapeDtypeStructs).  ``shardings``: optional matching pytree of
@@ -244,6 +265,20 @@ class CheckpointManager:
                 try:
                     leaves, extra = load(self.path, step)
                     return step, leaves, extra
+                except FileNotFoundError:
+                    continue
+
+    def peek_latest(self) -> Tuple[Optional[int], Optional[dict]]:
+        """Manifest-only :func:`peek_extra` of the newest checkpoint,
+        under the manager's lock (safe against a concurrent prune)."""
+        self.wait()
+        with self._lock:
+            while True:
+                step = latest_step(self.path)
+                if step is None:
+                    return None, None
+                try:
+                    return peek_extra(self.path, step)
                 except FileNotFoundError:
                     continue
 

@@ -147,6 +147,9 @@ def revoke_stream(tables: DeviceTables, state: EngineState, row: Tuple,
     stats = dict(state.stats)
     stats["dropped_revoked"] = stats["dropped_revoked"] + \
         hit.sum(axis=-1, dtype=jnp.int32)
+    # purged SUs left the queue without being served — the conservation
+    # counter pairing "queued_in" (see engine.STAT_KEYS)
+    stats["purged"] = stats["purged"] + hit.sum(axis=-1, dtype=jnp.int32)
     if state.dlq_fill.ndim:         # sharded layout: per-shard spools
         state = jax.vmap(lambda st, s_, v_, t_, m_: dlq_append(
             st, s_, v_, t_, jnp.full_like(s_, t_rev), DLQ_REVOKED, m_))(
@@ -293,6 +296,8 @@ def _requeue_body(state: EngineState, sid, vals, ts, valid, tenant
     stats = dict(state.stats)
     stats["dropped_overflow"] = stats["dropped_overflow"] + dropped
     stats["replayed"] = stats["replayed"] + \
+        valid.sum(dtype=jnp.int32) - dropped
+    stats["queued_in"] = stats["queued_in"] + \
         valid.sum(dtype=jnp.int32) - dropped
     return state._replace(stats=stats)
 

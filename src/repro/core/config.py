@@ -145,6 +145,18 @@ class EngineConfig:
             max_out=max(self.max_out, max_subs or 0),
         )
 
+    def with_shards(self, n_shards: int,
+                    partition: str = None) -> "EngineConfig":
+        """Copy of this config at a different mesh size — the shape the
+        elastic plane (``StreamEngine.resize``, the autoscaler, and
+        cross-shard-count ``restore_engine``) moves between.  Everything
+        but ``n_shards``/``partition`` is preserved, so every state leaf
+        stays migratable (queues, retention rings and the DLQ keep their
+        per-shard capacities)."""
+        return dataclasses.replace(
+            self, n_shards=int(n_shards),
+            partition=partition or self.partition).validate()
+
     def validate(self) -> "EngineConfig":
         """Assert the capacity invariants the engine assumes; returns self
         so constructors can chain it."""

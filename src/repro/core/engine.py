@@ -152,6 +152,15 @@ STAT_KEYS = (
     "emitted", "enqueued", "dropped_overflow", "nonfinite",
     "dropped_revoked", "dropped_spool", "dropped_quota",
     "replayed",
+    # queue-flow conservation counters (every SU that enters or leaves the
+    # pending queue is counted exactly once):
+    #   queued_in == popped + purged + current queue occupancy
+    # holds at every host boundary — the invariant the elastic chaos soak
+    # asserts across resizes.  "queued_in" counts successful enqueues
+    # (ingest, stage-4 fan-out, replay/redelivery); "popped" counts SUs the
+    # scheduler removed; "purged" counts SUs removed without being served
+    # (revocation queue purges, resize scale-in overflow).
+    "queued_in", "popped", "purged",
 )
 
 # Dead-letter drop classes: every ``dropped_*`` stat has a DLQ reason code,
@@ -443,6 +452,7 @@ def ingest_phase(state: EngineState, stats: Dict[str, jnp.ndarray],
     state, dropped = _enqueue(state, q_sid, ingest.vals, ingest.ts, i_win,
                               tenant_of_row)
     stats["dropped_overflow"] += dropped
+    stats["queued_in"] += i_win.sum(dtype=jnp.int32) - dropped
     return state, stats
 
 
@@ -490,6 +500,7 @@ def store_and_emit(cfg: EngineConfig, tables: DeviceTables,
                               tables.tenant[rows])
     stats["dropped_overflow"] += dropped
     stats["enqueued"] += fanout_more.sum(dtype=jnp.int32)
+    stats["queued_in"] += fanout_more.sum(dtype=jnp.int32) - dropped
 
     # external sink buffer: first `sink_buffer` winners this round
     sink_rank = jnp.cumsum(win.astype(jnp.int32)) - 1
@@ -645,6 +656,7 @@ def make_step(
         state, (e_sid, e_vals, e_ts, e_pop) = _pop(
             state, tables.priority, B, tables.tenant, tables.weight,
             cfg.scheduler)
+        stats["popped"] += e_pop.sum(dtype=jnp.int32)
         # events whose stream was revoked while queued drop here
         e_act = tables.active[jnp.clip(e_sid, 0, N - 1)]
         e_valid = e_pop & e_act
@@ -894,12 +906,14 @@ class StreamEngine:
         self.registry = registry
         self.tables = DeviceTables.from_host(registry.build_tables(priority))
         self.state = init_state(self.cfg)
-        self._step = make_step(self.cfg, fanout_fn)
         self._fanout_fn = fanout_fn
+        # compiled-closure cache (layout key -> step + per-K supersteps);
+        # it survives resize morphs, so revisiting a shard count re-uses
+        # the already-jitted programs instead of recompiling
+        self._fn_cache: Dict = {}
+        self._compiled_for("single", lambda: make_step(self.cfg, fanout_fn))
         self._pending: List[List] = []  # [sid, vals, ts, ring_slot | None]
         self.admission_rejected = 0     # host-side churn rejection counter
-        # superstep plane: per-K compiled scans + the device ingest ring
-        self._superstep_fns: Dict[int, Callable] = {}
         self._ring: Optional[IngestRing] = None
         self._ring_K = 0
         self._ring_free: List[int] = []
@@ -1008,6 +1022,21 @@ class StreamEngine:
             assigned += [(e, k, i) for i, e in enumerate(take)]
         self._pending = pend
         return assigned
+
+    def _compiled_for(self, key, build: Callable) -> None:
+        """Install the step/superstep programs for a layout, re-using this
+        engine's closure cache when the layout was visited before — a
+        resize back to a previously seen shard count then costs zero
+        recompilation.  ``key`` identifies everything the closures are
+        specialized on (shard count, per-shard row count, mesh devices);
+        ``build`` makes the round-step closure on a miss.  The per-K
+        superstep dict is cached by reference, so lazily-built K variants
+        are kept across revisits too."""
+        cache = self.__dict__.setdefault("_fn_cache", {})
+        hit = cache.get(key)
+        if hit is None:
+            hit = cache[key] = (build(), {})
+        self._step, self._superstep_fns = hit
 
     def _superstep_fn(self, K: int) -> Callable:
         fn = self._superstep_fns.get(K)
@@ -1534,6 +1563,63 @@ class StreamEngine:
         shards on the sharded engine); keys are :data:`STAT_KEYS`."""
         return {k: int(v) for k, v in self.state.stats.items()}
 
+    # ---------------------------------------------------------- elastic mesh
+    def resize(self, n_shards: int, *, mesh=None,
+               partition: Optional[str] = None) -> "StreamEngine":
+        """Live shard scale-out/in at a superstep boundary.
+
+        Re-shards the engine *in place* to ``n_shards`` and returns
+        ``self`` — the object morphs between :class:`StreamEngine`
+        (``n_shards == 1``) and the sharded engine, so every holder of the
+        reference (serving bridge routes, autoscalers, user code) keeps a
+        valid engine.  The mechanism is the durability plane: take a
+        :meth:`snapshot`, re-shard its flat host arrays with
+        :func:`repro.distributed.stream_sharding.reshard_snapshot` (rows,
+        retention rings, queue contents and dead letters all migrate to
+        their new owner shards), and install the result — so ``resize(M)``
+        is *by construction* bit-identical to ``restore_engine(snapshot,
+        n_shards=M)``, the primitive's oracle.
+
+        The registry (and every Stream handle it issued) survives — only
+        its ``cfg`` moves to the new shard count.  At most one retrace is
+        paid per resize: the re-lowered round/superstep closure compiles on
+        its first post-resize call, and a resize back to a previously
+        visited layout re-uses the cached closure (zero recompilation);
+        nothing else on the resize path traces.
+        Caveats: per-tenant token buckets reset (quota refills resume next
+        round), and scale-in can overflow the smaller per-shard queues —
+        overflowed SUs are counted (``dropped_overflow``/``purged``) and
+        dead-lettered, never silently lost."""
+        n_shards = int(n_shards)
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        if n_shards == self.cfg.n_shards and \
+                (partition is None or partition == self.cfg.partition):
+            return self
+        from repro.distributed import stream_sharding as _sh
+        arrays, meta = self.snapshot()
+        arrays, meta = _sh.reshard_snapshot(arrays, meta, n_shards,
+                                            partition=partition)
+        new_cfg = EngineConfig(**meta["registry"]["cfg"]).validate()
+        # keep the live registry object: user-held Stream handles (and the
+        # serving bridge's routes) reference it by identity
+        self.registry.cfg = new_cfg
+        self.cfg = new_cfg
+        if n_shards > 1:
+            self.__class__ = _sh.ShardedStreamEngine
+            self._bind_mesh(mesh)
+            self.plan = None            # force a step re-lower in install
+            self._install_snapshot(arrays, meta)
+        else:
+            self.__class__ = StreamEngine
+            for attr in ("mesh", "plan", "gmap", "_shard", "_repl",
+                         "_occupancy", "_spare", "_holes", "_ring_dirty"):
+                self.__dict__.pop(attr, None)
+            self._compiled_for(
+                "single", lambda: make_step(self.cfg, self._fanout_fn))
+            self._install_snapshot(arrays, meta)
+        return self
+
 
 def create_engine(registry: Registry, *, mesh=None, **kw):
     """Build the engine matching ``registry.cfg``: a plain single-device
@@ -1550,7 +1636,9 @@ def create_engine(registry: Registry, *, mesh=None, **kw):
 
 
 def restore_engine(source, *, step: Optional[int] = None, mesh=None,
-                   fanout_fn: Callable = fanout_reference):
+                   fanout_fn: Callable = fanout_reference,
+                   n_shards: Optional[int] = None,
+                   partition: Optional[str] = None):
     """Rebuild a running engine from a snapshot — the recovery half of
     ``StreamEngine.snapshot()``.
 
@@ -1561,7 +1649,14 @@ def restore_engine(source, *, step: Optional[int] = None, mesh=None,
     engine class is chosen by the snapshot's kind (single vs sharded), and
     tables/state/backlog are installed verbatim — the continuation is
     bit-identical to the uninterrupted run.  Returns ``None`` when no
-    checkpoint exists yet (``step=None`` picks the newest)."""
+    checkpoint exists yet (``step=None`` picks the newest).
+
+    Cross-shard-count restore: ``n_shards``/``partition`` re-shard the
+    snapshot before installing it, so an N-shard checkpoint restores into
+    an M-shard engine (or a single-device one, ``n_shards=1``) — the same
+    :func:`~repro.distributed.stream_sharding.reshard_snapshot` mapping
+    ``StreamEngine.resize`` uses, which makes this path the resize
+    primitive's differential oracle."""
     if isinstance(source, tuple):
         arrays, meta = source
     else:
@@ -1581,6 +1676,14 @@ def restore_engine(source, *, step: Optional[int] = None, mesh=None,
                 if step is None:
                     return None
             arrays, meta = _ckpt.load(path, step)
+    if n_shards is not None or partition is not None:
+        from repro.distributed.stream_sharding import reshard_snapshot
+        cfg0 = EngineConfig(**meta["registry"]["cfg"])
+        want = int(n_shards) if n_shards is not None else cfg0.n_shards
+        if want != cfg0.n_shards or \
+                (partition or cfg0.partition) != cfg0.partition:
+            arrays, meta = reshard_snapshot(arrays, meta, want,
+                                            partition=partition)
     registry = Registry.from_snapshot(meta["registry"])
     if meta.get("kind") == "sharded":
         from repro.distributed.stream_sharding import ShardedStreamEngine

@@ -3,11 +3,14 @@ from repro.distributed.sharding import (Policy, make_policy, param_shardings,
 from repro.distributed.stream_sharding import (GlobalMaps, ShardPlan,
                                                ShardedStreamEngine,
                                                make_sharded_step,
-                                               plan_partition, shard_tables,
+                                               plan_partition,
+                                               reshard_snapshot,
+                                               shard_tables,
                                                sharded_init_state)
 
 __all__ = [
     "Policy", "make_policy", "param_shardings", "tree_shardings",
     "GlobalMaps", "ShardPlan", "ShardedStreamEngine", "make_sharded_step",
-    "plan_partition", "shard_tables", "sharded_init_state",
+    "plan_partition", "reshard_snapshot", "shard_tables",
+    "sharded_init_state",
 ]

@@ -47,6 +47,7 @@ the compiled round untouched.
 from __future__ import annotations
 
 import bisect
+import dataclasses
 import functools
 from typing import Callable, List, NamedTuple, Optional, Tuple
 
@@ -244,6 +245,226 @@ def sharded_init_state(cfg: EngineConfig, plan: ShardPlan) -> EngineState:
 
 
 # --------------------------------------------------------------------------
+# elastic re-sharding
+# --------------------------------------------------------------------------
+
+_QOS_FIELDS = ("weight", "quota", "burst")
+
+
+def reshard_snapshot(arrays, meta, n_shards: int,
+                     partition: Optional[str] = None):
+    """Re-lay a :meth:`StreamEngine.snapshot` out for a different shard
+    count (or partition scheme) — the migration core of the elastic plane.
+    Returns a new ``(arrays, meta)`` pair installable at ``n_shards``
+    (``kind="sharded"`` for > 1, ``"single"`` for 1); the inputs are not
+    mutated.  Both :meth:`StreamEngine.resize` and cross-shard-count
+    :func:`~repro.core.engine.restore_engine` route through here, which is
+    what makes restore the resize primitive's bit-exact oracle.
+
+    Everything runs on host numpy at a superstep boundary:
+
+    * per-stream table rows and per-sid state (values/timestamps/retention
+      rings) are gathered into canonical by-sid order, then re-scattered
+      through a fresh :func:`plan_partition`/:func:`shard_tables` layout —
+      hole fills match inert/revoked rows exactly, so the round is
+      bit-faithful;
+    * pending-queue entries are drained shard-major in FIFO (``q_seq``)
+      order and re-enqueued on each sid's new owner shard; entries beyond
+      a shard's ``cfg.queue`` capacity on scale-in are counted
+      (``dropped_overflow`` + ``purged`` + per-tenant) and dead-lettered,
+      never silently lost;
+    * dead letters re-spool on their sid's new owner (saturating at
+      ``cfg.dlq_slots`` per shard, like any spool write);
+    * per-tenant/stat totals are summed across the old shards and placed
+      on shard 0 (readback sums shards, so counters are preserved);
+      ``tenant_queued`` is recomputed from the migrated queues; ingest
+      token buckets restart empty — bucket credit does not survive a
+      resize (quotas refill on the next round).
+    """
+    cfg = EngineConfig(**meta["registry"]["cfg"])
+    n_shards = int(n_shards)
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    new_cfg = dataclasses.replace(
+        cfg, n_shards=n_shards,
+        partition=partition or cfg.partition).validate()
+    N, C, Q, T = cfg.n_streams, cfg.channels, cfg.queue, cfg.n_tenants
+    Rr, D = cfg.retention_slots, cfg.dlq_slots
+    sharded_src = meta.get("kind") == "sharded"
+
+    # ---- canonicalise the source into by-sid / flat host views ----------
+    if sharded_src:
+        old_flat = np.asarray(arrays["plan/sid_to_flat"], np.int64)
+
+        def by_sid(x):
+            # explicit leading dim: -1 is uninferrable for zero-size
+            # arrays (e.g. retention buffers with retention_slots=0)
+            x = np.asarray(x)
+            return x.reshape((x.shape[0] * x.shape[1],) + x.shape[2:])[old_flat]
+
+        def qos(x):          # replicated per shard: any copy is canonical
+            return np.asarray(x)[0]
+
+        def lead(x):         # the single layout lacks the shard axis
+            return np.asarray(x)
+
+        def tot(x):          # totals live summed across shards
+            x = np.asarray(x)
+            return np.array(x.sum(axis=0), x.dtype)
+    else:
+        def by_sid(x):
+            return np.asarray(x)
+
+        qos = by_sid
+
+        def lead(x):
+            return np.asarray(x)[None]
+
+        def tot(x):
+            return np.array(x)   # copy: totals are mutated below
+
+    tab = {f: (qos if f in _QOS_FIELDS else by_sid)(arrays[f"tables/{f}"])
+           for f in DeviceTables._fields}
+    tenant_flat = tab["tenant"].astype(np.int64)
+    per_sid = {f: by_sid(arrays[f"state/{f}"])
+               for f in ("values", "timestamps",
+                         "ret_vals", "ret_ts", "ret_count")}
+
+    # queued SUs in canonical (shard-major, FIFO) order
+    q_sid, q_vals = lead(arrays["state/q_sid"]), lead(arrays["state/q_vals"])
+    q_ts, q_seq = lead(arrays["state/q_ts"]), lead(arrays["state/q_seq"])
+    q_valid = lead(arrays["state/q_valid"])
+    entries = []
+    for s in range(q_sid.shape[0]):
+        idx = np.nonzero(q_valid[s])[0]
+        idx = idx[np.argsort(q_seq[s, idx], kind="stable")]
+        entries.extend((int(q_sid[s, i]), np.array(q_vals[s, i]),
+                        int(q_ts[s, i])) for i in idx)
+
+    # dead letters in drop (shard-major, spool) order
+    d_sid, d_ts = lead(arrays["state/dlq_sid"]), lead(arrays["state/dlq_ts"])
+    d_vals = lead(arrays["state/dlq_vals"])
+    d_reason = lead(arrays["state/dlq_reason"])
+    d_tenant = lead(arrays["state/dlq_tenant"])
+    d_fill = np.atleast_1d(np.asarray(arrays["state/dlq_fill"]))
+    letters = [(int(d_sid[s, i]), np.array(d_vals[s, i]), int(d_ts[s, i]),
+                int(d_reason[s, i]), int(d_tenant[s, i]))
+               for s in range(d_sid.shape[0]) for i in range(int(d_fill[s]))]
+
+    totals = {k: tot(arrays[f"state/stats/{k}"]) for k in STAT_KEYS}
+    t_emitted = tot(arrays["state/tenant_emitted"])
+    t_drop_quota = tot(arrays["state/tenant_dropped_quota"])
+    t_drop_over = tot(arrays["state/tenant_dropped_overflow"])
+
+    # ---- rebuild at the target shard count ------------------------------
+    plan = plan_partition(new_cfg, tenant_flat)
+    sh_tab = shard_tables(EngineTables(**tab), plan)
+    S2, L2 = plan.n_shards, plan.n_local
+    F2 = S2 * L2
+
+    values = np.zeros((F2, C), np.float32)
+    timestamps = np.full((F2,), INT_MIN, np.int32)
+    ret_vals = np.zeros((F2, Rr, C), np.float32)
+    ret_ts = np.zeros((F2, Rr), np.int32)
+    ret_count = np.zeros((F2,), np.int32)
+    values[plan.sid_to_flat] = per_sid["values"]
+    timestamps[plan.sid_to_flat] = per_sid["timestamps"]
+    ret_vals[plan.sid_to_flat] = per_sid["ret_vals"]
+    ret_ts[plan.sid_to_flat] = per_sid["ret_ts"]
+    ret_count[plan.sid_to_flat] = per_sid["ret_count"]
+
+    nq_sid = np.zeros((S2, Q), np.int32)
+    nq_vals = np.zeros((S2, Q, C), np.float32)
+    nq_ts = np.zeros((S2, Q), np.int32)
+    nq_seq = np.zeros((S2, Q), np.int32)
+    nq_valid = np.zeros((S2, Q), bool)
+    fill = np.zeros((S2,), np.int64)
+    t_queued = np.zeros((S2, T), np.int32)
+    for sid, vals, ts in entries:
+        sid_c = min(max(sid, 0), N - 1)
+        s = int(plan.sid_to_shard[sid_c])
+        tn = min(max(int(tenant_flat[sid_c]), 0), T - 1)
+        k = int(fill[s])
+        if k < Q:
+            nq_sid[s, k], nq_vals[s, k], nq_ts[s, k] = sid, vals, ts
+            nq_seq[s, k], nq_valid[s, k] = k, True
+            fill[s] = k + 1
+            t_queued[s, tn] += 1
+        else:
+            # scale-in squeezed more SUs onto this shard than its queue
+            # holds: count + dead-letter, same contract as any overflow
+            totals["dropped_overflow"] += 1
+            totals["purged"] += 1
+            t_drop_over[tn] += 1
+            letters.append((sid, np.asarray(vals, np.float32), ts,
+                            DLQ_OVERFLOW, tn))
+    seq = fill.astype(np.int32)
+
+    nd_sid = np.zeros((S2, D), np.int32)
+    nd_vals = np.zeros((S2, D, C), np.float32)
+    nd_ts = np.zeros((S2, D), np.int32)
+    nd_reason = np.zeros((S2, D), np.int32)
+    nd_tenant = np.zeros((S2, D), np.int32)
+    nd_fill = np.zeros((S2,), np.int32)
+    if D > 0:
+        for sid, vals, ts, reason, tn in letters:
+            s = int(plan.sid_to_shard[min(max(sid, 0), N - 1)])
+            k = int(nd_fill[s])
+            if k < D:
+                nd_sid[s, k], nd_vals[s, k], nd_ts[s, k] = sid, vals, ts
+                nd_reason[s, k], nd_tenant[s, k] = reason, tn
+                nd_fill[s] = k + 1
+
+    def place0(v):           # totals ride on shard 0; readback sums shards
+        out = np.zeros((S2,) + v.shape, v.dtype)
+        out[0] = v
+        return out
+
+    out = {f"tables/{f}": np.asarray(getattr(sh_tab, f))
+           for f in DeviceTables._fields}
+    out.update({
+        "state/values": values.reshape(S2, L2, C),
+        "state/timestamps": timestamps.reshape(S2, L2),
+        "state/q_sid": nq_sid, "state/q_vals": nq_vals,
+        "state/q_ts": nq_ts, "state/q_seq": nq_seq,
+        "state/q_valid": nq_valid,
+        "state/seq": seq,
+        "state/tenant_emitted": place0(t_emitted),
+        "state/tokens": np.zeros((S2, T), np.int32),
+        "state/tenant_queued": t_queued,
+        "state/tenant_dropped_quota": place0(t_drop_quota),
+        "state/tenant_dropped_overflow": place0(t_drop_over),
+        "state/ret_vals": ret_vals.reshape(S2, L2, Rr, C),
+        "state/ret_ts": ret_ts.reshape(S2, L2, Rr),
+        "state/ret_count": ret_count.reshape(S2, L2),
+        "state/dlq_sid": nd_sid, "state/dlq_vals": nd_vals,
+        "state/dlq_ts": nd_ts, "state/dlq_reason": nd_reason,
+        "state/dlq_tenant": nd_tenant, "state/dlq_fill": nd_fill,
+    })
+    for k in STAT_KEYS:
+        out[f"state/stats/{k}"] = place0(totals[k].reshape(()))
+    if n_shards == 1:
+        out = {k: v[0] for k, v in out.items()}
+    else:
+        out["gmap/sid_to_shard"] = plan.sid_to_shard.copy()
+        out["gmap/sid_to_local"] = plan.sid_to_local.copy()
+        out["gmap/sid_to_flat"] = plan.sid_to_flat.copy()
+        out["gmap/priority"] = tab["priority"].astype(np.int32)
+        out["plan/sid_to_shard"] = plan.sid_to_shard.copy()
+        out["plan/sid_to_local"] = plan.sid_to_local.copy()
+        out["plan/sid_to_flat"] = plan.sid_to_flat.copy()
+        out["plan/local_to_sid"] = plan.local_to_sid.copy()
+    for k in ("pending/sid", "pending/vals", "pending/ts"):
+        out[k] = np.array(arrays[k])
+
+    new_meta = dict(meta)
+    new_meta["registry"] = dict(meta["registry"])
+    new_meta["registry"]["cfg"] = dataclasses.asdict(new_cfg)
+    new_meta["kind"] = "sharded" if n_shards > 1 else "single"
+    return out, new_meta
+
+
+# --------------------------------------------------------------------------
 # the sharded step
 # --------------------------------------------------------------------------
 
@@ -293,6 +514,7 @@ def make_shard_round(
         state, (e_sid, e_vals, e_ts, e_pop) = _pop(
             state, gmap.priority, B, tenant_by_sid, tables.weight,
             cfg.scheduler)
+        stats["popped"] += e_pop.sum(dtype=jnp.int32)
         e_loc = jnp.clip(gmap.sid_to_local[jnp.clip(e_sid, 0, N - 1)],
                          0, n_local - 1)
         # events whose stream was revoked while queued drop here
@@ -478,6 +700,35 @@ class ShardedStreamEngine(StreamEngine):
         cfg = registry.cfg
         self.cfg = cfg
         self.registry = registry
+        self._bind_mesh(mesh)
+        host_tables, self.plan = registry.build_sharded_tables(priority)
+        self.tables = jax.device_put(DeviceTables.from_host(host_tables),
+                                     self._shard)
+        self.gmap = jax.device_put(GlobalMaps.build(priority, self.plan),
+                                   self._repl)
+        self.state = jax.device_put(sharded_init_state(cfg, self.plan),
+                                    self._shard)
+        self._fanout_fn = fanout_fn
+        self._fn_cache = {}
+        self._compiled_for(
+            self._layout_key(self.plan),
+            lambda: make_sharded_step(cfg, self.plan, self.mesh, fanout_fn))
+        self._pending: List[List] = []
+        self.admission_rejected = 0
+        self._ring = None
+        self._ring_K = 0
+        self._ring_free: List[List[int]] = []
+        self._ring_dirty = False    # placement changed: re-stage everything
+        self._ckpt = None
+        self._steps_done = 0
+        self._init_slots()
+
+    def _bind_mesh(self, mesh: Optional[Mesh]) -> None:
+        """Resolve (or validate) the 1-D device mesh for ``cfg.n_shards``
+        and derive the step shardings.  Shared by ``__init__`` and
+        :meth:`StreamEngine.resize`, which re-binds after morphing an
+        engine to a new shard count."""
+        cfg = self.cfg
         if mesh is None:
             devs = jax.devices()
             if len(devs) < cfg.n_shards:
@@ -495,25 +746,6 @@ class ShardedStreamEngine(StreamEngine):
         # round never re-broadcasts tables/state from one device
         self._shard = NamedSharding(mesh, P(AXIS))
         self._repl = NamedSharding(mesh, P())
-        host_tables, self.plan = registry.build_sharded_tables(priority)
-        self.tables = jax.device_put(DeviceTables.from_host(host_tables),
-                                     self._shard)
-        self.gmap = jax.device_put(GlobalMaps.build(priority, self.plan),
-                                   self._repl)
-        self.state = jax.device_put(sharded_init_state(cfg, self.plan),
-                                    self._shard)
-        self._fanout_fn = fanout_fn
-        self._step = make_sharded_step(cfg, self.plan, mesh, fanout_fn)
-        self._pending: List[List] = []
-        self.admission_rejected = 0
-        self._superstep_fns = {}
-        self._ring = None
-        self._ring_K = 0
-        self._ring_free: List[List[int]] = []
-        self._ring_dirty = False    # placement changed: re-stage everything
-        self._ckpt = None
-        self._steps_done = 0
-        self._init_slots()
 
     def _init_slots(self) -> None:
         """(Re)build the per-shard free-slot bookkeeping from the registry:
@@ -569,6 +801,13 @@ class ShardedStreamEngine(StreamEngine):
         return SinkBatch(*(x.reshape((-1,) + x.shape[2:]) for x in sink))
 
     # ----------------------------------------------------------- supersteps
+    def _layout_key(self, plan):
+        """Cache key for the compiled closures: everything they are
+        specialized on.  The step is shaped by the shard/row counts and
+        the mesh devices — plan *content* is runtime data (see rewire)."""
+        return ("sharded", plan.n_shards, plan.n_local,
+                tuple(int(d.id) for d in self.mesh.devices.flat))
+
     def _superstep_fn(self, K: int):
         fn = self._superstep_fns.get(K)
         if fn is None:
@@ -858,9 +1097,10 @@ class ShardedStreamEngine(StreamEngine):
                 ret_ts=jnp.asarray(rt.reshape(S, L, Rr)),
                 ret_count=jnp.asarray(rc.reshape(S, L))), self._shard)
             if L != old.n_local:    # step closures are shaped by n_local
-                self._step = make_sharded_step(self.cfg, new_plan, self.mesh,
-                                               self._fanout_fn)
-                self._superstep_fns = {}
+                self._compiled_for(
+                    self._layout_key(new_plan),
+                    lambda: make_sharded_step(self.cfg, new_plan, self.mesh,
+                                              self._fanout_fn))
         self.plan = new_plan
         qos = self.tables            # weight/quota/burst survive re-lowers
         self.tables = jax.device_put(
@@ -884,7 +1124,9 @@ class ShardedStreamEngine(StreamEngine):
         return int(self.state.timestamps[sh, lo])
 
     def counters(self):
-        return {k: int(v.sum()) for k, v in self.state.stats.items()}
+        # host-side sum: a device reduction would compile one program per
+        # shard count, breaking the zero-retrace contract for pure reads
+        return {k: int(np.asarray(v).sum()) for k, v in self.state.stats.items()}
 
     # ------------------------------------------------- durability & replay
     def snapshot(self):
@@ -909,17 +1151,29 @@ class ShardedStreamEngine(StreamEngine):
         shardings, and rebuild the slot bookkeeping from the restored
         registry."""
         local_to_sid = np.array(arrays["plan/local_to_sid"], np.int32)
+        # the snapshot's own layout is authoritative — a snapshot taken at
+        # N shards must land in an engine configured for N shards (resize /
+        # cross-shard-count restore reshard the snapshot *first*)
+        n_shards = int(local_to_sid.shape[0])
+        if n_shards != self.cfg.n_shards:
+            raise ValueError(
+                f"snapshot carries {n_shards} shards but cfg.n_shards="
+                f"{self.cfg.n_shards}; reshard_snapshot() it first (or "
+                f"restore_engine(..., n_shards=...))")
         plan = ShardPlan(
-            n_shards=self.plan.n_shards,
+            n_shards=n_shards,
             n_local=int(local_to_sid.shape[1]),
             sid_to_shard=np.array(arrays["plan/sid_to_shard"], np.int32),
             sid_to_local=np.array(arrays["plan/sid_to_local"], np.int32),
             sid_to_flat=np.array(arrays["plan/sid_to_flat"], np.int32),
             local_to_sid=local_to_sid)
-        if plan.n_local != self.plan.n_local:
-            self._step = make_sharded_step(self.cfg, plan, self.mesh,
-                                           self._fanout_fn)
-            self._superstep_fns = {}
+        old = getattr(self, "plan", None)
+        if old is None or plan.n_local != old.n_local \
+                or plan.n_shards != old.n_shards:
+            self._compiled_for(
+                self._layout_key(plan),
+                lambda: make_sharded_step(self.cfg, plan, self.mesh,
+                                          self._fanout_fn))
         self.plan = plan
         self.gmap = GlobalMaps(**{
             f: jnp.asarray(arrays[f"gmap/{f}"])

@@ -19,6 +19,14 @@ submitting — a tenant whose occupancy crossed the watermark has its pump
 *slowed*: its emissions are deferred host-side (and its queued batcher
 requests are not admitted to decode slots) until the backlog drains below
 the watermark again.  Other tenants' requests flow unimpeded.
+
+Elasticity: routes survive ``engine.resize`` untouched.  They hold
+registry ``Stream`` objects and global sids, both of which are placement-
+independent, and ``resize`` morphs the engine *in place* (same object,
+same registry), so ``self.engine`` stays the live engine across any
+number of scale events — sids never change owner identity, only owner
+shard.  Use :meth:`rebind` only when replacing the engine object itself
+(e.g. after ``restore_engine``, which builds a new instance).
 """
 from __future__ import annotations
 
@@ -208,6 +216,24 @@ class ModelBackedStreams:
                      self.engine.drain_spools(K, max_rounds))
         self.drain(ts=ts)
         return n
+
+    # --------------------------------------------------------- elasticity
+    def rebind(self, engine: StreamEngine) -> None:
+        """Point the bridge at a different engine *object* (a
+        ``restore_engine`` product; never needed after ``resize``, which
+        morphs the engine in place).  Routes are re-resolved against the
+        new engine's registry — routes whose streams no longer exist are
+        dropped, exactly like :meth:`restore` — and the backpressure
+        snapshot is invalidated."""
+        self.engine = engine
+        streams = engine.registry.streams
+        self.routes = {
+            sid: dataclasses.replace(
+                r, response_stream=streams[self._sid_of(r.response_stream)])
+            for sid, r in self.routes.items()
+            if sid < len(streams) and streams[sid] is not None
+            and streams[self._sid_of(r.response_stream)] is not None}
+        self._occ = None
 
     # ------------------------------------------------- durability & replay
     def snapshot(self) -> Dict:
