@@ -1,4 +1,5 @@
-"""Scheduler hot path — rounds/s vs queue depth, packed vs lexsort pop.
+"""Scheduler hot path — rounds/s vs queue depth, lexsort vs packed vs
+fused round.
 
 The pop is the engine's per-round serial bottleneck: the lexsort
 scheduler pays two full-queue multi-key sorts plus a (Q, T) rank cumsum
@@ -8,16 +9,21 @@ packed scheduler (`EngineConfig.scheduler="packed"`, the default)
 replaces that with a selection pop (`repro.kernels.sched_pop`):
 O(Q·batch) vectorized argmin steps, no sort.  Pop cost therefore scales
 *linearly* in ``queue`` — this sweep records rounds/s for queue_slots ∈
-{256, 1024, 4096} under both schedulers on a deliberately latency-bound
-topology (small batch, shallow programs: the round is dominated by the
-scheduler, not the VM), with the queue kept saturated so the sort
-actually has a full queue to chew on.
+{256, 1024, 4096} on a deliberately latency-bound topology (small batch,
+shallow programs: the round is dominated by the scheduler, not the VM),
+with the queue kept saturated so the sort actually has a full queue to
+chew on.  The third variant, ``fused`` (`EngineConfig.fused_round`, the
+default), layers the fused round on the packed pop: stages 1-3 as one
+operation plus the O(Q) free-slot search on both enqueue edges — the
+other per-round cost that scales with ``queue``.
 
 Run ``python -m benchmarks.scheduler [--rounds R] [--queues 256,1024,4096]
-[--json BENCH_sched.json] [--min-speedup X] [--smoke]``.  ``--smoke`` is
-the CI mode: one tiny queue, few rounds, still failing (exit 1) if any
-round retraces.  The two schedulers are timed in *interleaved* blocks so
-host drift cancels.  JSON schema: benchmarks/README.md.
+[--json BENCH_sched.json] [--min-speedup X] [--min-fused-speedup X]
+[--no-fused] [--smoke]``.  ``--smoke`` is the CI mode: one tiny queue,
+few rounds, still failing (exit 1) if any round retraces — and, like the
+full run, if the fused variant loses to the staged packed one.  All
+variants are timed in *interleaved* blocks so host drift cancels.  JSON
+schema: benchmarks/README.md.
 """
 from __future__ import annotations
 
@@ -41,7 +47,13 @@ FAN = 8                 # L1 composites per source: the amplification
 BATCH = 8               # small on purpose: B << Q isolates the pop
 
 
-def _build(queue_slots: int, scheduler: str):
+# variant -> (EngineConfig.scheduler, EngineConfig.fused_round)
+VARIANTS = {"lexsort": ("lexsort", False),
+            "packed": ("packed", False),
+            "fused": ("packed", True)}
+
+
+def _build(queue_slots: int, variant: str):
     """Two-hop fan topology sized to pin the queue at capacity: each of
     the 8 sources (2 per tenant, tenants weighted 4:3:2:1) feeds FAN L1
     composites, each of which feeds one terminal L2 — so every popped
@@ -52,10 +64,11 @@ def _build(queue_slots: int, scheduler: str):
     pinned there through the measured window — identical load under
     both schedulers."""
     n_nodes = N_SOURCES * (2 + FAN)
+    scheduler, fused = VARIANTS[variant]
     cfg = EngineConfig(
         n_streams=n_nodes, n_tenants=4, batch=BATCH, queue=queue_slots,
         max_in=max(FAN, 2), max_out=FAN, prog_len=16, n_temps=12,
-        sink_buffer=BATCH * FAN, scheduler=scheduler,
+        sink_buffer=BATCH * FAN, scheduler=scheduler, fused_round=fused,
     )
     reg = Registry(cfg)
     tenants = [reg.create_tenant(f"t{i}", quota_streams=10 ** 9)
@@ -79,8 +92,10 @@ class _Phase:
     """One engine (one scheduler) under the saturating load, with its
     warm-up, accumulated timed rounds and retrace baseline."""
 
-    def __init__(self, queue_slots: int, scheduler: str):
-        self.eng, self.srcs = _build(queue_slots, scheduler)
+    def __init__(self, queue_slots: int, variant: str):
+        self.eng, self.srcs = _build(queue_slots, variant)
+        assert self.eng._path == ("fused" if VARIANTS[variant][1]
+                                  else "staged")
         self.ts = 1
         self.time = 0.0
         self.rounds = 0
@@ -111,10 +126,10 @@ class _Phase:
         self.time += time.perf_counter() - t0
         self.rounds += n
 
-    def report(self, queue_slots: int, scheduler: str) -> dict:
+    def report(self, queue_slots: int, variant: str) -> dict:
         return {
             "queue_slots": queue_slots,
-            "scheduler": scheduler,
+            "scheduler": variant,
             "rounds_per_s": self.rounds / self.time,
             "queue_occupancy": self.occupancy(),
             "retraces": int(self.eng._step._cache_size() - self.cache0),
@@ -122,11 +137,10 @@ class _Phase:
         }
 
 
-def bench_queue(queue_slots: int, rounds: int):
-    """Both schedulers at one queue depth, timed in interleaved blocks
+def bench_queue(queue_slots: int, rounds: int, variants):
+    """All variants at one queue depth, timed in interleaved blocks
     (same wall-clock neighborhood -> host drift cancels)."""
-    phases = {"lexsort": _Phase(queue_slots, "lexsort"),
-              "packed": _Phase(queue_slots, "packed")}
+    phases = {v: _Phase(queue_slots, v) for v in variants}
     block = max(rounds // 4, 1)
     done = 0
     while done < rounds:
@@ -146,30 +160,46 @@ def main():
     ap.add_argument("--min-speedup", type=float, default=0.0,
                     help="exit non-zero if packed/lexsort rounds/s at the "
                          "largest queue falls below this (0 = record only)")
+    ap.add_argument("--min-fused-speedup", type=float, default=1.0,
+                    help="exit non-zero if fused/packed rounds/s at the "
+                         "largest queue falls below this (default: the "
+                         "fused round must at least not lose)")
+    ap.add_argument("--no-fused", action="store_true",
+                    help="drop the fused-round variant from the sweep")
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: one small queue, few rounds")
     args = ap.parse_args()
     queues = [int(x) for x in args.queues.split(",")]
     if args.smoke:
-        queues, args.rounds = [256], 4
+        # enough measured rounds that the fused-vs-staged gate below is
+        # judging throughput, not scheduler-jitter noise, while the whole
+        # smoke stays a few seconds
+        queues, args.rounds = [256], 24
+    variants = [v for v in VARIANTS if v != "fused" or not args.no_fused]
 
     res = {"config": {"rounds": args.rounds, "sources": N_SOURCES,
                       "fan": FAN, "batch": BATCH,
                       "platform": jax.devices()[0].platform,
                       "smoke": bool(args.smoke)},
-           "sweep": [], "speedup": {}}
+           "sweep": [], "speedup": {}, "fused_speedup": {}}
     print(f"{'queue':>6} {'scheduler':>9} {'rounds/s':>10} {'occ':>6} "
           f"{'retraces':>9}")
     for q in queues:
-        rows = bench_queue(q, args.rounds)
+        rows = bench_queue(q, args.rounds, variants)
         res["sweep"] += rows
         by = {r["scheduler"]: r for r in rows}
         res["speedup"][str(q)] = (by["packed"]["rounds_per_s"]
                                   / by["lexsort"]["rounds_per_s"])
+        if "fused" in by:
+            res["fused_speedup"][str(q)] = (by["fused"]["rounds_per_s"]
+                                            / by["packed"]["rounds_per_s"])
         for r in rows:
             print(f"{q:>6} {r['scheduler']:>9} {r['rounds_per_s']:>10.1f} "
                   f"{r['queue_occupancy']:>6} {r['retraces']:>9}")
         print(f"{q:>6} {'speedup':>9} {res['speedup'][str(q)]:>9.2f}x")
+        if "fused" in by:
+            print(f"{q:>6} {'fused':>9} "
+                  f"{res['fused_speedup'][str(q)]:>9.2f}x")
 
     if args.json:        # write the artifact even (especially) on failure
         with open(args.json, "w") as f:
@@ -183,6 +213,12 @@ def main():
     if args.min_speedup and res["speedup"][top] < args.min_speedup:
         print(f"WARNING: packed speedup {res['speedup'][top]:.2f}x at "
               f"queue={top} below required {args.min_speedup}x",
+              file=sys.stderr)
+        sys.exit(1)
+    if res["fused_speedup"] \
+            and res["fused_speedup"][top] < args.min_fused_speedup:
+        print(f"WARNING: fused speedup {res['fused_speedup'][top]:.2f}x at "
+              f"queue={top} below required {args.min_fused_speedup}x",
               file=sys.stderr)
         sys.exit(1)
 

@@ -96,7 +96,7 @@ def bench_one(n_nodes: int, K: int, n_shards: int, n_supersteps: int):
     c = eng.counters()
     retraces = eng._superstep_fns[K]._cache_size() - cache0
     return {
-        "K": K, "shards": n_shards,
+        "K": K, "shards": n_shards, "path": eng._path,
         "rounds_per_s": n_supersteps * K / dt,
         "supersteps_per_s": n_supersteps / dt,
         "retraces": int(retraces),

@@ -51,6 +51,15 @@ class EngineConfig:
     #           differential oracle).  Both are bit-identical.
     scheduler: str = "packed"
 
+    # ---- fused round (repro.kernels.round_fuse) ------------------------
+    # Run stages 1-3 (pop, fan-out, fetch+VM, window gate) as one fused
+    # operation — a single Pallas megakernel on TPU, the pure-jnp refs
+    # elsewhere.  Bit-identical to the staged round for fusable programs
+    # (no transcendental opcodes); the engine checks fusability host-side
+    # at every program edit and silently uses the staged path otherwise.
+    # Requires scheduler == "packed" (the fused pop *is* the packed pop).
+    fused_round: bool = True
+
     # ---- register file layout ------------------------------------------
     @property
     def reg_inputs(self) -> int:

@@ -209,12 +209,13 @@ def dlq_append(state: EngineState, sid, vals, ts, tenant, reason: int, mask
     appended behind ``dlq_fill``.  The spool saturates — letters beyond
     ``cfg.dlq_slots`` are lost (the ``dropped_*`` stats still count them) —
     and with ``dlq_slots == 0`` this is a Python-level no-op, so the DLQ
-    costs nothing when off."""
+    costs nothing when off.  ``tenant=None`` records the sentinel ``-1``
+    (owner unknown at the drop site) rather than charging tenant 0."""
     D = state.dlq_sid.shape[0]
     if D == 0:
         return state
     if tenant is None:
-        tenant = jnp.zeros_like(sid)
+        tenant = jnp.full_like(sid, -1)
     rank = state.dlq_fill + jnp.cumsum(mask.astype(jnp.int32)) - 1
     dest = jnp.where(mask & (rank < D), rank, D)
     return state._replace(
@@ -239,13 +240,20 @@ def dlq_append(state: EngineState, sid, vals, ts, tenant, reason: int, mask
 _FREE_SCAN_MAX = 64
 
 
-def _first_free(q_valid: jnp.ndarray, X: int) -> jnp.ndarray:
+def _first_free(q_valid: jnp.ndarray, X: int, fast: bool = False
+                ) -> jnp.ndarray:
     """Indices of the first ``X`` free queue slots, ascending, padded
     with ``Q`` — ``jnp.nonzero(~q_valid, size=X, fill_value=Q)[0]``
     bit-exactly.  For ``X <= _FREE_SCAN_MAX`` it runs as ``X``
     vectorized argmin steps (the packed scheduler pop's selection
     idiom, ~10x cheaper than the full-queue scatter ``nonzero`` lowers
-    to); wider requests keep the scatter, which is flat in ``X``."""
+    to); wider requests keep the scatter, which is flat in ``X``.
+    ``fast=True`` (the fused round) switches to the cumsum+searchsorted
+    search of :mod:`repro.kernels.round_fuse` — still bit-exact, one
+    O(Q log X) pass regardless of width."""
+    if fast:
+        from repro.kernels.round_fuse.ref import first_free_slots
+        return first_free_slots(q_valid, X)
     Q = q_valid.shape[0]
     if X > _FREE_SCAN_MAX:
         return jnp.nonzero(~q_valid, size=X, fill_value=Q)[0]
@@ -261,34 +269,44 @@ def _first_free(q_valid: jnp.ndarray, X: int) -> jnp.ndarray:
     return out
 
 
-def _enqueue(state: EngineState, sid, vals, ts, mask, tenant=None
-             ) -> Tuple[EngineState, jnp.ndarray]:
+def _enqueue(state: EngineState, sid, vals, ts, mask, tenant=None,
+             fast_free: bool = False) -> Tuple[EngineState, jnp.ndarray]:
     """Append masked items into free queue slots; returns #dropped.  With
     ``tenant`` (an (X,) tenant id per item), overflow drops are also
     charged to ``state.tenant_dropped_overflow`` so contention for queue
-    slots is attributable per tenant."""
+    slots is attributable per tenant.
+
+    Sequence numbers advance *on accept*: a dropped item consumes no
+    ``state.seq`` ticket, so a later redelivery of a dead-lettered SU
+    receives a fresh (higher) sequence number rather than leaving a
+    permanent hole — the FIFO tie-break order stays dense (the ordering
+    contract is documented in docs/OPERATIONS.md)."""
     Q = state.q_valid.shape[0]
     X = sid.shape[0]
-    free = _first_free(state.q_valid, X)                         # first X free
+    free = _first_free(state.q_valid, X, fast_free)              # first X free
     rank = jnp.cumsum(mask.astype(jnp.int32)) - 1               # slot per item
     dest = jnp.where(mask, free[jnp.clip(rank, 0, X - 1)], Q)   # Q -> dropped
     ok = mask & (dest < Q)
     dest = jnp.where(ok, dest, Q)
-    seq_nos = state.seq + jnp.cumsum(mask.astype(jnp.int32))
+    seq_nos = state.seq + jnp.cumsum(ok.astype(jnp.int32))
     new = state._replace(
         q_sid=state.q_sid.at[dest].set(sid, mode="drop"),
         q_vals=state.q_vals.at[dest].set(vals, mode="drop"),
         q_ts=state.q_ts.at[dest].set(ts, mode="drop"),
         q_seq=state.q_seq.at[dest].set(seq_nos, mode="drop"),
         q_valid=state.q_valid.at[dest].set(True, mode="drop"),
-        seq=state.seq + mask.sum(dtype=jnp.int32),
+        seq=state.seq + ok.sum(dtype=jnp.int32),
     )
     drop_mask = mask & ~ok
     if tenant is not None:
+        # negative ids are the "unknown owner" sentinel — chargeable to no
+        # tenant, and .at[] would *wrap* them (mode="drop" only drops
+        # indices beyond the dim), so they must be routed to the pad row
         T = state.tenant_dropped_overflow.shape[0]
         new = new._replace(
             tenant_dropped_overflow=new.tenant_dropped_overflow.at[
-                jnp.where(drop_mask, tenant, T)].add(1, mode="drop"))
+                jnp.where(drop_mask & (tenant >= 0), tenant, T)
+            ].add(1, mode="drop"))
     new = dlq_append(new, sid, vals, ts, tenant, DLQ_OVERFLOW, drop_mask)
     return new, drop_mask.sum(dtype=jnp.int32)
 
@@ -393,6 +411,7 @@ def ingest_phase(state: EngineState, stats: Dict[str, jnp.ndarray],
                  tenant_of_row: Optional[jnp.ndarray] = None,  # (B,)
                  quota: Optional[jnp.ndarray] = None,          # (T,)
                  burst: Optional[jnp.ndarray] = None,          # (T,)
+                 fast_free: bool = False,
                  ) -> Tuple[EngineState, Dict[str, jnp.ndarray]]:
     """Phase 0: admit external SUs — store last-value/timestamp, enqueue for
     dispatch.  On a single device ``row == q_sid == sid``; the sharded step
@@ -450,7 +469,7 @@ def ingest_phase(state: EngineState, stats: Dict[str, jnp.ndarray],
     stats["ingest_stale"] += (i_live & ~i_keep).sum(dtype=jnp.int32)
     stats["ingest_coalesced"] += (i_keep & ~i_win).sum(dtype=jnp.int32)
     state, dropped = _enqueue(state, q_sid, ingest.vals, ingest.ts, i_win,
-                              tenant_of_row)
+                              tenant_of_row, fast_free)
     stats["dropped_overflow"] += dropped
     stats["queued_in"] += i_win.sum(dtype=jnp.int32) - dropped
     return state, stats
@@ -463,6 +482,7 @@ def store_and_emit(cfg: EngineConfig, tables: DeviceTables,
                    order: jnp.ndarray,      # (W,) coalescing tie key (trigger)
                    new_vals: jnp.ndarray, ts_out: jnp.ndarray,
                    keep: jnp.ndarray, n_rows: int,
+                   fast_free: bool = False,
                    ) -> Tuple[EngineState, Dict[str, jnp.ndarray], SinkBatch]:
     """Stage 4: coalesce winners, store them, account per-tenant emissions,
     re-enqueue winners that have subscribers, and fill the external sink
@@ -497,7 +517,7 @@ def store_and_emit(cfg: EngineConfig, tables: DeviceTables,
     # charged to the emitting stream's owner tenant)
     fanout_more = win & (tables.out_count[rows] > 0)
     state, dropped = _enqueue(state, emit_sid, new_vals, ts_out, fanout_more,
-                              tables.tenant[rows])
+                              tables.tenant[rows], fast_free)
     stats["dropped_overflow"] += dropped
     stats["enqueued"] += fanout_more.sum(dtype=jnp.int32)
     stats["queued_in"] += fanout_more.sum(dtype=jnp.int32) - dropped
@@ -634,12 +654,87 @@ def make_step(
     fanout_fn: Callable = fanout_reference,
     donate: bool = True,
     jit: bool = True,
+    fused: Optional[bool] = None,
 ) -> Callable:
     """Build the jitted engine round.  ``fanout_fn`` may be swapped for the
     Pallas `stream_dispatch` kernel; both compute stage 1.  ``jit=False``
-    returns the raw step (the dry-run jits it with explicit shardings)."""
+    returns the raw step (the dry-run jits it with explicit shardings).
+
+    ``fused`` selects the round-fusion plane (default:
+    ``cfg.fused_round``): stages 1-3 run as one
+    :func:`repro.kernels.round_fuse.ops.fused_stages` operation — a single
+    Pallas megakernel on TPU — instead of the staged pop / ``fanout_fn`` /
+    ``process_work_items`` sequence.  Bit-identical for fusable programs;
+    the host engine falls back to the staged step otherwise
+    (``StreamEngine`` checks fusability at every program edit).  The fused
+    pop *is* the packed scheduler, so ``scheduler="lexsort"`` always takes
+    the staged path."""
     N, C, F = cfg.n_streams, cfg.channels, cfg.max_out
     B, W = cfg.batch, cfg.work
+    if fused is None:
+        fused = cfg.fused_round
+    fused = fused and cfg.scheduler == "packed"
+
+    if fused:
+        from repro.kernels.round_fuse.ops import fused_stages
+        from repro.kernels.round_fuse.ref import RegLayout
+        layout = RegLayout.from_cfg(cfg)
+        T = cfg.n_tenants
+
+        def step(tables: DeviceTables, state: EngineState,
+                 ingest: IngestBatch) -> Tuple[EngineState, SinkBatch]:
+            stats = dict(state.stats)
+
+            # ---- phase 0: ingest external SUs ---------------------------
+            i_sid = jnp.clip(ingest.sid, 0, N - 1)
+            state, stats = ingest_phase(state, stats, ingest, i_sid, i_sid,
+                                        tables.active[i_sid], N,
+                                        tables.tenant[i_sid],
+                                        tables.quota, tables.burst,
+                                        fast_free=True)
+
+            # ---- stages 1-3 fused: pop, fan-out, fetch+VM, window gate --
+            prio_slot = tables.priority[state.q_sid]
+            t_slot = jnp.clip(tables.tenant[state.q_sid], 0, T - 1)
+            w_slot = tables.weight[t_slot]
+            take, (e_sid, e_vals, e_ts, e_pop, e_act), wi_t, applied = \
+                fused_stages(prio_slot, state.q_seq, state.q_valid, t_slot,
+                             w_slot, state.q_sid, state.q_vals, state.q_ts,
+                             B, tables.out_table, tables.in_table,
+                             tables.progs, tables.consts,
+                             tables.is_composite, tables.active,
+                             state.values, state.timestamps, layout)
+            state = state._replace(
+                q_valid=state.q_valid.at[take].set(False))
+            stats["popped"] += e_pop.sum(dtype=jnp.int32)
+            # events whose stream was revoked while queued drop here
+            stats["dropped_revoked"] += (e_pop & ~e_act).sum(dtype=jnp.int32)
+            state = dlq_append(state, e_sid, e_vals, e_ts,
+                               tables.tenant[jnp.clip(e_sid, 0, N - 1)],
+                               DLQ_REVOKED, e_pop & ~e_act)
+            new_vals, ts_out, live, keep, keep_ts, passf, badf = applied
+            stats["processed"] += live.sum(dtype=jnp.int32)
+            stats["discarded_stale"] += (live & ~keep_ts).sum(dtype=jnp.int32)
+            stats["filtered"] += \
+                (live & keep_ts & ~passf).sum(dtype=jnp.int32)
+            stats["nonfinite"] += (badf & (wi_t >= 0)).sum(dtype=jnp.int32)
+
+            # ---- stage 4: store, trigger actions and emit ---------------
+            t = jnp.clip(wi_t, 0, N - 1)
+            wi_src = jnp.repeat(e_sid, F)
+            state, stats, sink = store_and_emit(cfg, tables, state, stats,
+                                                t, t, wi_src, new_vals,
+                                                ts_out, keep, N,
+                                                fast_free=True)
+            state = state._replace(
+                stats=stats,
+                tenant_queued=tenant_occupancy(state, tables.tenant,
+                                               cfg.n_tenants))
+            return state, sink
+
+        if not jit:
+            return step
+        return jax.jit(step, donate_argnums=(1,) if donate else ())
 
     def step(tables: DeviceTables, state: EngineState, ingest: IngestBatch
              ) -> Tuple[EngineState, SinkBatch]:
@@ -864,6 +959,7 @@ def make_superstep(
     fanout_fn: Callable = fanout_reference,
     donate: bool = True,
     jit: bool = True,
+    fused: Optional[bool] = None,
 ) -> Callable:
     """Fuse K engine rounds into one compiled ``lax.scan``.  Signature:
     ``superstep(tables, state, ring) -> (state, spool, ring)``.
@@ -875,7 +971,7 @@ def make_superstep(
     Like the round itself, the program is static — tables are arguments,
     so admission edits applied *between* supersteps never retrace it."""
     assert K >= 1
-    step = make_step(cfg, fanout_fn, jit=False)
+    step = make_step(cfg, fanout_fn, jit=False, fused=fused)
     B, C = cfg.batch, cfg.channels
     P = cfg.spool_slots(K)
 
@@ -907,11 +1003,17 @@ class StreamEngine:
         self.tables = DeviceTables.from_host(registry.build_tables(priority))
         self.state = init_state(self.cfg)
         self._fanout_fn = fanout_fn
-        # compiled-closure cache (layout key -> step + per-K supersteps);
-        # it survives resize morphs, so revisiting a shard count re-uses
-        # the already-jitted programs instead of recompiling
+        # round-fusion fallback plane: per-row fusability bitmap mirrored
+        # host-side (updated at every program edit) — the fused path runs
+        # only while *every* admitted program is fusable
+        self._refresh_fusable()
+        # compiled-closure cache (layout key -> per-path step + per-K
+        # supersteps); it survives resize morphs, so revisiting a shard
+        # count re-uses the already-jitted programs instead of recompiling
         self._fn_cache: Dict = {}
-        self._compiled_for("single", lambda: make_step(self.cfg, fanout_fn))
+        self._compiled_for(
+            "single", lambda fused: make_step(self.cfg, fanout_fn,
+                                              fused=fused))
         self._pending: List[List] = []  # [sid, vals, ts, ring_slot | None]
         self.admission_rejected = 0     # host-side churn rejection counter
         self._ring: Optional[IngestRing] = None
@@ -949,7 +1051,12 @@ class StreamEngine:
         """At most one pending SU *per stream* per round (preserving order),
         so successive updates of one device are processed per-SU like the
         paper's runtime; same-stream bursts forced into one batch would be
-        coalesced to the newest (counted in ``coalesced``)."""
+        coalesced to the newest (counted in ``coalesced``).
+
+        The batch is returned as host numpy arrays: the jitted step's
+        dispatch ships them in one C++-side transfer, which is several
+        times cheaper per round than four eager ``device_put`` calls
+        (the per-round ingress overhead is visible at benchmark rates)."""
         B, C = self.cfg.batch, self.cfg.channels
         sid = np.zeros((B,), np.int32)
         vals = np.zeros((B, C), np.float32)
@@ -960,8 +1067,7 @@ class StreamEngine:
             sid[i], vals[i], ts[i], valid[i] = s, v, t, True
             if slot is not None:        # consumed via the per-round API:
                 self._release_ring_slot(slot)  # release its staged ring slot
-        return IngestBatch(jnp.asarray(sid), jnp.asarray(vals),
-                           jnp.asarray(ts), jnp.asarray(valid))
+        return IngestBatch(sid, vals, ts, valid)
 
     def _release_ring_slot(self, slot) -> None:
         """Return a consumed SU's staged ingest-ring slot to the free
@@ -1029,20 +1135,60 @@ class StreamEngine:
         resize back to a previously seen shard count then costs zero
         recompilation.  ``key`` identifies everything the closures are
         specialized on (shard count, per-shard row count, mesh devices);
-        ``build`` makes the round-step closure on a miss.  The per-K
-        superstep dict is cached by reference, so lazily-built K variants
-        are kept across revisits too."""
+        ``build(fused)`` makes the round-step closure on a miss.  Each
+        layout caches both round paths ("fused"/"staged") independently
+        and lazily — :meth:`_select_path` flips between them without
+        recompiling.  The per-K superstep dict is cached by reference, so
+        lazily-built K variants are kept across revisits too."""
         cache = self.__dict__.setdefault("_fn_cache", {})
         hit = cache.get(key)
         if hit is None:
-            hit = cache[key] = (build(), {})
+            hit = cache[key] = {}
+        self._fn_layout = (hit, build)
+        self._select_path()
+
+    def _round_path(self) -> str:
+        """The round implementation the next dispatch takes: "fused" while
+        the config asks for fusion and every admitted program is fusable
+        (no transcendental opcodes — ``round_fuse.ref.FUSABLE_OPS``),
+        "staged" otherwise.  Re-evaluated at every program edit; both
+        paths are bit-identical, so the flip is invisible to results."""
+        return "fused" if (self.cfg.fused_round
+                           and self.cfg.scheduler == "packed"
+                           and bool(self._fusable_rows.all())) else "staged"
+
+    def _select_path(self) -> None:
+        """(Re)install the compiled step/supersteps of the current round
+        path for the current layout — a dict lookup when the path was
+        built before, one jit trace when not."""
+        layout, build = self._fn_layout
+        self._path = path = self._round_path()
+        hit = layout.get(path)
+        if hit is None:
+            hit = layout[path] = (build(path == "fused"), {})
         self._step, self._superstep_fns = hit
+
+    def _refresh_fusable(self) -> None:
+        """Recompute the per-row fusability bitmap from the device program
+        table (full-table edits: construction, rewire, restore, resize)
+        and re-select the round path."""
+        from repro.kernels.round_fuse.ref import fusable_rows
+        self._fusable_rows = fusable_rows(np.asarray(self.tables.progs))
+        if "_fn_layout" in self.__dict__:
+            self._select_path()
+
+    def _note_program(self, row: Tuple, prog: Optional[np.ndarray]) -> None:
+        """Single-row fusability update (admit/revoke/swap program edits);
+        ``prog=None`` marks the row trivially fusable (empty program)."""
+        from repro.kernels.round_fuse.ref import fusable_program
+        self._fusable_rows[row] = fusable_program(prog)
+        self._select_path()
 
     def _superstep_fn(self, K: int) -> Callable:
         fn = self._superstep_fns.get(K)
         if fn is None:
             fn = self._superstep_fns[K] = make_superstep(
-                self.cfg, K, self._fanout_fn)
+                self.cfg, K, self._fanout_fn, fused=self._path == "fused")
         return fn
 
     def _stage(self, K: int) -> None:
@@ -1213,6 +1359,7 @@ class StreamEngine:
             np.int32(priority), prog, consts)
         for src_sid in s.inputs:      # same append order as build_tables
             self._admit_edge(s.sid, src_sid)
+        self._note_program(self._table_row(s.sid), prog)
         self._sync_admitted()
 
     def revoke_stream(self, stream) -> None:
@@ -1226,6 +1373,7 @@ class StreamEngine:
         self.tables, self.state = admission.revoke_stream(
             self.tables, self.state, self._table_row(sid), np.int32(sid))
         self._released_sid(sid)
+        self._note_program(self._table_row(sid), None)  # row is NOPs now
         self._sync_admitted()
 
     def admit_subscription(self, stream, new_input, *,
@@ -1289,6 +1437,7 @@ class StreamEngine:
         prog, consts = self.registry._compile_stream(s)
         self.tables = admission.swap_program(
             self.tables, self._table_row(s.sid), prog, consts)
+        self._note_program(self._table_row(s.sid), prog)
         self._sync_admitted()
 
     def inject_code(self, stream, transform: Dict[str, str],
@@ -1308,6 +1457,7 @@ class StreamEngine:
             self.registry.build_tables(prio))._replace(
                 weight=self.tables.weight, quota=self.tables.quota,
                 burst=self.tables.burst)
+        self._refresh_fusable()
 
     # ----------------------------------------------------- tenant QoS plane
     @staticmethod
@@ -1419,6 +1569,7 @@ class StreamEngine:
         self.admission_rejected = int(meta.get("admission_rejected", 0))
         self._steps_done = int(meta.get("steps_done", 0))
         self._ring, self._ring_K, self._ring_free = None, 0, []
+        self._refresh_fusable()
         self._sync_admitted()
 
     def checkpoint_to(self, path: Optional[str], keep: int = 3):
@@ -1616,7 +1767,8 @@ class StreamEngine:
                          "_occupancy", "_spare", "_holes", "_ring_dirty"):
                 self.__dict__.pop(attr, None)
             self._compiled_for(
-                "single", lambda: make_step(self.cfg, self._fanout_fn))
+                "single", lambda fused: make_step(self.cfg, self._fanout_fn,
+                                                  fused=fused))
             self._install_snapshot(arrays, meta)
         return self
 

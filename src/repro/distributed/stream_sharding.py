@@ -472,6 +472,7 @@ def make_shard_round(
     cfg: EngineConfig,
     plan: ShardPlan,
     fanout_fn: Callable = fanout_reference,
+    fused: Optional[bool] = None,
 ) -> Callable:
     """The per-shard round body shared by the sharded step and the sharded
     superstep scan: ``round(tables, gmap, state, ingest) -> (state, sink)``
@@ -485,12 +486,29 @@ def make_shard_round(
     are counted into ``stats["dropped_overflow"]`` on the *sending* shard
     (never silently lost); ``cfg.exchange_slots=0`` sizes the buffers so
     overflow is impossible, the precondition for bit-exact equivalence
-    with the single-device engine."""
+    with the single-device engine.
+
+    ``fused`` (default ``cfg.fused_round``) selects the round-fusion
+    plane: the exchange compaction and the post-exchange fetch+VM+window
+    stage run through :mod:`repro.kernels.round_fuse` (Pallas kernels on
+    TPU, fused jnp refs elsewhere) and the enqueue sites use the fast
+    free-slot search.  The ``all_to_all`` itself cannot fuse — it is the
+    shard boundary — so the sharded fusion is the two halves around it.
+    Bit-identical to the staged body for fusable programs only (the host
+    engine checks and falls back)."""
     n_shards, n_local = plan.n_shards, plan.n_local
     N, C, F = cfg.n_streams, cfg.channels, cfg.max_out
     B, W = cfg.batch, cfg.work
     E = cfg.exchange                      # per-destination exchange rows
     WR = n_shards * E                     # work width after the exchange
+    if fused is None:
+        fused = cfg.fused_round
+    fused = fused and cfg.scheduler == "packed"
+    if fused:
+        from repro.kernels.round_fuse.ops import (apply_programs,
+                                                  exchange_compact)
+        from repro.kernels.round_fuse.ref import RegLayout
+        layout = RegLayout.from_cfg(cfg)
 
     def shard_round(tables: DeviceTables, gmap: GlobalMaps,
                     state: EngineState, ingest: IngestBatch):
@@ -508,7 +526,8 @@ def make_shard_round(
         state, stats = ingest_phase(state, stats, ingest, l_sid, g_sid,
                                     tables.active[l_sid], n_local,
                                     tables.tenant[l_sid],
-                                    tables.quota, tables.burst)
+                                    tables.quota, tables.burst,
+                                    fast_free=fused)
 
         # ---- pop this round's events (weighted-fair; global sids) -------
         state, (e_sid, e_vals, e_ts, e_pop) = _pop(
@@ -548,23 +567,27 @@ def make_shard_round(
         # results — bit-identical to the former per-destination loop).
         t_safe = jnp.clip(wi_t, 0, N - 1)
         dest_shard = jnp.where(wi_valid, gmap.sid_to_shard[t_safe], n_shards)
-        payload_i = jnp.stack([wi_t, wi_src, wi_ts], axis=-1)        # (W, 3)
-        routed = dest_shard < n_shards
-        d_safe = jnp.clip(dest_shard, 0, n_shards - 1)
-        # unrouted items must not consume bucket ranks: mask them out of
-        # the running count (their own rank reads garbage but is gated)
-        onehot = routed[:, None] & \
-            (d_safe[:, None] == jnp.arange(n_shards)[None, :])       # (W, D)
-        rank = jnp.take_along_axis(
-            jnp.cumsum(onehot.astype(jnp.int32), axis=0) - 1,
-            d_safe[:, None], axis=1)[:, 0]                           # (W,)
-        fits = routed & (rank < E)
-        slot = jnp.where(fits, d_safe * E + rank, n_shards * E)
-        xi = jnp.full((n_shards * E, 3), -1, jnp.int32) \
-            .at[slot].set(payload_i, mode="drop").reshape(n_shards, E, 3)
-        xf = jnp.zeros((n_shards * E, C), jnp.float32) \
-            .at[slot].set(wi_vals, mode="drop").reshape(n_shards, E, C)
-        x_drop = routed & ~fits
+        if fused:
+            xi, xf, x_drop = exchange_compact(wi_t, wi_src, wi_ts, wi_vals,
+                                              dest_shard, n_shards, E)
+        else:
+            payload_i = jnp.stack([wi_t, wi_src, wi_ts], axis=-1)    # (W, 3)
+            routed = dest_shard < n_shards
+            d_safe = jnp.clip(dest_shard, 0, n_shards - 1)
+            # unrouted items must not consume bucket ranks: mask them out
+            # of the running count (their own rank reads garbage, gated)
+            onehot = routed[:, None] & \
+                (d_safe[:, None] == jnp.arange(n_shards)[None, :])   # (W, D)
+            rank = jnp.take_along_axis(
+                jnp.cumsum(onehot.astype(jnp.int32), axis=0) - 1,
+                d_safe[:, None], axis=1)[:, 0]                       # (W,)
+            fits = routed & (rank < E)
+            slot = jnp.where(fits, d_safe * E + rank, n_shards * E)
+            xi = jnp.full((n_shards * E, 3), -1, jnp.int32) \
+                .at[slot].set(payload_i, mode="drop").reshape(n_shards, E, 3)
+            xf = jnp.zeros((n_shards * E, C), jnp.float32) \
+                .at[slot].set(wi_vals, mode="drop").reshape(n_shards, E, C)
+            x_drop = routed & ~fits
         stats["dropped_overflow"] += x_drop.sum(dtype=jnp.int32)
         # exchange-slot contention is attributable per tenant: charge the
         # *emitting* stream's owner (wi_src is always owned by this shard,
@@ -590,17 +613,32 @@ def make_shard_round(
         r_loc = jnp.clip(gmap.sid_to_local[rt_safe], 0, n_local - 1)
 
         # ---- stages 2 + 3 (shared with the single-device engine) --------
-        new_vals, ts_out, live, keep, counts = process_work_items(
-            cfg, tables, r_loc, rt_safe, r_src, r_vals, r_ts, r_valid,
-            values_by_sid, ts_by_sid)
-        for k, v in counts.items():
-            stats[k] = stats[k] + v
+        if fused:
+            new_vals, ts_out, live, keep, keep_ts, passf, badf = \
+                apply_programs(layout, tables.in_table, tables.progs,
+                               tables.consts, tables.is_composite,
+                               tables.active, r_loc, rt_safe, r_src,
+                               r_vals, r_ts, r_valid,
+                               values_by_sid, ts_by_sid)
+            stats["processed"] += live.sum(dtype=jnp.int32)
+            stats["discarded_stale"] += \
+                (live & ~keep_ts).sum(dtype=jnp.int32)
+            stats["filtered"] += \
+                (live & keep_ts & ~passf).sum(dtype=jnp.int32)
+            stats["nonfinite"] += (badf & r_valid).sum(dtype=jnp.int32)
+        else:
+            new_vals, ts_out, live, keep, counts = process_work_items(
+                cfg, tables, r_loc, rt_safe, r_src, r_vals, r_ts, r_valid,
+                values_by_sid, ts_by_sid)
+            for k, v in counts.items():
+                stats[k] = stats[k] + v
 
         # ---- stage 4: store into this shard's slice ----------------------
         # (winners re-enqueue into the local queue; the sink is per-shard)
         state, stats, sink = store_and_emit(cfg, tables, state, stats,
                                             r_loc, r_t, r_src, new_vals,
-                                            ts_out, keep, n_local)
+                                            ts_out, keep, n_local,
+                                            fast_free=fused)
         state = state._replace(
             stats=stats,
             tenant_queued=tenant_occupancy(state, tenant_by_sid,
@@ -616,13 +654,14 @@ def make_sharded_step(
     mesh: Mesh,
     fanout_fn: Callable = fanout_reference,
     donate: bool = True,
+    fused: Optional[bool] = None,
 ) -> Callable:
     """Build the jitted sharded round.  Signature:
     ``step(tables, gmap, state, ingest) -> (state, sink)`` where every
     ``tables``/``state``/``ingest``/``sink`` leaf carries a leading
     ``(n_shards,)`` axis and ``gmap`` is replicated.  The round body (and
     its exchange-stage semantics) is :func:`make_shard_round`."""
-    shard_round = make_shard_round(cfg, plan, fanout_fn)
+    shard_round = make_shard_round(cfg, plan, fanout_fn, fused)
 
     def shard_step(tables: DeviceTables, gmap: GlobalMaps,
                    state: EngineState, ingest: IngestBatch):
@@ -648,6 +687,7 @@ def make_sharded_superstep(
     K: int,
     fanout_fn: Callable = fanout_reference,
     donate: bool = True,
+    fused: Optional[bool] = None,
 ) -> Callable:
     """Fuse K sharded rounds into one compiled ``lax.scan`` under
     ``shard_map`` — the exchange stage (and its collectives) runs *inside*
@@ -657,7 +697,7 @@ def make_sharded_superstep(
     everything but the replicated ``gmap``; ``ring`` holds each shard's
     pre-routed (K, B) ingest grid (see ``ShardedStreamEngine._stage``)."""
     assert K >= 1
-    shard_round = make_shard_round(cfg, plan, fanout_fn)
+    shard_round = make_shard_round(cfg, plan, fanout_fn, fused)
     B, C = cfg.batch, cfg.channels
     P_spool = cfg.spool_slots(K)
 
@@ -709,10 +749,12 @@ class ShardedStreamEngine(StreamEngine):
         self.state = jax.device_put(sharded_init_state(cfg, self.plan),
                                     self._shard)
         self._fanout_fn = fanout_fn
+        self._refresh_fusable()
         self._fn_cache = {}
         self._compiled_for(
             self._layout_key(self.plan),
-            lambda: make_sharded_step(cfg, self.plan, self.mesh, fanout_fn))
+            lambda fused: make_sharded_step(cfg, self.plan, self.mesh,
+                                            fanout_fn, fused=fused))
         self._pending: List[List] = []
         self.admission_rejected = 0
         self._ring = None
@@ -812,7 +854,8 @@ class ShardedStreamEngine(StreamEngine):
         fn = self._superstep_fns.get(K)
         if fn is None:
             fn = self._superstep_fns[K] = make_sharded_superstep(
-                self.cfg, self.plan, self.mesh, K, self._fanout_fn)
+                self.cfg, self.plan, self.mesh, K, self._fanout_fn,
+                fused=self._path == "fused")
         return fn
 
     def _release_ring_slot(self, slot) -> None:
@@ -1099,8 +1142,10 @@ class ShardedStreamEngine(StreamEngine):
             if L != old.n_local:    # step closures are shaped by n_local
                 self._compiled_for(
                     self._layout_key(new_plan),
-                    lambda: make_sharded_step(self.cfg, new_plan, self.mesh,
-                                              self._fanout_fn))
+                    lambda fused: make_sharded_step(self.cfg, new_plan,
+                                                    self.mesh,
+                                                    self._fanout_fn,
+                                                    fused=fused))
         self.plan = new_plan
         qos = self.tables            # weight/quota/burst survive re-lowers
         self.tables = jax.device_put(
@@ -1109,6 +1154,7 @@ class ShardedStreamEngine(StreamEngine):
             self._shard)
         self.gmap = jax.device_put(GlobalMaps.build(prio, new_plan),
                                    self._repl)
+        self._refresh_fusable()
         self._ring_dirty = True         # plan rebuilt: void the ring cache
         self._init_slots()
 
@@ -1172,8 +1218,9 @@ class ShardedStreamEngine(StreamEngine):
                 or plan.n_shards != old.n_shards:
             self._compiled_for(
                 self._layout_key(plan),
-                lambda: make_sharded_step(self.cfg, plan, self.mesh,
-                                          self._fanout_fn))
+                lambda fused: make_sharded_step(self.cfg, plan, self.mesh,
+                                                self._fanout_fn,
+                                                fused=fused))
         self.plan = plan
         self.gmap = GlobalMaps(**{
             f: jnp.asarray(arrays[f"gmap/{f}"])

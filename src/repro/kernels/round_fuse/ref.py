@@ -1,0 +1,296 @@
+"""Pure-jnp references for the fused round: the CPU fallback and the
+bit-exactness oracle of :mod:`repro.kernels.round_fuse.kernel`.
+
+Every function here mirrors the staged engine round *instruction for
+instruction* — ``pop_dispatch_ref`` is ``sched_pop`` + the engine's
+stage-1 expansion, ``apply_programs_ref`` is
+``engine.process_work_items`` with the reduced-branch VM, and
+``exchange_compact_ref`` is the sharded step's ranked-scatter
+compaction lifted verbatim.  The differential suites
+(tests/test_round_fuse.py) hold the fused round to bit-identity with
+the staged round through these refs, and tests/test_kernels.py holds
+the Pallas kernels to bit-identity with them.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import consistency, program as pvm
+from repro.kernels.sched_pop.ref import sched_pop_ref
+
+INT_MIN = np.iinfo(np.int32).min + 1
+INT_MAX = np.iinfo(np.int32).max
+
+
+# --------------------------------------------------------------------------
+# free-slot search
+# --------------------------------------------------------------------------
+
+def first_free_slots(q_valid: jnp.ndarray, X: int) -> jnp.ndarray:
+    """Indices of the first ``X`` free queue slots, ascending, padded with
+    ``Q`` — ``jnp.nonzero(~q_valid, size=X, fill_value=Q)[0]`` bit-exactly.
+
+    The running count of free slots is non-decreasing in steps of one, so
+    the k-th free slot is the first index where the count reaches ``k`` —
+    one O(Q) cumsum plus an O(X log Q) ``searchsorted`` replaces either
+    the O(Q·X) selection loop or the O(Q) scatter ``nonzero`` lowers to
+    (~6x cheaper than both at the engine's enqueue widths)."""
+    Q = q_valid.shape[0]
+    free_count = jnp.cumsum((~q_valid).astype(jnp.int32))
+    want = jnp.arange(1, X + 1, dtype=jnp.int32)
+    return jnp.searchsorted(free_count, want, side="left").astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# fusable program classes
+# --------------------------------------------------------------------------
+
+# The fused round inlines the VM as a vectorized select tree: every branch
+# is evaluated for every lane, so the transcendental opcodes — multi-pass
+# VPU approximations whose Mosaic lowering is also not guaranteed
+# bit-identical to XLA's — would dominate the tree and put the kernel ==
+# staged oracle at risk.  Programs touching them take the staged path.
+NON_FUSABLE_OPS = frozenset({
+    pvm.OP_EXP, pvm.OP_LOG, pvm.OP_SIN, pvm.OP_COS, pvm.OP_POW, pvm.OP_TANH,
+})
+FUSABLE_OPS = frozenset(range(pvm.N_OPS)) - NON_FUSABLE_OPS
+
+
+def fusable_rows(progs) -> np.ndarray:
+    """Host-side fusability bitmap over the leading dims of a ``progs``
+    table (``(N, L, 4)`` or ``(n_shards, n_local, L, 4)`` int32): True
+    where every instruction's opcode is in :data:`FUSABLE_OPS` *and*
+    in-range.  (``execute`` clips out-of-range opcodes — ``op > 28``
+    runs TANH, ``op < 0`` runs NOP — so rows carrying them are
+    conservatively left to the staged path rather than re-modelling the
+    clip.)"""
+    p = np.asarray(progs)
+    ops = p[..., 0]
+    bad = (ops < 0) | (ops >= pvm.N_OPS)
+    for op in NON_FUSABLE_OPS:
+        bad |= ops == op
+    # negative dst/a/b operands *wrap* in XLA's gather/scatter; the
+    # kernel's one-hot indexing drops them instead, so such (malformed)
+    # bytecode stays on the staged path too.  Over-range operands clamp
+    # identically on both paths and are fine.
+    bad |= (p[..., 1:] < 0).any(axis=-1)
+    return ~bad.any(axis=-1)
+
+
+def fusable_program(prog) -> bool:
+    """Fusability of one host ``(L, 4)`` bytecode table (True for ``None``:
+    a vacated row is the all-NOP program)."""
+    if prog is None:
+        return True
+    return bool(fusable_rows(np.asarray(prog)[None]).all())
+
+
+class RegLayout(NamedTuple):
+    """The VM register-file layout of one engine config, detached from
+    :class:`~repro.core.config.EngineConfig` so the kernels package
+    stays importable without the core (the ``sched_pop`` convention)."""
+    max_in: int
+    channels: int
+    n_regs: int
+    reg_inputs: int
+    reg_prev: int
+    reg_ts: int
+    reg_trigger: int
+    reg_result: int
+    reg_pref: int
+    reg_postf: int
+
+    @classmethod
+    def from_cfg(cls, cfg) -> "RegLayout":
+        return cls(*(getattr(cfg, f) for f in cls._fields))
+
+
+# --------------------------------------------------------------------------
+# reduced-branch VM
+# --------------------------------------------------------------------------
+
+# Non-fusable opcodes collapse onto branch 0 (NOP).  For fusable programs
+# the remap is the identity on every opcode they can contain, so the
+# switch selects the very same branch callables as ``pvm.execute`` —
+# bit-identical — while the select tree ``lax.switch`` lowers to under
+# vmap evaluates 23 branches instead of 29, with the six transcendental
+# ones (the expensive multi-pass VPU approximations) gone.
+_KEPT_OPS = sorted(FUSABLE_OPS)
+_REMAP = np.zeros((pvm.N_OPS,), np.int32)
+for _new, _old in enumerate(_KEPT_OPS):
+    _REMAP[_old] = _new
+_FUSED_BRANCHES = [pvm._BRANCHES[_old] for _old in _KEPT_OPS]
+
+
+def execute_fused(prog: jnp.ndarray, consts: jnp.ndarray,
+                  regs: jnp.ndarray) -> jnp.ndarray:
+    """``pvm.execute`` restricted to :data:`FUSABLE_OPS` — bit-identical
+    to it for fusable programs, NOP on the transcendental opcodes."""
+    remap = jnp.asarray(_REMAP)
+
+    def body(i, regs):
+        op, dst, a, b = prog[i, 0], prog[i, 1], prog[i, 2], prog[i, 3]
+        val = jax.lax.switch(
+            remap[jnp.clip(op, 0, pvm.N_OPS - 1)],
+            _FUSED_BRANCHES,
+            regs, a, b, consts, dst,
+        )
+        return regs.at[dst].set(val)
+
+    return jax.lax.fori_loop(0, prog.shape[0], body, regs)
+
+
+def execute_batch_fused(progs: jnp.ndarray, consts: jnp.ndarray,
+                        regs: jnp.ndarray) -> jnp.ndarray:
+    """Batched :func:`execute_fused` with a *dynamic* trip count: the
+    loop runs only through the last non-NOP instruction anywhere in the
+    batch.  A NOP step writes ``regs[dst]`` back unchanged, so skipping
+    the all-NOP tail is bit-exact — and since user expressions compile
+    short and NOP-pad to ``prog_len``, the tail is usually most of the
+    program.  The bound is a traced scalar computed from the gathered
+    programs (runtime data), so it changes per round without retracing."""
+    L = progs.shape[1]
+    remap = jnp.asarray(_REMAP)
+    nonnop = progs[..., 0] != pvm.OP_NOP                  # (W, L)
+    l_eff = jnp.max(jnp.where(
+        nonnop, jnp.arange(1, L + 1, dtype=jnp.int32)[None, :], 0))
+
+    step = jax.vmap(
+        lambda prog_i, consts, regs: (
+            lambda op, dst, a, b: regs.at[dst].set(jax.lax.switch(
+                remap[jnp.clip(op, 0, pvm.N_OPS - 1)],
+                _FUSED_BRANCHES, regs, a, b, consts, dst))
+        )(prog_i[0], prog_i[1], prog_i[2], prog_i[3]))
+
+    def body(i, regs):
+        return step(progs[:, i, :], consts, regs)
+
+    return jax.lax.fori_loop(0, l_eff, body, regs)
+
+
+# --------------------------------------------------------------------------
+# stage 1: pop + dispatch
+# --------------------------------------------------------------------------
+
+def pop_dispatch_ref(prio_slot, seq, valid, t_slot, w_slot, sid, vals, ts,
+                     batch: int, out_table, active):
+    """Packed top-``batch`` pop + revocation gate + subscriber fan-out.
+
+    Per-slot planes as in ``sched_pop_ref``; ``out_table`` (N, F) /
+    ``active`` (N,) are indexed by the popped sids (clipped).  Returns
+    ``(take, (e_sid, e_vals, e_ts, e_pop, e_act), (wi_t, wi_src,
+    wi_vals, wi_ts))`` — the winning slots, the popped events with
+    their row-active mask, and the (W,)-flat work items with targets
+    already masked to -1 for invalid/revoked events (so ``wi_t >= 0``
+    is the staged round's ``wi_valid`` bit-exactly)."""
+    take = sched_pop_ref(jnp.asarray(prio_slot, jnp.int32),
+                         jnp.asarray(seq, jnp.int32), valid,
+                         jnp.asarray(t_slot, jnp.int32),
+                         jnp.asarray(w_slot, jnp.int32), batch)
+    e_sid, e_vals, e_ts, e_pop = sid[take], vals[take], ts[take], valid[take]
+    N, F = out_table.shape
+    e_row = jnp.clip(e_sid, 0, N - 1)
+    e_act = active[e_row]
+    e_valid = e_pop & e_act
+    targets = out_table[e_row]                             # (B, F)
+    tvalid = (targets >= 0) & e_valid[:, None]
+    wi_t = jnp.where(tvalid, targets, -1).reshape(batch * F)
+    wi_src = jnp.repeat(e_sid, F)
+    wi_vals = jnp.repeat(e_vals, F, axis=0)
+    wi_ts = jnp.repeat(e_ts, F)
+    return take, (e_sid, e_vals, e_ts, e_pop, e_act), \
+        (wi_t, wi_src, wi_vals, wi_ts)
+
+
+# --------------------------------------------------------------------------
+# stages 2 + 3: fetch + reduced VM + Listing-2 window gate
+# --------------------------------------------------------------------------
+
+def apply_programs_ref(
+    layout: RegLayout,
+    in_table, progs, consts, is_composite, active,  # per-row tables
+    rows,                       # (W,) row into the tables (clipped, in-range)
+    t_sid,                      # (W,) target id in values_by_sid's space
+    wi_src, wi_vals, wi_ts, wi_valid,
+    values_by_sid, timestamps_by_sid,
+):
+    """``engine.process_work_items`` with :func:`execute_batch_fused`:
+    co-input fetch, program apply, and the Listing-2 window/consistency
+    verdict, returning the raw masks instead of summed counts (the
+    kernel path computes the same masks in VMEM; both callers reduce
+    them identically).  Returns ``(new_vals, ts_out, live, keep,
+    keep_ts, passf, badf)`` where ``passf = pref & postf`` and ``badf``
+    flags non-finite VM results (pre-``wi_valid``)."""
+    W = t_sid.shape[0]
+    M, C = layout.max_in, layout.channels
+    n_sid = timestamps_by_sid.shape[0]
+
+    in_row = in_table[rows]                          # (W, M)
+    in_valid = in_row >= 0
+    src_safe = jnp.clip(in_row, 0, n_sid - 1)
+    vals_in = values_by_sid[src_safe]                # (W, M, C)
+    ts_in = jnp.where(in_valid, timestamps_by_sid[src_safe], INT_MIN)
+    trig = jnp.argmax((in_row == wi_src[:, None]) & in_valid, axis=1)
+    widx = jnp.arange(W)
+    vals_in = vals_in.at[widx, trig].set(wi_vals)    # fresh SU overrides
+    ts_in = ts_in.at[widx, trig].set(wi_ts)
+    prev_vals = values_by_sid[t_sid]
+    prev_ts = timestamps_by_sid[t_sid]
+
+    regs = jnp.zeros((W, layout.n_regs), jnp.float32)
+    flat_in = jnp.where(in_valid[..., None], vals_in, 0.0).reshape(W, M * C)
+    regs = regs.at[:, layout.reg_inputs:layout.reg_inputs + M * C].set(flat_in)
+    regs = regs.at[:, layout.reg_prev:layout.reg_prev + C].set(prev_vals)
+    regs = regs.at[:, layout.reg_ts].set(wi_ts.astype(jnp.float32))
+    regs = regs.at[:, layout.reg_trigger].set(trig.astype(jnp.float32))
+    regs_out = execute_batch_fused(progs[rows], consts[rows], regs)
+    new_vals = regs_out[:, layout.reg_result:layout.reg_result + C]
+    finite = jnp.isfinite(new_vals)
+    new_vals = jnp.where(finite, new_vals, 0.0)
+    passf = (regs_out[:, layout.reg_pref] != 0.0) \
+        & (regs_out[:, layout.reg_postf] != 0.0)
+
+    keep_ts = consistency.keep_mask(wi_ts, prev_ts)
+    ts_out = consistency.output_timestamp(wi_ts, prev_ts, ts_in, in_valid)
+    live = wi_valid & is_composite[rows] & active[rows]
+    keep = live & keep_ts & passf
+    badf = (~finite).any(axis=-1)
+    return new_vals, ts_out, live, keep, keep_ts, passf, badf
+
+
+# --------------------------------------------------------------------------
+# sharded exchange compaction
+# --------------------------------------------------------------------------
+
+def exchange_compact_ref(wi_t, wi_src, wi_ts, wi_vals, dest_shard,
+                         n_shards: int, slots: int):
+    """Rank-and-scatter work items into fixed per-destination exchange
+    buckets — the sharded step's compaction, verbatim: per destination
+    shard, items keep array order; item ``rank >= slots`` overflows.
+    ``dest_shard`` is (W,) with ``n_shards`` marking unrouted lanes.
+    Returns ``(xi, xf, x_drop)``: (D, E, 3) int32 ``(t, src, ts)``
+    (-1-padded), (D, E, C) float32 payloads, and the (W,) overflow
+    mask."""
+    W = wi_t.shape[0]
+    C = wi_vals.shape[1]
+    routed = dest_shard < n_shards
+    d_safe = jnp.clip(dest_shard, 0, n_shards - 1)
+    onehot = routed[:, None] \
+        & (d_safe[:, None] == jnp.arange(n_shards)[None, :])
+    rank = jnp.take_along_axis(
+        jnp.cumsum(onehot.astype(jnp.int32), axis=0) - 1,
+        d_safe[:, None], axis=1)[:, 0]
+    fits = routed & (rank < slots)
+    slot = jnp.where(fits, d_safe * slots + rank, n_shards * slots)
+    payload = jnp.stack([wi_t, wi_src, wi_ts], axis=-1)    # (W, 3)
+    xi = jnp.full((n_shards * slots, 3), -1, jnp.int32) \
+        .at[slot].set(payload, mode="drop") \
+        .reshape(n_shards, slots, 3)
+    xf = jnp.zeros((n_shards * slots, C), jnp.float32) \
+        .at[slot].set(wi_vals, mode="drop") \
+        .reshape(n_shards, slots, C)
+    return xi, xf, routed & ~fits

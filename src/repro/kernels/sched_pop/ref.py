@@ -59,7 +59,7 @@ def sched_pop_ref(prio, seq, valid, tenant, w_slot, batch: int):
     seq = seq.astype(jnp.int32)
 
     def step(b, carry):
-        take, k1, tag, taken = carry
+        take, k1, tag, pop_ten = carry
         # lexicographic argmin over (k1, tag, seq), first index on ties
         m1 = jnp.min(k1)
         c1 = k1 == m1
@@ -72,20 +72,28 @@ def sched_pop_ref(prio, seq, valid, tenant, w_slot, batch: int):
         t_i = tenant[i]
         w_i = w_slot[i]
         # valid pops of tenant t_i so far (incl. this one) == the static
-        # within-tenant rank of t_i's next head in the lexsort pop
-        cnt = (taken & valid & (tenant == t_i)).sum(dtype=jnp.int32) \
+        # within-tenant rank of t_i's next head in the lexsort pop.  Prior
+        # pops ride in the (batch,)-sized ``pop_ten`` history (valid pops
+        # record their tenant, others the sentinel -2 no tenant id can
+        # match), so the count is an O(batch) reduction, not O(Q).
+        cnt = (pop_ten == t_i).sum(dtype=jnp.int32) \
             + was_valid.astype(jnp.int32)
         rank = jnp.minimum(cnt, RANK_LIM)
         tagval = jnp.where(w_i > 0, rank * FAIR_SCALE
                            // jnp.maximum(w_i, 1), 0)
-        bump = was_valid & (tenant == t_i) & valid & (w_i > 0) & ~taken
+        # slots already taken are excluded via their retired tag: live
+        # tags are clamped strictly below INT_MAX, so the test is exact
+        bump = was_valid & (tenant == t_i) & valid & (w_i > 0) \
+            & (tag != INT_MAX)
         tag = jnp.where(bump, tagval, tag)
         tag = tag.at[i].set(INT_MAX)
         k1 = k1.at[i].set(INT_MAX)
-        return (take.at[b].set(i), k1, tag, taken.at[i].set(True))
+        pop_ten = pop_ten.at[b].set(jnp.where(was_valid, t_i, -2))
+        return (take.at[b].set(i), k1, tag, pop_ten)
 
     take, _, _, _ = jax.lax.fori_loop(
         0, batch, step,
         (jnp.zeros((batch,), jnp.int32), key0,
-         jnp.zeros((Q,), jnp.int32), jnp.zeros((Q,), bool)))
+         jnp.zeros((Q,), jnp.int32),
+         jnp.full((batch,), -2, jnp.int32)))
     return take

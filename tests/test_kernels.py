@@ -153,3 +153,152 @@ def test_window_agg_sweep(N, W, C):
     for key in want:
         np.testing.assert_allclose(np.asarray(got[key]), np.asarray(want[key]),
                                    rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------------------- round fuse
+def _rf_modules():
+    from repro.kernels.round_fuse import kernel as rfk
+    from repro.kernels.round_fuse import ref as rfr
+    return rfk, rfr
+
+
+def _rf_layout(N, C, M, F, B, Q, L, K):
+    from repro.core import EngineConfig
+    from repro.kernels.round_fuse.ref import RegLayout
+    cfg = EngineConfig(n_streams=N, channels=C, max_in=M, max_out=F,
+                       batch=B, queue=Q, prog_len=L, n_consts=K, n_temps=4)
+    return RegLayout.from_cfg(cfg)
+
+
+def _rf_case(Q, N, C, B, F, M, L, K, T, seed):
+    """One adversarial fused-round input set: out-of-range sids, retired
+    slots, revoked rows, inf/NaN/-0.0 payloads, random fusable bytecode."""
+    rfk, rfr = _rf_modules()
+    rng = np.random.default_rng(seed)
+    layout = _rf_layout(N, C, M, F, B, Q, L, K)
+    prio = rng.choice([0, 1, 3, 2**31 - 1], Q).astype(np.int32)
+    seq = rng.integers(-5, 60, Q).astype(np.int32)
+    valid = rng.random(Q) < 0.6
+    tenant = rng.integers(0, T, Q).astype(np.int32)
+    w_slot = rng.choice([0, 1, 2, 7, 2**15], T).astype(np.int32)[tenant]
+    sid = rng.integers(0, N + 4, Q).astype(np.int32)    # some out-of-range
+    vals = rng.standard_normal((Q, C)).astype(np.float32)
+    vals.ravel()[rng.integers(0, Q * C, 3)] = [np.inf, -0.0, np.nan]
+    ts = rng.integers(-50, 50, Q).astype(np.int32)
+    out_table = rng.integers(-1, N, (N, F)).astype(np.int32)
+    in_table = rng.integers(-2, N, (N, M)).astype(np.int32)
+    is_comp = rng.random(N) < 0.7
+    active = rng.random(N) < 0.8
+    values = rng.standard_normal((N, C)).astype(np.float32)
+    values.ravel()[rng.integers(0, N * C, 2)] = [np.nan, -0.0]
+    timestamps = rng.integers(-5, 40, N).astype(np.int32)
+    R = layout.n_regs
+    ops_pool = np.asarray(sorted(rfr.FUSABLE_OPS), np.int32)
+    progs = np.stack([rng.choice(ops_pool, (N, L)),
+                      rng.integers(0, R, (N, L)),
+                      rng.integers(0, R, (N, L)),
+                      rng.integers(0, R, (N, L))], axis=-1).astype(np.int32)
+    consts = rng.standard_normal((N, K)).astype(np.float32)
+    return layout, dict(
+        prio=prio, seq=seq, valid=valid, tenant=tenant, w_slot=w_slot,
+        sid=sid, vals=vals, ts=ts, out_table=out_table, in_table=in_table,
+        is_comp=is_comp, active=active, values=values,
+        timestamps=timestamps, progs=progs, consts=consts)
+
+
+def _bits_equal(name, a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    assert a.shape == b.shape and a.dtype == b.dtype, name
+    np.testing.assert_array_equal(
+        a.view(np.int32) if a.dtype == np.float32 else a,
+        b.view(np.int32) if b.dtype == np.float32 else b,
+        err_msg=name)
+
+
+@pytest.mark.parametrize("Q,N,C,B,F,M,L", [(32, 16, 1, 2, 2, 2, 4),
+                                           (64, 24, 3, 4, 5, 6, 10),
+                                           (200, 40, 4, 8, 3, 4, 12)])
+def test_fused_round_kernel_sweep(Q, N, C, B, F, M, L):
+    rfk, rfr = _rf_modules()
+    K, T = 8, 4
+    layout, c = _rf_case(Q, N, C, B, F, M, L, K, T, seed=Q + N)
+    j = {k: jnp.asarray(v) for k, v in c.items()}
+    take_r, pop_r, wi_r = rfr.pop_dispatch_ref(
+        j["prio"], j["seq"], j["valid"], j["tenant"], j["w_slot"],
+        j["sid"], j["vals"], j["ts"], B, j["out_table"], j["active"])
+    rows = jnp.clip(wi_r[0], 0, N - 1)
+    app_r = rfr.apply_programs_ref(
+        layout, j["in_table"], j["progs"], j["consts"], j["is_comp"],
+        j["active"], rows, rows, wi_r[1], wi_r[2], wi_r[3], wi_r[0] >= 0,
+        j["values"], j["timestamps"])
+    take_k, pop_k, wit_k, app_k = rfk.fused_round_call(
+        j["prio"], j["seq"], j["valid"], j["tenant"], j["w_slot"],
+        j["sid"], j["vals"], j["ts"], B, j["out_table"], j["in_table"],
+        j["progs"], j["consts"], j["is_comp"], j["active"], j["values"],
+        j["timestamps"], layout, interpret=True)
+    _bits_equal("take", take_r, take_k)
+    for i, nm in enumerate(["e_sid", "e_vals", "e_ts", "e_pop", "e_act"]):
+        _bits_equal(nm, pop_r[i], pop_k[i])
+    _bits_equal("wi_t", wi_r[0], wit_k)
+    for i, nm in enumerate(["new_vals", "ts_out", "live", "keep",
+                            "keep_ts", "passf", "badf"]):
+        _bits_equal(nm, app_r[i], app_k[i])
+    # the standalone apply kernel (the sharded round's post-exchange half)
+    app_s = rfk.apply_programs_call(
+        layout, j["in_table"], j["progs"], j["consts"], j["is_comp"],
+        j["active"], rows, rows, wi_r[1], wi_r[2], wi_r[3], wi_r[0] >= 0,
+        j["values"], j["timestamps"], interpret=True)
+    for i, nm in enumerate(["new_vals", "ts_out", "live", "keep",
+                            "keep_ts", "passf", "badf"]):
+        _bits_equal(f"apply/{nm}", app_r[i], app_s[i])
+
+
+@pytest.mark.parametrize("W,D,E,C", [(8, 1, 3, 2), (40, 4, 5, 3),
+                                     (64, 2, 64, 4), (128, 8, 2, 1)])
+def test_exchange_compact_kernel_sweep(W, D, E, C):
+    rfk, rfr = _rf_modules()
+    rng = np.random.default_rng(W * D + E)
+    wi_t = rng.integers(-1, 30, W).astype(np.int32)
+    wi_src = rng.integers(0, 30, W).astype(np.int32)
+    wi_ts = rng.integers(-50, 50, W).astype(np.int32)
+    wi_vals = rng.standard_normal((W, C)).astype(np.float32)
+    wi_vals.ravel()[rng.integers(0, W * C, 2)] = [-0.0, np.inf]
+    dest = np.where(wi_t >= 0, rng.integers(0, D, W), D).astype(np.int32)
+    ref = rfr.exchange_compact_ref(*map(jnp.asarray,
+                                        (wi_t, wi_src, wi_ts, wi_vals, dest)),
+                                   D, E)
+    got = rfk.exchange_compact_call(*map(jnp.asarray,
+                                         (wi_t, wi_src, wi_ts, wi_vals, dest)),
+                                    D, E, interpret=True)
+    for i, nm in enumerate(["xi", "xf", "x_drop"]):
+        _bits_equal(nm, ref[i], got[i])
+
+
+def test_reduced_vm_matches_full_vm_on_fusable_ops():
+    from repro.core import program as pvm
+    rfk, rfr = _rf_modules()
+    rng = np.random.default_rng(7)
+    Wb, L, K, R = 16, 24, 8, 40
+    ops_pool = np.asarray(sorted(rfr.FUSABLE_OPS), np.int32)
+    progs = np.stack([rng.choice(ops_pool, (Wb, L)),
+                      rng.integers(0, R, (Wb, L)),
+                      rng.integers(0, R, (Wb, L)),
+                      rng.integers(0, R, (Wb, L))], axis=-1).astype(np.int32)
+    consts = rng.standard_normal((Wb, K)).astype(np.float32)
+    regs = rng.standard_normal((Wb, R)).astype(np.float32)
+    full = pvm.execute_batch(jnp.asarray(progs), jnp.asarray(consts),
+                             jnp.asarray(regs))
+    red = rfr.execute_batch_fused(jnp.asarray(progs), jnp.asarray(consts),
+                                  jnp.asarray(regs))
+    _bits_equal("vm", full, red)
+
+
+@pytest.mark.parametrize("Q,X", [(16, 1), (64, 5), (64, 64), (100, 130)])
+def test_first_free_slots_matches_nonzero(Q, X):
+    _, rfr = _rf_modules()
+    rng = np.random.default_rng(Q + X)
+    for density in (0.0, 0.5, 0.95, 1.0):
+        qv = jnp.asarray(rng.random(Q) < density)
+        got = rfr.first_free_slots(qv, X)
+        want = jnp.nonzero(~qv, size=X, fill_value=Q)[0].astype(jnp.int32)
+        _bits_equal(f"ff[{density}]", got, want)

@@ -136,3 +136,20 @@ def test_enqueue_overflow_respects_mask_only():
     assert int(dropped) == 1                       # 3 masked, 2 slots
     live = sorted(np.asarray(state.q_sid)[np.asarray(state.q_valid)].tolist())
     assert live == [1, 3]
+
+
+def test_enqueue_seq_advances_on_accept_only():
+    """Dropped items consume no sequence ticket: the FIFO tie-break order
+    stays dense, so a later redelivery of a dead-lettered SU gets a fresh
+    (higher) seq rather than leaving a permanent hole.  Pins the ordering
+    contract documented in docs/OPERATIONS.md."""
+    cfg = _cfg(queue=4, batch=4)
+    state = init_state(cfg)
+    state, d1 = _put(state, [(i, float(i), i + 1) for i in range(3)])
+    assert int(d1) == 0 and int(state.seq) == 3
+    state, d2 = _put(state, [(i + 3, 0.0, i + 10) for i in range(3)])
+    assert int(d2) == 2                 # one slot left: 1 accept, 2 drops
+    assert int(state.seq) == 4          # drops consumed no seq ticket
+    # the accepted tickets are dense 1..4 — no hole where the drops were
+    filled = np.asarray(state.q_valid)
+    assert sorted(np.asarray(state.q_seq)[filled].tolist()) == [1, 2, 3, 4]
