@@ -82,7 +82,7 @@ _TABLE_FILL = {
 # per-stream state-slice fills: last value/timestamp plus the retention
 # ring (a recycled sid must never replay its predecessor's emissions)
 _STATE_FILL = {"values": 0.0, "timestamps": INT_MIN,
-               "ret_vals": 0.0, "ret_ts": 0, "ret_count": 0}
+               "ret_vals": 0.0, "ret_ts": 0, "ret_its": 0, "ret_count": 0}
 
 
 def _clear_row(tables: DeviceTables, row: Tuple) -> DeviceTables:
@@ -151,13 +151,15 @@ def revoke_stream(tables: DeviceTables, state: EngineState, row: Tuple,
     # counter pairing "queued_in" (see engine.STAT_KEYS)
     stats["purged"] = stats["purged"] + hit.sum(axis=-1, dtype=jnp.int32)
     if state.dlq_fill.ndim:         # sharded layout: per-shard spools
-        state = jax.vmap(lambda st, s_, v_, t_, m_: dlq_append(
-            st, s_, v_, t_, jnp.full_like(s_, t_rev), DLQ_REVOKED, m_))(
-                state, state.q_sid, state.q_vals, state.q_ts, hit)
+        state = jax.vmap(lambda st, s_, v_, t_, m_, i_: dlq_append(
+            st, s_, v_, t_, jnp.full_like(s_, t_rev), DLQ_REVOKED, m_,
+            its=i_))(
+                state, state.q_sid, state.q_vals, state.q_ts, hit,
+                state.q_its)
     else:
         state = dlq_append(state, state.q_sid, state.q_vals, state.q_ts,
                            jnp.full_like(state.q_sid, t_rev),
-                           DLQ_REVOKED, hit)
+                           DLQ_REVOKED, hit, its=state.q_its)
     state = _reset_state_row(state, row)._replace(
         q_valid=state.q_valid & ~hit, stats=stats)
     return tables, state
@@ -289,10 +291,10 @@ def set_quota(tables: DeviceTables, state: EngineState, tid, quota, burst
     return tables, state
 
 
-def _requeue_body(state: EngineState, sid, vals, ts, valid, tenant
+def _requeue_body(state: EngineState, sid, vals, ts, valid, tenant, its=None
                   ) -> EngineState:
     """Shared body of :func:`requeue` / :func:`requeue_shard`."""
-    state, dropped = _enqueue(state, sid, vals, ts, valid, tenant)
+    state, dropped = _enqueue(state, sid, vals, ts, valid, tenant, its=its)
     stats = dict(state.stats)
     stats["dropped_overflow"] = stats["dropped_overflow"] + dropped
     stats["replayed"] = stats["replayed"] + \
@@ -303,7 +305,8 @@ def _requeue_body(state: EngineState, sid, vals, ts, valid, tenant
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
-def requeue(state: EngineState, sid, vals, ts, valid, tenant) -> EngineState:
+def requeue(state: EngineState, sid, vals, ts, valid, tenant, its=None
+            ) -> EngineState:
     """Enqueue SUs *directly* into the pending queue — the durability
     plane's replay / dead-letter-redelivery edit.  Bypasses phase 0 (and
     its monotone-timestamp gate), so retained historical SUs survive even
@@ -311,19 +314,21 @@ def requeue(state: EngineState, sid, vals, ts, valid, tenant) -> EngineState:
     consistency still discards them at subscribers that already processed
     them.  Queue overflow drops are counted, charged to ``tenant`` and
     dead-lettered like any enqueue; SUs that land count in
-    ``stats["replayed"]``.  Zero retraces: one trace per pad width."""
-    return _requeue_body(state, sid, vals, ts, valid, tenant)
+    ``stats["replayed"]``.  ``its`` carries each SU's *original* ingest
+    stamp so replayed/redelivered records keep their latency clock.
+    Zero retraces: one trace per pad width."""
+    return _requeue_body(state, sid, vals, ts, valid, tenant, its)
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
-def requeue_shard(state: EngineState, shard, sid, vals, ts, valid, tenant
-                  ) -> EngineState:
+def requeue_shard(state: EngineState, shard, sid, vals, ts, valid, tenant,
+                  its=None) -> EngineState:
     """Sharded :func:`requeue`: apply the edit to shard ``shard``'s state
     slice.  The host routes each item to its owner shard first (``q_sid``
     holds global sids, so the payload arrays travel unchanged).  ``shard``
     is traced — one trace serves every shard."""
     loc = jax.tree.map(lambda x: x[shard], state)
-    loc = _requeue_body(loc, sid, vals, ts, valid, tenant)
+    loc = _requeue_body(loc, sid, vals, ts, valid, tenant, its)
     return jax.tree.map(lambda full, leaf: full.at[shard].set(leaf),
                         state, loc)
 

@@ -95,6 +95,7 @@ class EngineState(NamedTuple):
     q_sid: jnp.ndarray         # (Q,)
     q_vals: jnp.ndarray        # (Q, C)
     q_ts: jnp.ndarray          # (Q,)
+    q_its: jnp.ndarray         # (Q,) ingest stamp (round of first ingest)
     q_seq: jnp.ndarray         # (Q,) FIFO tiebreaker
     q_valid: jnp.ndarray       # (Q,) bool
     seq: jnp.ndarray           # scalar int32
@@ -107,10 +108,12 @@ class EngineState(NamedTuple):
     # default to 0, which keeps every leaf empty and every update a no-op) -
     ret_vals: jnp.ndarray      # (N, Rr, C) per-stream retained emissions
     ret_ts: jnp.ndarray        # (N, Rr) their timestamps
+    ret_its: jnp.ndarray       # (N, Rr) their ingest stamps (replay keeps them)
     ret_count: jnp.ndarray     # (N,) emissions ever retained (ring cursor)
     dlq_sid: jnp.ndarray       # (D,) dead-letter stream ids
     dlq_vals: jnp.ndarray      # (D, C) dead-letter payloads
     dlq_ts: jnp.ndarray        # (D,) dead-letter timestamps
+    dlq_its: jnp.ndarray       # (D,) dead-letter ingest stamps
     dlq_reason: jnp.ndarray    # (D,) drop class (see DLQ_REASONS)
     dlq_tenant: jnp.ndarray    # (D,) charged tenant
     dlq_fill: jnp.ndarray      # scalar int32 spool cursor
@@ -119,31 +122,40 @@ class EngineState(NamedTuple):
 
 class IngestBatch(NamedTuple):
     """One round's external Sensor Updates, padded to ``cfg.batch`` rows
-    (``valid`` masks the live ones); ``ts`` are int32 event timestamps."""
+    (``valid`` masks the live ones); ``ts`` are int32 event timestamps and
+    ``its`` are int32 ingest stamps (the engine's global round counter at
+    ``post()`` time — the latency plane's origin mark)."""
     sid: jnp.ndarray           # (B,)
     vals: jnp.ndarray          # (B, C)
     ts: jnp.ndarray            # (B,)
     valid: jnp.ndarray         # (B,) bool
+    its: jnp.ndarray           # (B,) int32 ingest stamps
 
 
 class SinkBatch(NamedTuple):
     """Per-round external emissions (push to MQTT/STOMP subscribers,
-    model-plane bridge, ...)."""
+    model-plane bridge, ...).  ``its`` carries each record's original
+    ingest stamp back to the host, so ingest->sink latency is read off the
+    sink with zero extra device traffic (``StreamEngine.latency_records``)."""
     sid: jnp.ndarray           # (S,)
     vals: jnp.ndarray          # (S, C)
     ts: jnp.ndarray            # (S,)
     valid: jnp.ndarray         # (S,) bool
+    its: jnp.ndarray           # (S,) int32 ingest stamps
 
 
 class DeadLetter(NamedTuple):
     """One recovered drop, drained from the device dead-letter spool by
     ``StreamEngine.dead_letters()``: the SU's payload, the drop class
-    (a :data:`DLQ_REASONS` name) and the tenant it was charged to."""
+    (a :data:`DLQ_REASONS` name) and the tenant it was charged to.
+    ``its`` preserves the SU's original ingest stamp so redelivery keeps
+    the latency clock honest."""
     sid: int
     vals: np.ndarray
     ts: int
     reason: str
     tenant: int
+    its: int = 0
 
 
 STAT_KEYS = (
@@ -181,6 +193,7 @@ def init_state(cfg: EngineConfig) -> EngineState:
         q_sid=jnp.zeros((Q,), jnp.int32),
         q_vals=jnp.zeros((Q, C), jnp.float32),
         q_ts=jnp.zeros((Q,), jnp.int32),
+        q_its=jnp.zeros((Q,), jnp.int32),
         q_seq=jnp.zeros((Q,), jnp.int32),
         q_valid=jnp.zeros((Q,), bool),
         seq=jnp.zeros((), jnp.int32),
@@ -191,10 +204,12 @@ def init_state(cfg: EngineConfig) -> EngineState:
         tenant_dropped_overflow=jnp.zeros((T,), jnp.int32),
         ret_vals=jnp.zeros((N, Rr, C), jnp.float32),
         ret_ts=jnp.zeros((N, Rr), jnp.int32),
+        ret_its=jnp.zeros((N, Rr), jnp.int32),
         ret_count=jnp.zeros((N,), jnp.int32),
         dlq_sid=jnp.zeros((D,), jnp.int32),
         dlq_vals=jnp.zeros((D, C), jnp.float32),
         dlq_ts=jnp.zeros((D,), jnp.int32),
+        dlq_its=jnp.zeros((D,), jnp.int32),
         dlq_reason=jnp.zeros((D,), jnp.int32),
         dlq_tenant=jnp.zeros((D,), jnp.int32),
         dlq_fill=jnp.zeros((), jnp.int32),
@@ -202,26 +217,31 @@ def init_state(cfg: EngineConfig) -> EngineState:
     )
 
 
-def dlq_append(state: EngineState, sid, vals, ts, tenant, reason: int, mask
-               ) -> EngineState:
+def dlq_append(state: EngineState, sid, vals, ts, tenant, reason: int, mask,
+               its=None) -> EngineState:
     """Spill the masked dropped SUs into the dead-letter spool: payload +
     timestamp + charged tenant + drop-class ``reason`` (a ``DLQ_*`` code),
     appended behind ``dlq_fill``.  The spool saturates — letters beyond
     ``cfg.dlq_slots`` are lost (the ``dropped_*`` stats still count them) —
     and with ``dlq_slots == 0`` this is a Python-level no-op, so the DLQ
     costs nothing when off.  ``tenant=None`` records the sentinel ``-1``
-    (owner unknown at the drop site) rather than charging tenant 0."""
+    (owner unknown at the drop site) rather than charging tenant 0;
+    ``its=None`` records stamp 0 (drop sites that predate the latency
+    plane)."""
     D = state.dlq_sid.shape[0]
     if D == 0:
         return state
     if tenant is None:
         tenant = jnp.full_like(sid, -1)
+    if its is None:
+        its = jnp.zeros_like(sid)
     rank = state.dlq_fill + jnp.cumsum(mask.astype(jnp.int32)) - 1
     dest = jnp.where(mask & (rank < D), rank, D)
     return state._replace(
         dlq_sid=state.dlq_sid.at[dest].set(sid, mode="drop"),
         dlq_vals=state.dlq_vals.at[dest].set(vals, mode="drop"),
         dlq_ts=state.dlq_ts.at[dest].set(ts, mode="drop"),
+        dlq_its=state.dlq_its.at[dest].set(its, mode="drop"),
         dlq_reason=state.dlq_reason.at[dest].set(reason, mode="drop"),
         dlq_tenant=state.dlq_tenant.at[dest].set(tenant, mode="drop"),
         dlq_fill=jnp.minimum(state.dlq_fill + mask.sum(dtype=jnp.int32), D),
@@ -270,11 +290,13 @@ def _first_free(q_valid: jnp.ndarray, X: int, fast: bool = False
 
 
 def _enqueue(state: EngineState, sid, vals, ts, mask, tenant=None,
-             fast_free: bool = False) -> Tuple[EngineState, jnp.ndarray]:
+             fast_free: bool = False, its=None
+             ) -> Tuple[EngineState, jnp.ndarray]:
     """Append masked items into free queue slots; returns #dropped.  With
     ``tenant`` (an (X,) tenant id per item), overflow drops are also
     charged to ``state.tenant_dropped_overflow`` so contention for queue
-    slots is attributable per tenant.
+    slots is attributable per tenant.  ``its`` (an (X,) ingest stamp per
+    item, default zeros) rides along in ``q_its`` — the latency plane.
 
     Sequence numbers advance *on accept*: a dropped item consumes no
     ``state.seq`` ticket, so a later redelivery of a dead-lettered SU
@@ -283,6 +305,8 @@ def _enqueue(state: EngineState, sid, vals, ts, mask, tenant=None,
     contract is documented in docs/OPERATIONS.md)."""
     Q = state.q_valid.shape[0]
     X = sid.shape[0]
+    if its is None:
+        its = jnp.zeros_like(sid)
     free = _first_free(state.q_valid, X, fast_free)              # first X free
     rank = jnp.cumsum(mask.astype(jnp.int32)) - 1               # slot per item
     dest = jnp.where(mask, free[jnp.clip(rank, 0, X - 1)], Q)   # Q -> dropped
@@ -293,6 +317,7 @@ def _enqueue(state: EngineState, sid, vals, ts, mask, tenant=None,
         q_sid=state.q_sid.at[dest].set(sid, mode="drop"),
         q_vals=state.q_vals.at[dest].set(vals, mode="drop"),
         q_ts=state.q_ts.at[dest].set(ts, mode="drop"),
+        q_its=state.q_its.at[dest].set(its, mode="drop"),
         q_seq=state.q_seq.at[dest].set(seq_nos, mode="drop"),
         q_valid=state.q_valid.at[dest].set(True, mode="drop"),
         seq=state.seq + ok.sum(dtype=jnp.int32),
@@ -307,7 +332,8 @@ def _enqueue(state: EngineState, sid, vals, ts, mask, tenant=None,
             tenant_dropped_overflow=new.tenant_dropped_overflow.at[
                 jnp.where(drop_mask & (tenant >= 0), tenant, T)
             ].add(1, mode="drop"))
-    new = dlq_append(new, sid, vals, ts, tenant, DLQ_OVERFLOW, drop_mask)
+    new = dlq_append(new, sid, vals, ts, tenant, DLQ_OVERFLOW, drop_mask,
+                     its=its)
     return new, drop_mask.sum(dtype=jnp.int32)
 
 
@@ -361,7 +387,8 @@ def _pop(state: EngineState, priority_by_sid: jnp.ndarray, batch: int,
 
     ``priority_by_sid``/``tenant_by_sid`` are indexed by whatever id space
     ``q_sid`` uses (global sids in the sharded engine, table rows on a
-    single device)."""
+    single device).  Returns ``(state, (sid, vals, ts, its, valid))`` —
+    ``its`` is each popped SU's ingest stamp (the latency plane)."""
     if scheduler == "packed":
         from repro.kernels.sched_pop.ops import sched_pop
         prio_slot = priority_by_sid[state.q_sid]
@@ -375,6 +402,8 @@ def _pop(state: EngineState, priority_by_sid: jnp.ndarray, batch: int,
         take, popped = sched_pop(prio_slot, state.q_seq, state.q_valid,
                                  t_slot, w_slot, state.q_sid, state.q_vals,
                                  state.q_ts, batch)
+        p_sid, p_vals, p_ts, p_valid = popped
+        popped = (p_sid, p_vals, p_ts, state.q_its[take], p_valid)
         return state._replace(
             q_valid=state.q_valid.at[take].set(False)), popped
     key = jnp.where(state.q_valid, priority_by_sid[state.q_sid], INT_MAX)
@@ -393,7 +422,8 @@ def _pop(state: EngineState, priority_by_sid: jnp.ndarray, batch: int,
         order = order0[reorder]
     take = order[:batch]
     pvalid = state.q_valid[take]
-    popped = (state.q_sid[take], state.q_vals[take], state.q_ts[take], pvalid)
+    popped = (state.q_sid[take], state.q_vals[take], state.q_ts[take],
+              state.q_its[take], pvalid)
     state = state._replace(q_valid=state.q_valid.at[take].set(False))
     return state, popped
 
@@ -445,7 +475,7 @@ def ingest_phase(state: EngineState, stats: Dict[str, jnp.ndarray],
                 jnp.where(shed, t_of, T)].add(1, mode="drop"))
         stats["dropped_quota"] += shed.sum(dtype=jnp.int32)
         state = dlq_append(state, q_sid, ingest.vals, ingest.ts, t_of,
-                           DLQ_QUOTA, shed)
+                           DLQ_QUOTA, shed, its=ingest.its)
     i_keep = i_live & (ingest.ts > state.timestamps[row])
     i_win = consistency.resolve_winners(row, ingest.ts, i_keep, n_rows)
     i_dest = jnp.where(i_win, row, n_rows)
@@ -461,15 +491,17 @@ def ingest_phase(state: EngineState, stats: Dict[str, jnp.ndarray],
                 ingest.vals, mode="drop"),
             ret_ts=state.ret_ts.at[i_dest, slot].set(
                 ingest.ts, mode="drop"),
+            ret_its=state.ret_its.at[i_dest, slot].set(
+                ingest.its, mode="drop"),
             ret_count=state.ret_count.at[i_dest].add(1, mode="drop"))
     stats["ingested"] += ingest.valid.sum(dtype=jnp.int32)
     stats["dropped_revoked"] += (ingest.valid & ~active).sum(dtype=jnp.int32)
     state = dlq_append(state, q_sid, ingest.vals, ingest.ts, tenant_of_row,
-                       DLQ_REVOKED, ingest.valid & ~active)
+                       DLQ_REVOKED, ingest.valid & ~active, its=ingest.its)
     stats["ingest_stale"] += (i_live & ~i_keep).sum(dtype=jnp.int32)
     stats["ingest_coalesced"] += (i_keep & ~i_win).sum(dtype=jnp.int32)
     state, dropped = _enqueue(state, q_sid, ingest.vals, ingest.ts, i_win,
-                              tenant_of_row, fast_free)
+                              tenant_of_row, fast_free, its=ingest.its)
     stats["dropped_overflow"] += dropped
     stats["queued_in"] += i_win.sum(dtype=jnp.int32) - dropped
     return state, stats
@@ -483,12 +515,18 @@ def store_and_emit(cfg: EngineConfig, tables: DeviceTables,
                    new_vals: jnp.ndarray, ts_out: jnp.ndarray,
                    keep: jnp.ndarray, n_rows: int,
                    fast_free: bool = False,
+                   wi_its: Optional[jnp.ndarray] = None,
                    ) -> Tuple[EngineState, Dict[str, jnp.ndarray], SinkBatch]:
     """Stage 4: coalesce winners, store them, account per-tenant emissions,
     re-enqueue winners that have subscribers, and fill the external sink
     buffer.  ``rows`` index this engine's state slice (== ``emit_sid`` on a
-    single device; shard-local rows in the sharded step)."""
+    single device; shard-local rows in the sharded step).  ``wi_its``
+    ((W,) per-item ingest stamps, default zeros) is carried unchanged into
+    the retention ring, the fan-out re-enqueue and the sink buffer — the
+    latency plane's device-side thread."""
     S, C = cfg.sink_buffer, cfg.channels
+    if wi_its is None:
+        wi_its = jnp.zeros_like(emit_sid)
     win = consistency.resolve_winners(rows, ts_out, keep, n_rows, order=order)
     stats["coalesced"] += (keep & ~win).sum(dtype=jnp.int32)
     stats["emitted"] += win.sum(dtype=jnp.int32)
@@ -510,6 +548,7 @@ def store_and_emit(cfg: EngineConfig, tables: DeviceTables,
         state = state._replace(
             ret_vals=state.ret_vals.at[dest, slot].set(new_vals, mode="drop"),
             ret_ts=state.ret_ts.at[dest, slot].set(ts_out, mode="drop"),
+            ret_its=state.ret_its.at[dest, slot].set(wi_its, mode="drop"),
             ret_count=state.ret_count.at[dest].add(1, mode="drop"),
         )
 
@@ -517,7 +556,7 @@ def store_and_emit(cfg: EngineConfig, tables: DeviceTables,
     # charged to the emitting stream's owner tenant)
     fanout_more = win & (tables.out_count[rows] > 0)
     state, dropped = _enqueue(state, emit_sid, new_vals, ts_out, fanout_more,
-                              tables.tenant[rows], fast_free)
+                              tables.tenant[rows], fast_free, its=wi_its)
     stats["dropped_overflow"] += dropped
     stats["enqueued"] += fanout_more.sum(dtype=jnp.int32)
     stats["queued_in"] += fanout_more.sum(dtype=jnp.int32) - dropped
@@ -531,6 +570,7 @@ def store_and_emit(cfg: EngineConfig, tables: DeviceTables,
                                                           mode="drop"),
         ts=jnp.zeros((S,), jnp.int32).at[sdest].set(ts_out, mode="drop"),
         valid=jnp.zeros((S,), bool).at[sdest].set(True, mode="drop"),
+        its=jnp.zeros((S,), jnp.int32).at[sdest].set(wi_its, mode="drop"),
     )
     return state, stats, sink
 
@@ -704,6 +744,10 @@ def make_step(
                              tables.progs, tables.consts,
                              tables.is_composite, tables.active,
                              state.values, state.timestamps, layout)
+            # the ingest stamps of the popped slots ride outside the kernel:
+            # `take` is the same slot selection the staged _pop returns, so
+            # this gather keeps the two paths bit-identical
+            e_its = state.q_its[take]
             state = state._replace(
                 q_valid=state.q_valid.at[take].set(False))
             stats["popped"] += e_pop.sum(dtype=jnp.int32)
@@ -711,7 +755,7 @@ def make_step(
             stats["dropped_revoked"] += (e_pop & ~e_act).sum(dtype=jnp.int32)
             state = dlq_append(state, e_sid, e_vals, e_ts,
                                tables.tenant[jnp.clip(e_sid, 0, N - 1)],
-                               DLQ_REVOKED, e_pop & ~e_act)
+                               DLQ_REVOKED, e_pop & ~e_act, its=e_its)
             new_vals, ts_out, live, keep, keep_ts, passf, badf = applied
             stats["processed"] += live.sum(dtype=jnp.int32)
             stats["discarded_stale"] += (live & ~keep_ts).sum(dtype=jnp.int32)
@@ -722,10 +766,12 @@ def make_step(
             # ---- stage 4: store, trigger actions and emit ---------------
             t = jnp.clip(wi_t, 0, N - 1)
             wi_src = jnp.repeat(e_sid, F)
+            wi_its = jnp.repeat(e_its, F)
             state, stats, sink = store_and_emit(cfg, tables, state, stats,
                                                 t, t, wi_src, new_vals,
                                                 ts_out, keep, N,
-                                                fast_free=True)
+                                                fast_free=True,
+                                                wi_its=wi_its)
             state = state._replace(
                 stats=stats,
                 tenant_queued=tenant_occupancy(state, tables.tenant,
@@ -748,7 +794,7 @@ def make_step(
                                     tables.quota, tables.burst)
 
         # ---- pop this round's events (weighted-fair across tenants) -----
-        state, (e_sid, e_vals, e_ts, e_pop) = _pop(
+        state, (e_sid, e_vals, e_ts, e_its, e_pop) = _pop(
             state, tables.priority, B, tables.tenant, tables.weight,
             cfg.scheduler)
         stats["popped"] += e_pop.sum(dtype=jnp.int32)
@@ -758,7 +804,7 @@ def make_step(
         stats["dropped_revoked"] += (e_pop & ~e_act).sum(dtype=jnp.int32)
         state = dlq_append(state, e_sid, e_vals, e_ts,
                            tables.tenant[jnp.clip(e_sid, 0, N - 1)],
-                           DLQ_REVOKED, e_pop & ~e_act)
+                           DLQ_REVOKED, e_pop & ~e_act, its=e_its)
 
         # ---- stage 1: subscriber dispatching ----------------------------
         # The engine applies the stale check in process_work_items'
@@ -772,6 +818,7 @@ def make_step(
         wi_src = jnp.repeat(e_sid, F)
         wi_vals = jnp.repeat(e_vals, F, axis=0)
         wi_ts = jnp.repeat(e_ts, F)
+        wi_its = jnp.repeat(e_its, F)
         t = jnp.clip(wi_t, 0, N - 1)
 
         # ---- stages 2 + 3: fetch, transform, filter ----------------------
@@ -784,7 +831,7 @@ def make_step(
         # ---- stage 4: store, trigger actions and emit ---------------------
         state, stats, sink = store_and_emit(cfg, tables, state, stats,
                                             t, t, wi_src, new_vals, ts_out,
-                                            keep, N)
+                                            keep, N, wi_its=wi_its)
         state = state._replace(
             stats=stats,
             tenant_queued=tenant_occupancy(state, tables.tenant,
@@ -815,6 +862,7 @@ class IngestRing(NamedTuple):
     sid: jnp.ndarray      # (R,)
     vals: jnp.ndarray     # (R, C)
     ts: jnp.ndarray       # (R,)
+    its: jnp.ndarray      # (R,) ingest stamps (latency plane)
     rnd: jnp.ndarray      # (R,) target round this superstep; >= K = carried
     pos: jnp.ndarray      # (R,) column within the (K, B) grid row
     valid: jnp.ndarray    # (R,) bool — slot holds a pending SU
@@ -831,7 +879,9 @@ class SinkSpool(NamedTuple):
     sid: jnp.ndarray      # (P,)
     vals: jnp.ndarray     # (P, C)
     ts: jnp.ndarray       # (P,)
-    rnd: jnp.ndarray      # (P,)
+    its: jnp.ndarray      # (P,) ingest stamps (latency plane)
+    rnd: jnp.ndarray      # (P,) scan-local round; superstep-global round is
+    #                       engine._last_base + rnd (see latency_records)
     fill: jnp.ndarray     # scalar int32 cursor
 
 
@@ -843,6 +893,7 @@ def init_ring(cfg: EngineConfig, K: int) -> IngestRing:
         sid=jnp.zeros((R,), jnp.int32),
         vals=jnp.zeros((R, C), jnp.float32),
         ts=jnp.zeros((R,), jnp.int32),
+        its=jnp.zeros((R,), jnp.int32),
         rnd=jnp.full((R,), K, jnp.int32),
         pos=jnp.zeros((R,), jnp.int32),
         valid=jnp.zeros((R,), bool),
@@ -854,12 +905,13 @@ def _init_spool(P: int, C: int) -> SinkSpool:
         sid=jnp.zeros((P,), jnp.int32),
         vals=jnp.zeros((P, C), jnp.float32),
         ts=jnp.zeros((P,), jnp.int32),
+        its=jnp.zeros((P,), jnp.int32),
         rnd=jnp.zeros((P,), jnp.int32),
         fill=jnp.zeros((), jnp.int32),
     )
 
 
-def _stage_ring(ring: IngestRing, w_slot, w_sid, w_vals, w_ts,
+def _stage_ring(ring: IngestRing, w_slot, w_sid, w_vals, w_ts, w_its,
                 rnd, pos, valid) -> IngestRing:
     """Unjitted :func:`stage_ring` body — the sharded engine vmaps it
     over the shard axis (one staging edit for every shard's ring slice
@@ -868,19 +920,21 @@ def _stage_ring(ring: IngestRing, w_slot, w_sid, w_vals, w_ts,
         sid=ring.sid.at[w_slot].set(w_sid, mode="drop"),
         vals=ring.vals.at[w_slot].set(w_vals, mode="drop"),
         ts=ring.ts.at[w_slot].set(w_ts, mode="drop"),
+        its=ring.its.at[w_slot].set(w_its, mode="drop"),
         rnd=jnp.asarray(rnd), pos=jnp.asarray(pos),
         valid=jnp.asarray(valid),
     )
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
-def stage_ring(ring: IngestRing, w_slot, w_sid, w_vals, w_ts,
+def stage_ring(ring: IngestRing, w_slot, w_sid, w_vals, w_ts, w_its,
                rnd, pos, valid) -> IngestRing:
     """The one host->device edit per superstep boundary: scatter newly
     posted SU payloads into free ring slots (``w_*`` are (R,)-padded;
     ``w_slot == R`` entries drop) and rewrite every slot's routing tag.
     Carried-over slots keep their payloads — only tags travel again."""
-    return _stage_ring(ring, w_slot, w_sid, w_vals, w_ts, rnd, pos, valid)
+    return _stage_ring(ring, w_slot, w_sid, w_vals, w_ts, w_its,
+                       rnd, pos, valid)
 
 
 def ring_grid(ring: IngestRing, K: int, B: int, C: int) -> IngestBatch:
@@ -898,6 +952,8 @@ def ring_grid(ring: IngestRing, K: int, B: int, C: int) -> IngestBatch:
             .at[cell].set(ring.ts, mode="drop").reshape(K, B),
         valid=jnp.zeros((K * B,), bool)
             .at[cell].set(use, mode="drop").reshape(K, B),
+        its=jnp.zeros((K * B,), jnp.int32)
+            .at[cell].set(ring.its, mode="drop").reshape(K, B),
     )
 
 
@@ -915,6 +971,7 @@ def spool_append(spool: SinkSpool, sink: SinkBatch, k
         sid=spool.sid.at[dest].set(sink.sid, mode="drop"),
         vals=spool.vals.at[dest].set(sink.vals, mode="drop"),
         ts=spool.ts.at[dest].set(sink.ts, mode="drop"),
+        its=spool.its.at[dest].set(sink.its, mode="drop"),
         rnd=spool.rnd.at[dest].set(k, mode="drop"),
         fill=jnp.minimum(spool.fill + add.sum(dtype=jnp.int32), P),
     ), over
@@ -944,7 +1001,7 @@ def scan_rounds(round_fn: Callable, state: EngineState, ring: IngestRing,
         s_ten = None if tenant_by_sid is None else tenant_by_sid[
             jnp.clip(sink.sid, 0, tenant_by_sid.shape[0] - 1)]
         st = dlq_append(st, sink.sid, sink.vals, sink.ts, s_ten,
-                        DLQ_SPOOL, over)
+                        DLQ_SPOOL, over, its=sink.its)
         return (st, sp), None
 
     (state, spool), _ = jax.lax.scan(
@@ -1014,8 +1071,14 @@ class StreamEngine:
         self._compiled_for(
             "single", lambda fused: make_step(self.cfg, fanout_fn,
                                               fused=fused))
-        self._pending: List[List] = []  # [sid, vals, ts, ring_slot | None]
+        self._pending: List[List] = []  # [sid, vals, ts, ring_slot|None, its]
         self.admission_rejected = 0     # host-side churn rejection counter
+        # latency plane: the engine's global round counter (rounds ever run)
+        # stamps each post()ed SU; _last_base is its value just before the
+        # most recent round()/superstep() — spool-local round tags offset
+        # from it to recover the superstep-global emission round
+        self._rounds_done = 0
+        self._last_base = 0
         self._ring: Optional[IngestRing] = None
         self._ring_K = 0
         self._ring_free: List[int] = []
@@ -1024,13 +1087,23 @@ class StreamEngine:
         self._steps_done = 0
 
     # -------------------------------------------------------------- ingest
-    def post(self, stream, values: Sequence[float], ts: int) -> None:
-        """API ingress: a Web Object posts a Sensor Update (paper §III)."""
+    def post(self, stream, values: Sequence[float], ts: int,
+             its: Optional[int] = None) -> None:
+        """API ingress: a Web Object posts a Sensor Update (paper §III).
+
+        ``its`` is the SU's ingest stamp for the latency plane — by default
+        the engine's global round counter at post time, so ingest->sink
+        latency is measured in engine rounds.  Re-submission paths
+        (dead-letter redelivery, the serving bridge's response post) pass
+        the *original* stamp so the latency clock keeps running across the
+        detour."""
         sid = stream.sid if hasattr(stream, "sid") else int(stream)
         v = np.zeros((self.cfg.channels,), np.float32)
         v[: len(values)] = values
+        if its is None:
+            its = self._rounds_done
         # 4th field: the SU's ingest-ring slot once its payload is shipped
-        self._pending.append([sid, v, int(ts), None])
+        self._pending.append([sid, v, int(ts), None, int(its)])
 
     @staticmethod
     def _select_wave(pending: List[List], B: int) -> Tuple[List, List]:
@@ -1062,12 +1135,13 @@ class StreamEngine:
         vals = np.zeros((B, C), np.float32)
         ts = np.zeros((B,), np.int32)
         valid = np.zeros((B,), bool)
+        its = np.zeros((B,), np.int32)
         take, self._pending = self._select_wave(self._pending, B)
-        for i, (s, v, t, slot) in enumerate(take):
-            sid[i], vals[i], ts[i], valid[i] = s, v, t, True
+        for i, (s, v, t, slot, stamp) in enumerate(take):
+            sid[i], vals[i], ts[i], valid[i], its[i] = s, v, t, True, stamp
             if slot is not None:        # consumed via the per-round API:
                 self._release_ring_slot(slot)  # release its staged ring slot
-        return IngestBatch(sid, vals, ts, valid)
+        return IngestBatch(sid, vals, ts, valid, its)
 
     def _release_ring_slot(self, slot) -> None:
         """Return a consumed SU's staged ingest-ring slot to the free
@@ -1078,7 +1152,9 @@ class StreamEngine:
     def round(self) -> SinkBatch:
         """Run one four-stage engine round: ship the pending ingest batch,
         dispatch the compiled step, return the round's external sink."""
+        self._last_base = self._rounds_done
         self.state, sink = self._step(self.tables, self.state, self._take_ingest())
+        self._rounds_done += 1
         self._maybe_checkpoint()
         return sink
 
@@ -1226,8 +1302,10 @@ class StreamEngine:
         w_sid = np.zeros((R,), np.int32)
         w_vals = np.zeros((R, C), np.float32)
         w_ts = np.zeros((R,), np.int32)
+        w_its = np.zeros((R,), np.int32)
         for j, e in enumerate(writes):
-            w_slot[j], w_sid[j], w_vals[j], w_ts[j] = e[3], e[0], e[1], e[2]
+            w_slot[j], w_sid[j], w_vals[j], w_ts[j], w_its[j] = \
+                e[3], e[0], e[1], e[2], e[4]
         rnd = np.full((R,), K, np.int32)
         pos = np.zeros((R,), np.int32)
         valid = np.zeros((R,), bool)
@@ -1237,7 +1315,7 @@ class StreamEngine:
             if e[3] is not None:
                 valid[e[3]] = True      # carried overflow stays resident
         self._ring = stage_ring(self._ring, w_slot, w_sid, w_vals, w_ts,
-                                rnd, pos, valid)
+                                w_its, rnd, pos, valid)
         self._ring_free += [e[3] for e, _k, _i in assigned]
 
     def superstep(self, K: Optional[int] = None) -> SinkSpool:
@@ -1246,7 +1324,9 @@ class StreamEngine:
         feed it to the serving bridge's ``pump_spool``)."""
         K = K or self.cfg.superstep
         self._stage(K)
+        self._last_base = self._rounds_done
         spool = self._run_superstep(K)
+        self._rounds_done += K
         self._maybe_checkpoint()
         return spool
 
@@ -1265,6 +1345,7 @@ class StreamEngine:
         sid = np.asarray(spool.sid)
         vals = np.asarray(spool.vals)
         ts = np.asarray(spool.ts)
+        its = np.asarray(spool.its)
         rnd = np.asarray(spool.rnd)
         fill = int(spool.fill)
         K = K or self._ring_K or (int(rnd[:fill].max()) + 1 if fill else 1)
@@ -1274,14 +1355,63 @@ class StreamEngine:
             b_vals = np.zeros((S, C), np.float32)
             b_ts = np.zeros((S,), np.int32)
             b_valid = np.zeros((S,), bool)
+            b_its = np.zeros((S,), np.int32)
             idx = np.nonzero(rnd[:fill] == k)[0]
             n = len(idx)
             b_sid[:n], b_vals[:n], b_ts[:n] = sid[idx], vals[idx], ts[idx]
+            b_its[:n] = its[idx]
             b_valid[:n] = True
             # host arrays: the spool was already read back, consumers read
             # these with np.asarray — no device round-trip
-            sinks.append(SinkBatch(b_sid, b_vals, b_ts, b_valid))
+            sinks.append(SinkBatch(b_sid, b_vals, b_ts, b_valid, b_its))
         return sinks
+
+    def latency_records(self, source, base: Optional[int] = None
+                        ) -> Dict[str, np.ndarray]:
+        """Per-record ingest->sink latency readback — the latency plane's
+        host endpoint.  ``source`` is a :class:`SinkSpool` (one superstep), a
+        :class:`SinkBatch` (one round), or a list of either; ``base`` is
+        the engine-global round index of the source's *first* round
+        (default: ``_last_base``, i.e. the most recent
+        ``round()``/``superstep()`` call).  Returns flat host arrays
+        ``{"sid", "tenant", "its", "round", "latency"}`` over the valid
+        records: ``round`` is the superstep-global emission round
+        (``base + scan-local spool round`` — NOT the scan-local tag, which
+        restarts at 0 every superstep), ``latency = round - its`` in engine
+        rounds, and ``tenant`` resolves through the registry (``-1`` for
+        unregistered sids).  Pure readback of arrays the sink already
+        carries: zero extra device traffic, zero retraces."""
+        if base is None:
+            base = self._last_base
+        sources = source if isinstance(source, list) else [source]
+        batches: List[Tuple[SinkBatch, int]] = []   # (batch, emission round)
+        for src in sources:
+            if hasattr(src, "fill"):                # a SinkSpool
+                for k, b in enumerate(self.spool_sinks(src)):
+                    batches.append((b, base + k))
+                base += self._ring_K or 1
+            else:                                   # a SinkBatch
+                batches.append((src, base))
+                base += 1
+        t_of = np.full((self.cfg.n_streams,), -1, np.int32)
+        for s in self.registry.streams:
+            if s is not None:
+                t_of[s.sid] = s.tenant
+        out = {k: [] for k in ("sid", "tenant", "its", "round", "latency")}
+        for b, rnd in batches:
+            sid = np.asarray(b.sid).reshape(-1)
+            its = np.asarray(b.its).reshape(-1)
+            valid = np.asarray(b.valid).reshape(-1)
+            idx = np.nonzero(valid)[0]
+            s = sid[idx].astype(np.int32)
+            i = its[idx].astype(np.int32)
+            out["sid"].append(s)
+            out["tenant"].append(t_of[np.clip(s, 0, t_of.shape[0] - 1)])
+            out["its"].append(i)
+            out["round"].append(np.full(idx.shape, rnd, np.int32))
+            out["latency"].append(np.full(idx.shape, rnd, np.int32) - i)
+        return {k: (np.concatenate(v) if v else np.zeros((0,), np.int32))
+                for k, v in out.items()}
 
     # ------------------------------------------------- dynamic admission
     # Live topology churn: every method below mutates the running engine's
@@ -1543,10 +1673,13 @@ class StreamEngine:
             if self._pending else np.zeros((0, C), np.float32))
         arrays["pending/ts"] = np.array(
             [e[2] for e in self._pending], np.int32)
+        arrays["pending/its"] = np.array(
+            [e[4] for e in self._pending], np.int32)
         meta = {"format": 1, "kind": "single",
                 "registry": self.registry.to_snapshot(),
                 "admission_rejected": self.admission_rejected,
-                "steps_done": self._steps_done}
+                "steps_done": self._steps_done,
+                "rounds_done": self._rounds_done}
         return arrays, meta
 
     def _install_snapshot(self, arrays: Dict[str, np.ndarray],
@@ -1563,11 +1696,17 @@ class StreamEngine:
         self.state = EngineState(**st)
         p_sid, p_vals, p_ts = (arrays["pending/sid"], arrays["pending/vals"],
                                arrays["pending/ts"])
+        p_its = arrays.get("pending/its")
+        if p_its is None:               # pre-latency-plane snapshot
+            p_its = np.zeros_like(p_sid)
         # ring slots are process-local; restored SUs re-stage from here
         self._pending = [[int(p_sid[i]), np.array(p_vals[i], np.float32),
-                          int(p_ts[i]), None] for i in range(p_sid.shape[0])]
+                          int(p_ts[i]), None, int(p_its[i])]
+                         for i in range(p_sid.shape[0])]
         self.admission_rejected = int(meta.get("admission_rejected", 0))
         self._steps_done = int(meta.get("steps_done", 0))
+        self._rounds_done = int(meta.get("rounds_done", 0))
+        self._last_base = self._rounds_done
         self._ring, self._ring_K, self._ring_free = None, 0, []
         self._refresh_fusable()
         self._sync_admitted()
@@ -1610,15 +1749,17 @@ class StreamEngine:
             return []
         vals = np.asarray(self.state.dlq_vals)
         ts = np.asarray(self.state.dlq_ts)
+        its = np.asarray(self.state.dlq_its)
         reason = np.asarray(self.state.dlq_reason)
         tenant = np.asarray(self.state.dlq_tenant)
         fill = np.atleast_1d(np.asarray(self.state.dlq_fill))
         if sid.ndim == 1:
-            sid, vals, ts = sid[None], vals[None], ts[None]
+            sid, vals, ts, its = sid[None], vals[None], ts[None], its[None]
             reason, tenant = reason[None], tenant[None]
         letters = [
             DeadLetter(int(sid[s, i]), np.array(vals[s, i]), int(ts[s, i]),
-                       DLQ_REASONS[int(reason[s, i])], int(tenant[s, i]))
+                       DLQ_REASONS[int(reason[s, i])], int(tenant[s, i]),
+                       int(its[s, i]))
             for s in range(sid.shape[0]) for i in range(int(fill[s]))]
         if clear and letters:
             from repro.core import admission
@@ -1643,8 +1784,8 @@ class StreamEngine:
                 and self.registry.streams[lt.sid] is not None]
         for lt in live:
             if lt.reason == "quota":
-                self.post(lt.sid, lt.vals, lt.ts)
-        self._requeue_batch([(lt.sid, lt.vals, lt.ts, lt.tenant)
+                self.post(lt.sid, lt.vals, lt.ts, its=lt.its)
+        self._requeue_batch([(lt.sid, lt.vals, lt.ts, lt.tenant, lt.its)
                              for lt in live if lt.reason != "quota"])
         return len(live)
 
@@ -1661,16 +1802,20 @@ class StreamEngine:
             return 0
         vals = np.asarray(self.state.ret_vals[row])
         ts = np.asarray(self.state.ret_ts[row])
+        r_its = np.asarray(self.state.ret_its[row])
         tenant = self.registry.stream_of(sid).tenant
         n = min(count, Rr)
+        # replayed emissions keep their *original* ingest stamp — the
+        # latency clock of a replayed SU spans the whole detour
         items = [(sid, vals[(count - n + i) % Rr],
-                  int(ts[(count - n + i) % Rr]), tenant) for i in range(n)]
+                  int(ts[(count - n + i) % Rr]), tenant,
+                  int(r_its[(count - n + i) % Rr])) for i in range(n)]
         return self._requeue_batch(items)
 
     def _requeue_batch(self, items: List[Tuple]) -> int:
-        """Ship ``(sid, vals, ts, tenant)`` items into the queue through
-        the requeue table edit, chunked to one static pad width so churn
-        never retraces."""
+        """Ship ``(sid, vals, ts, tenant, its)`` items into the queue
+        through the requeue table edit, chunked to one static pad width so
+        churn never retraces."""
         if not items:
             return 0
         W = max(self.cfg.retention_slots, self.cfg.dlq_slots, 1)
@@ -1682,19 +1827,21 @@ class StreamEngine:
             ts = np.zeros((W,), np.int32)
             valid = np.zeros((W,), bool)
             tenant = np.zeros((W,), np.int32)
-            for i, (s, v, t, tn) in enumerate(chunk):
+            its = np.zeros((W,), np.int32)
+            for i, (s, v, t, tn, stamp) in enumerate(chunk):
                 sid[i], vals[i], ts[i] = s, v, t
-                valid[i], tenant[i] = True, tn
-            self._apply_requeue(sid, vals, ts, valid, tenant)
+                valid[i], tenant[i], its[i] = True, tn, stamp
+            self._apply_requeue(sid, vals, ts, valid, tenant, its)
         return len(items)
 
-    def _apply_requeue(self, sid, vals, ts, valid, tenant) -> None:
+    def _apply_requeue(self, sid, vals, ts, valid, tenant, its) -> None:
         """Hook: one padded requeue edit (the sharded engine routes each
         item to its owner shard here)."""
         from repro.core import admission
         self.state = admission.requeue(
             self.state, jnp.asarray(sid), jnp.asarray(vals),
-            jnp.asarray(ts), jnp.asarray(valid), jnp.asarray(tenant))
+            jnp.asarray(ts), jnp.asarray(valid), jnp.asarray(tenant),
+            jnp.asarray(its))
         self._sync_admitted()
 
     # ------------------------------------------------------------- readback

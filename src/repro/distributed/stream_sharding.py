@@ -202,13 +202,13 @@ def _place_sid_op(gmap: GlobalMaps, sid, shard, local, n_local, priority
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
-def _stage_ring_op(ring: IngestRing, w_slot, w_sid, w_vals, w_ts, rnd, pos,
-                   valid) -> IngestRing:
+def _stage_ring_op(ring: IngestRing, w_slot, w_sid, w_vals, w_ts, w_its,
+                   rnd, pos, valid) -> IngestRing:
     """Per-shard :func:`repro.core.engine.stage_ring` vmapped over the
     leading shard axis: every shard's payload deltas are scattered into
     its resident ring slice and every slot's routing tag rewritten, in
     one dispatch (the inputs arrive pre-placed by one ``device_put``)."""
-    return jax.vmap(_stage_ring)(ring, w_slot, w_sid, w_vals, w_ts,
+    return jax.vmap(_stage_ring)(ring, w_slot, w_sid, w_vals, w_ts, w_its,
                                  rnd, pos, valid)
 
 
@@ -223,6 +223,7 @@ def sharded_init_state(cfg: EngineConfig, plan: ShardPlan) -> EngineState:
         q_sid=jnp.zeros((S, Q), jnp.int32),
         q_vals=jnp.zeros((S, Q, C), jnp.float32),
         q_ts=jnp.zeros((S, Q), jnp.int32),
+        q_its=jnp.zeros((S, Q), jnp.int32),
         q_seq=jnp.zeros((S, Q), jnp.int32),
         q_valid=jnp.zeros((S, Q), bool),
         seq=jnp.zeros((S,), jnp.int32),
@@ -233,10 +234,12 @@ def sharded_init_state(cfg: EngineConfig, plan: ShardPlan) -> EngineState:
         tenant_dropped_overflow=jnp.zeros((S, T), jnp.int32),
         ret_vals=jnp.zeros((S, L, Rr, C), jnp.float32),
         ret_ts=jnp.zeros((S, L, Rr), jnp.int32),
+        ret_its=jnp.zeros((S, L, Rr), jnp.int32),
         ret_count=jnp.zeros((S, L), jnp.int32),
         dlq_sid=jnp.zeros((S, D), jnp.int32),
         dlq_vals=jnp.zeros((S, D, C), jnp.float32),
         dlq_ts=jnp.zeros((S, D), jnp.int32),
+        dlq_its=jnp.zeros((S, D), jnp.int32),
         dlq_reason=jnp.zeros((S, D), jnp.int32),
         dlq_tenant=jnp.zeros((S, D), jnp.int32),
         dlq_fill=jnp.zeros((S,), jnp.int32),
@@ -328,27 +331,29 @@ def reshard_snapshot(arrays, meta, n_shards: int,
     tenant_flat = tab["tenant"].astype(np.int64)
     per_sid = {f: by_sid(arrays[f"state/{f}"])
                for f in ("values", "timestamps",
-                         "ret_vals", "ret_ts", "ret_count")}
+                         "ret_vals", "ret_ts", "ret_its", "ret_count")}
 
     # queued SUs in canonical (shard-major, FIFO) order
     q_sid, q_vals = lead(arrays["state/q_sid"]), lead(arrays["state/q_vals"])
     q_ts, q_seq = lead(arrays["state/q_ts"]), lead(arrays["state/q_seq"])
+    q_its = lead(arrays["state/q_its"])
     q_valid = lead(arrays["state/q_valid"])
     entries = []
     for s in range(q_sid.shape[0]):
         idx = np.nonzero(q_valid[s])[0]
         idx = idx[np.argsort(q_seq[s, idx], kind="stable")]
         entries.extend((int(q_sid[s, i]), np.array(q_vals[s, i]),
-                        int(q_ts[s, i])) for i in idx)
+                        int(q_ts[s, i]), int(q_its[s, i])) for i in idx)
 
     # dead letters in drop (shard-major, spool) order
     d_sid, d_ts = lead(arrays["state/dlq_sid"]), lead(arrays["state/dlq_ts"])
     d_vals = lead(arrays["state/dlq_vals"])
+    d_its = lead(arrays["state/dlq_its"])
     d_reason = lead(arrays["state/dlq_reason"])
     d_tenant = lead(arrays["state/dlq_tenant"])
     d_fill = np.atleast_1d(np.asarray(arrays["state/dlq_fill"]))
     letters = [(int(d_sid[s, i]), np.array(d_vals[s, i]), int(d_ts[s, i]),
-                int(d_reason[s, i]), int(d_tenant[s, i]))
+                int(d_its[s, i]), int(d_reason[s, i]), int(d_tenant[s, i]))
                for s in range(d_sid.shape[0]) for i in range(int(d_fill[s]))]
 
     totals = {k: tot(arrays[f"state/stats/{k}"]) for k in STAT_KEYS}
@@ -366,27 +371,31 @@ def reshard_snapshot(arrays, meta, n_shards: int,
     timestamps = np.full((F2,), INT_MIN, np.int32)
     ret_vals = np.zeros((F2, Rr, C), np.float32)
     ret_ts = np.zeros((F2, Rr), np.int32)
+    ret_its = np.zeros((F2, Rr), np.int32)
     ret_count = np.zeros((F2,), np.int32)
     values[plan.sid_to_flat] = per_sid["values"]
     timestamps[plan.sid_to_flat] = per_sid["timestamps"]
     ret_vals[plan.sid_to_flat] = per_sid["ret_vals"]
     ret_ts[plan.sid_to_flat] = per_sid["ret_ts"]
+    ret_its[plan.sid_to_flat] = per_sid["ret_its"]
     ret_count[plan.sid_to_flat] = per_sid["ret_count"]
 
     nq_sid = np.zeros((S2, Q), np.int32)
     nq_vals = np.zeros((S2, Q, C), np.float32)
     nq_ts = np.zeros((S2, Q), np.int32)
+    nq_its = np.zeros((S2, Q), np.int32)
     nq_seq = np.zeros((S2, Q), np.int32)
     nq_valid = np.zeros((S2, Q), bool)
     fill = np.zeros((S2,), np.int64)
     t_queued = np.zeros((S2, T), np.int32)
-    for sid, vals, ts in entries:
+    for sid, vals, ts, its in entries:
         sid_c = min(max(sid, 0), N - 1)
         s = int(plan.sid_to_shard[sid_c])
         tn = min(max(int(tenant_flat[sid_c]), 0), T - 1)
         k = int(fill[s])
         if k < Q:
             nq_sid[s, k], nq_vals[s, k], nq_ts[s, k] = sid, vals, ts
+            nq_its[s, k] = its
             nq_seq[s, k], nq_valid[s, k] = k, True
             fill[s] = k + 1
             t_queued[s, tn] += 1
@@ -396,22 +405,24 @@ def reshard_snapshot(arrays, meta, n_shards: int,
             totals["dropped_overflow"] += 1
             totals["purged"] += 1
             t_drop_over[tn] += 1
-            letters.append((sid, np.asarray(vals, np.float32), ts,
+            letters.append((sid, np.asarray(vals, np.float32), ts, its,
                             DLQ_OVERFLOW, tn))
     seq = fill.astype(np.int32)
 
     nd_sid = np.zeros((S2, D), np.int32)
     nd_vals = np.zeros((S2, D, C), np.float32)
     nd_ts = np.zeros((S2, D), np.int32)
+    nd_its = np.zeros((S2, D), np.int32)
     nd_reason = np.zeros((S2, D), np.int32)
     nd_tenant = np.zeros((S2, D), np.int32)
     nd_fill = np.zeros((S2,), np.int32)
     if D > 0:
-        for sid, vals, ts, reason, tn in letters:
+        for sid, vals, ts, its, reason, tn in letters:
             s = int(plan.sid_to_shard[min(max(sid, 0), N - 1)])
             k = int(nd_fill[s])
             if k < D:
                 nd_sid[s, k], nd_vals[s, k], nd_ts[s, k] = sid, vals, ts
+                nd_its[s, k] = its
                 nd_reason[s, k], nd_tenant[s, k] = reason, tn
                 nd_fill[s] = k + 1
 
@@ -426,7 +437,8 @@ def reshard_snapshot(arrays, meta, n_shards: int,
         "state/values": values.reshape(S2, L2, C),
         "state/timestamps": timestamps.reshape(S2, L2),
         "state/q_sid": nq_sid, "state/q_vals": nq_vals,
-        "state/q_ts": nq_ts, "state/q_seq": nq_seq,
+        "state/q_ts": nq_ts, "state/q_its": nq_its,
+        "state/q_seq": nq_seq,
         "state/q_valid": nq_valid,
         "state/seq": seq,
         "state/tenant_emitted": place0(t_emitted),
@@ -436,9 +448,11 @@ def reshard_snapshot(arrays, meta, n_shards: int,
         "state/tenant_dropped_overflow": place0(t_drop_over),
         "state/ret_vals": ret_vals.reshape(S2, L2, Rr, C),
         "state/ret_ts": ret_ts.reshape(S2, L2, Rr),
+        "state/ret_its": ret_its.reshape(S2, L2, Rr),
         "state/ret_count": ret_count.reshape(S2, L2),
         "state/dlq_sid": nd_sid, "state/dlq_vals": nd_vals,
-        "state/dlq_ts": nd_ts, "state/dlq_reason": nd_reason,
+        "state/dlq_ts": nd_ts, "state/dlq_its": nd_its,
+        "state/dlq_reason": nd_reason,
         "state/dlq_tenant": nd_tenant, "state/dlq_fill": nd_fill,
     })
     for k in STAT_KEYS:
@@ -454,7 +468,7 @@ def reshard_snapshot(arrays, meta, n_shards: int,
         out["plan/sid_to_local"] = plan.sid_to_local.copy()
         out["plan/sid_to_flat"] = plan.sid_to_flat.copy()
         out["plan/local_to_sid"] = plan.local_to_sid.copy()
-    for k in ("pending/sid", "pending/vals", "pending/ts"):
+    for k in ("pending/sid", "pending/vals", "pending/ts", "pending/its"):
         out[k] = np.array(arrays[k])
 
     new_meta = dict(meta)
@@ -530,7 +544,7 @@ def make_shard_round(
                                     fast_free=fused)
 
         # ---- pop this round's events (weighted-fair; global sids) -------
-        state, (e_sid, e_vals, e_ts, e_pop) = _pop(
+        state, (e_sid, e_vals, e_ts, e_its, e_pop) = _pop(
             state, gmap.priority, B, tenant_by_sid, tables.weight,
             cfg.scheduler)
         stats["popped"] += e_pop.sum(dtype=jnp.int32)
@@ -542,7 +556,7 @@ def make_shard_round(
         stats["dropped_revoked"] += (e_pop & ~e_act).sum(dtype=jnp.int32)
         state = dlq_append(state, e_sid, e_vals, e_ts,
                            tenant_by_sid[jnp.clip(e_sid, 0, N - 1)],
-                           DLQ_REVOKED, e_pop & ~e_act)
+                           DLQ_REVOKED, e_pop & ~e_act, its=e_its)
 
         # ---- post-ingest snapshot: the lock-free global view ------------
         vals_all = jax.lax.all_gather(state.values, AXIS)
@@ -559,6 +573,7 @@ def make_shard_round(
         wi_src = jnp.repeat(e_sid, F)
         wi_vals = jnp.repeat(e_vals, F, axis=0)
         wi_ts = jnp.repeat(e_ts, F)
+        wi_its = jnp.repeat(e_its, F)
 
         # ---- exchange stage: route work items to the target's owner -----
         # One-pass compaction: a single running per-destination count gives
@@ -568,10 +583,12 @@ def make_shard_round(
         t_safe = jnp.clip(wi_t, 0, N - 1)
         dest_shard = jnp.where(wi_valid, gmap.sid_to_shard[t_safe], n_shards)
         if fused:
-            xi, xf, x_drop = exchange_compact(wi_t, wi_src, wi_ts, wi_vals,
-                                              dest_shard, n_shards, E)
+            xi, xf, x_drop = exchange_compact(wi_t, wi_src, wi_ts, wi_its,
+                                              wi_vals, dest_shard,
+                                              n_shards, E)
         else:
-            payload_i = jnp.stack([wi_t, wi_src, wi_ts], axis=-1)    # (W, 3)
+            payload_i = jnp.stack([wi_t, wi_src, wi_ts, wi_its],
+                                  axis=-1)                           # (W, 4)
             routed = dest_shard < n_shards
             d_safe = jnp.clip(dest_shard, 0, n_shards - 1)
             # unrouted items must not consume bucket ranks: mask them out
@@ -583,8 +600,8 @@ def make_shard_round(
                 d_safe[:, None], axis=1)[:, 0]                       # (W,)
             fits = routed & (rank < E)
             slot = jnp.where(fits, d_safe * E + rank, n_shards * E)
-            xi = jnp.full((n_shards * E, 3), -1, jnp.int32) \
-                .at[slot].set(payload_i, mode="drop").reshape(n_shards, E, 3)
+            xi = jnp.full((n_shards * E, 4), -1, jnp.int32) \
+                .at[slot].set(payload_i, mode="drop").reshape(n_shards, E, 4)
             xf = jnp.zeros((n_shards * E, C), jnp.float32) \
                 .at[slot].set(wi_vals, mode="drop").reshape(n_shards, E, C)
             x_drop = routed & ~fits
@@ -600,13 +617,15 @@ def make_shard_round(
                 jnp.where(x_drop, tenant_by_sid[src_safe], Tn)
             ].add(1, mode="drop"))
         state = dlq_append(state, wi_src, wi_vals, wi_ts,
-                           tenant_by_sid[src_safe], DLQ_OVERFLOW, x_drop)
+                           tenant_by_sid[src_safe], DLQ_OVERFLOW, x_drop,
+                           its=wi_its)
 
         ri = jax.lax.all_to_all(xi, AXIS, split_axis=0, concat_axis=0)
         rf = jax.lax.all_to_all(xf, AXIS, split_axis=0, concat_axis=0)
         r_t = ri[..., 0].reshape(WR)
         r_src = ri[..., 1].reshape(WR)
         r_ts = ri[..., 2].reshape(WR)
+        r_its = ri[..., 3].reshape(WR)
         r_vals = rf.reshape(WR, C)
         r_valid = r_t >= 0
         rt_safe = jnp.clip(r_t, 0, N - 1)
@@ -638,7 +657,7 @@ def make_shard_round(
         state, stats, sink = store_and_emit(cfg, tables, state, stats,
                                             r_loc, r_t, r_src, new_vals,
                                             ts_out, keep, n_local,
-                                            fast_free=fused)
+                                            fast_free=fused, wi_its=r_its)
         state = state._replace(
             stats=stats,
             tenant_queued=tenant_occupancy(state, tenant_by_sid,
@@ -757,6 +776,8 @@ class ShardedStreamEngine(StreamEngine):
                                             fanout_fn, fused=fused))
         self._pending: List[List] = []
         self.admission_rejected = 0
+        self._rounds_done = 0
+        self._last_base = 0
         self._ring = None
         self._ring_K = 0
         self._ring_free: List[List[int]] = []
@@ -821,24 +842,29 @@ class ShardedStreamEngine(StreamEngine):
         vals = np.asarray(batch.vals)
         ts = np.asarray(batch.ts)
         valid = np.asarray(batch.valid)
+        its = np.asarray(batch.its)
         r_sid = np.zeros((S, B), np.int32)
         r_vals = np.zeros((S, B, C), np.float32)
         r_ts = np.zeros((S, B), np.int32)
         r_valid = np.zeros((S, B), bool)
+        r_its = np.zeros((S, B), np.int32)
         fill = np.zeros((S,), np.int64)
         for i in np.nonzero(valid)[0]:
             s = int(self.plan.sid_to_shard[sid[i]])
             j = fill[s]
             r_sid[s, j], r_vals[s, j], r_ts[s, j] = sid[i], vals[i], ts[i]
+            r_its[s, j] = its[i]
             r_valid[s, j] = True
             fill[s] += 1
         return jax.device_put(
-            IngestBatch(r_sid, r_vals, r_ts, r_valid), self._shard)
+            IngestBatch(r_sid, r_vals, r_ts, r_valid, r_its), self._shard)
 
     # --------------------------------------------------------------- rounds
     def round(self) -> SinkBatch:
+        self._last_base = self._rounds_done
         self.state, sink = self._step(self.tables, self.gmap, self.state,
                                       self._take_ingest())
+        self._rounds_done += 1
         self._maybe_checkpoint()
         return SinkBatch(*(x.reshape((-1,) + x.shape[2:]) for x in sink))
 
@@ -883,6 +909,7 @@ class ShardedStreamEngine(StreamEngine):
                 sid=np.zeros((S, R), np.int32),
                 vals=np.zeros((S, R, C), np.float32),
                 ts=np.zeros((S, R), np.int32),
+                its=np.zeros((S, R), np.int32),
                 rnd=np.full((S, R), K, np.int32),
                 pos=np.zeros((S, R), np.int32),
                 valid=np.zeros((S, R), bool)), self._shard)
@@ -922,12 +949,13 @@ class ShardedStreamEngine(StreamEngine):
         w_sid = np.zeros((S, R), np.int32)
         w_vals = np.zeros((S, R, C), np.float32)
         w_ts = np.zeros((S, R), np.int32)
+        w_its = np.zeros((S, R), np.int32)
         wn = np.zeros((S,), np.int64)
         for e in writes:
             s, j = e[3]
             q = int(wn[s]); wn[s] += 1
             w_slot[s, q], w_sid[s, q] = j, min(max(int(e[0]), 0), N - 1)
-            w_vals[s, q], w_ts[s, q] = e[1], e[2]
+            w_vals[s, q], w_ts[s, q], w_its[s, q] = e[1], e[2], e[4]
         rnd = np.full((S, R), K, np.int32)
         pos = np.zeros((S, R), np.int32)
         valid = np.zeros((S, R), bool)
@@ -940,8 +968,8 @@ class ShardedStreamEngine(StreamEngine):
             if e[3] is not None:
                 s, j = e[3]
                 valid[s, j] = True            # carried overflow stays resident
-        args = jax.device_put((w_slot, w_sid, w_vals, w_ts, rnd, pos, valid),
-                              self._shard)
+        args = jax.device_put((w_slot, w_sid, w_vals, w_ts, w_its,
+                               rnd, pos, valid), self._shard)
         self._ring = _stage_ring_op(self._ring, *args)
         for e, _k, _i in assigned:            # consumed by this superstep:
             s, j = e[3]                       # slots reusable next boundary
@@ -960,6 +988,7 @@ class ShardedStreamEngine(StreamEngine):
         sid = np.asarray(spool.sid)
         vals = np.asarray(spool.vals)
         ts = np.asarray(spool.ts)
+        its = np.asarray(spool.its)
         rnd = np.asarray(spool.rnd)
         fill = np.asarray(spool.fill)
         K = K or self._ring_K or 1
@@ -969,14 +998,16 @@ class ShardedStreamEngine(StreamEngine):
             b_vals = np.zeros((n_sh * S, C), np.float32)
             b_ts = np.zeros((n_sh * S,), np.int32)
             b_valid = np.zeros((n_sh * S,), bool)
+            b_its = np.zeros((n_sh * S,), np.int32)
             for s in range(n_sh):
                 idx = np.nonzero(rnd[s, :fill[s]] == k)[0]
                 n = len(idx)
                 b_sid[s * S:s * S + n] = sid[s, idx]
                 b_vals[s * S:s * S + n] = vals[s, idx]
                 b_ts[s * S:s * S + n] = ts[s, idx]
+                b_its[s * S:s * S + n] = its[s, idx]
                 b_valid[s * S:s * S + n] = True
-            sinks.append(SinkBatch(b_sid, b_vals, b_ts, b_valid))
+            sinks.append(SinkBatch(b_sid, b_vals, b_ts, b_valid, b_its))
         return sinks
 
     # ------------------------------------------------- dynamic admission
@@ -1121,6 +1152,7 @@ class ShardedStreamEngine(StreamEngine):
             ts = np.full((S * L,), INT_MIN, np.int32)
             rv = np.zeros((S * L, Rr, C), np.float32)
             rt = np.zeros((S * L, Rr), np.int32)
+            ri = np.zeros((S * L, Rr), np.int32)
             rc = np.zeros((S * L,), np.int32)
             v[new_plan.sid_to_flat] = np.asarray(
                 self.state.values).reshape(-1, C)[old.sid_to_flat]
@@ -1131,6 +1163,8 @@ class ShardedStreamEngine(StreamEngine):
                 self.state.ret_vals).reshape(F_old, Rr, C)[old.sid_to_flat]
             rt[new_plan.sid_to_flat] = np.asarray(
                 self.state.ret_ts).reshape(F_old, Rr)[old.sid_to_flat]
+            ri[new_plan.sid_to_flat] = np.asarray(
+                self.state.ret_its).reshape(F_old, Rr)[old.sid_to_flat]
             rc[new_plan.sid_to_flat] = np.asarray(
                 self.state.ret_count).reshape(-1)[old.sid_to_flat]
             self.state = jax.device_put(self.state._replace(
@@ -1138,6 +1172,7 @@ class ShardedStreamEngine(StreamEngine):
                 timestamps=jnp.asarray(ts.reshape(S, L)),
                 ret_vals=jnp.asarray(rv.reshape(S, L, Rr, C)),
                 ret_ts=jnp.asarray(rt.reshape(S, L, Rr)),
+                ret_its=jnp.asarray(ri.reshape(S, L, Rr)),
                 ret_count=jnp.asarray(rc.reshape(S, L))), self._shard)
             if L != old.n_local:    # step closures are shaped by n_local
                 self._compiled_for(
@@ -1229,7 +1264,7 @@ class ShardedStreamEngine(StreamEngine):
         self._ring_dirty = True
         self._init_slots()
 
-    def _apply_requeue(self, sid, vals, ts, valid, tenant) -> None:
+    def _apply_requeue(self, sid, vals, ts, valid, tenant, its) -> None:
         """Route each padded requeue item to its owner shard, then apply
         one :func:`admission.requeue_shard` edit per shard touched (the
         shard index is traced, so churn stays at one trace total)."""
@@ -1239,5 +1274,6 @@ class ShardedStreamEngine(StreamEngine):
             self.state = admission.requeue_shard(
                 self.state, jnp.int32(s), jnp.asarray(sid),
                 jnp.asarray(vals), jnp.asarray(ts),
-                jnp.asarray(valid & (owner == s)), jnp.asarray(tenant))
+                jnp.asarray(valid & (owner == s)), jnp.asarray(tenant),
+                its=jnp.asarray(its))
         self._sync_admitted()

@@ -516,8 +516,8 @@ def apply_programs_call(layout: RegLayout, in_table, progs, consts,
 # sharded exchange compaction
 # --------------------------------------------------------------------------
 
-def _exchange_compact_kernel(wit_ref, src_ref, wits_ref, wivals_ref,
-                             dest_ref,
+def _exchange_compact_kernel(wit_ref, src_ref, wits_ref, wiits_ref,
+                             wivals_ref, dest_ref,
                              xi_ref, xf_ref, drop_ref,
                              *, n_shards: int, slots: int):
     W = wit_ref.shape[1]
@@ -540,12 +540,13 @@ def _exchange_compact_kernel(wit_ref, src_ref, wits_ref, wivals_ref,
 
     xi_ref[:] = jnp.concatenate(
         [scatter_i32(wit_ref[:], -1), scatter_i32(src_ref[:], -1),
-         scatter_i32(wits_ref[:], -1)], axis=1)            # (DE, 3)
+         scatter_i32(wits_ref[:], -1),
+         scatter_i32(wiits_ref[:], -1)], axis=1)           # (DE, 4)
     xf_ref[:] = _gather_f32(oh_out.astype(jnp.float32), wivals_ref[:])
     drop_ref[:] = (routed & ~fits).astype(jnp.int32)
 
 
-def exchange_compact_call(wi_t, wi_src, wi_ts, wi_vals, dest_shard,
+def exchange_compact_call(wi_t, wi_src, wi_ts, wi_its, wi_vals, dest_shard,
                           n_shards: int, slots: int, *,
                           interpret: bool = False):
     """Kernelized ranked-scatter compaction: (W,) work items into
@@ -565,14 +566,14 @@ def exchange_compact_call(wi_t, wi_src, wi_ts, wi_vals, dest_shard,
         functools.partial(_exchange_compact_kernel, n_shards=n_shards,
                           slots=slots),
         out_shape=(
-            jax.ShapeDtypeStruct((DE, 3), jnp.int32),
+            jax.ShapeDtypeStruct((DE, 4), jnp.int32),
             jax.ShapeDtypeStruct((DE, C), jnp.float32),
             jax.ShapeDtypeStruct((1, Wp), jnp.int32),
         ),
         interpret=interpret,
-    )(wrow(wi_t), wrow(wi_src), wrow(wi_ts),
+    )(wrow(wi_t), wrow(wi_src), wrow(wi_ts), wrow(wi_its),
       jnp.pad(jnp.asarray(wi_vals, jnp.float32), ((0, Wp - W), (0, 0))),
       wrow(dest_shard, fill=n_shards))   # pad lanes are unrouted
-    return (xi.reshape(n_shards, slots, 3),
+    return (xi.reshape(n_shards, slots, 4),
             xf.reshape(n_shards, slots, C),
             drop.reshape(Wp)[:W] != 0)

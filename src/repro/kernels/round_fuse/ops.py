@@ -90,20 +90,20 @@ def apply_programs(layout: RegLayout, in_table, progs, consts, is_composite,
                               wi_valid, values_by_sid, timestamps_by_sid)
 
 
-def exchange_compact(wi_t, wi_src, wi_ts, wi_vals, dest_shard,
+def exchange_compact(wi_t, wi_src, wi_ts, wi_its, wi_vals, dest_shard,
                      n_shards: int, slots: int, *,
                      use_kernel: Optional[bool] = None,
                      interpret: Optional[bool] = None):
     """Rank-and-scatter (W,) work items into (n_shards, slots)
     fixed-size exchange buckets, array order preserved per destination;
     ``dest_shard == n_shards`` marks unrouted lanes.  Returns ``(xi,
-    xf, x_drop)``: (D, E, 3) int32 ``(target, src, ts)`` -1-padded,
+    xf, x_drop)``: (D, E, 4) int32 ``(target, src, ts, its)`` -1-padded,
     (D, E, C) float32 payloads, and the (W,) overflow mask."""
     use_kernel, interp = _pick(use_kernel, interpret)
     if use_kernel:
         from repro.kernels.round_fuse.kernel import exchange_compact_call
-        return exchange_compact_call(wi_t, wi_src, wi_ts, wi_vals,
+        return exchange_compact_call(wi_t, wi_src, wi_ts, wi_its, wi_vals,
                                      dest_shard, n_shards, slots,
                                      interpret=interp)
-    return exchange_compact_ref(wi_t, wi_src, wi_ts, wi_vals, dest_shard,
-                                n_shards, slots)
+    return exchange_compact_ref(wi_t, wi_src, wi_ts, wi_its, wi_vals,
+                                dest_shard, n_shards, slots)

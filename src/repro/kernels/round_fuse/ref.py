@@ -266,13 +266,13 @@ def apply_programs_ref(
 # sharded exchange compaction
 # --------------------------------------------------------------------------
 
-def exchange_compact_ref(wi_t, wi_src, wi_ts, wi_vals, dest_shard,
+def exchange_compact_ref(wi_t, wi_src, wi_ts, wi_its, wi_vals, dest_shard,
                          n_shards: int, slots: int):
     """Rank-and-scatter work items into fixed per-destination exchange
     buckets — the sharded step's compaction, verbatim: per destination
     shard, items keep array order; item ``rank >= slots`` overflows.
     ``dest_shard`` is (W,) with ``n_shards`` marking unrouted lanes.
-    Returns ``(xi, xf, x_drop)``: (D, E, 3) int32 ``(t, src, ts)``
+    Returns ``(xi, xf, x_drop)``: (D, E, 4) int32 ``(t, src, ts, its)``
     (-1-padded), (D, E, C) float32 payloads, and the (W,) overflow
     mask."""
     W = wi_t.shape[0]
@@ -286,10 +286,10 @@ def exchange_compact_ref(wi_t, wi_src, wi_ts, wi_vals, dest_shard,
         d_safe[:, None], axis=1)[:, 0]
     fits = routed & (rank < slots)
     slot = jnp.where(fits, d_safe * slots + rank, n_shards * slots)
-    payload = jnp.stack([wi_t, wi_src, wi_ts], axis=-1)    # (W, 3)
-    xi = jnp.full((n_shards * slots, 3), -1, jnp.int32) \
+    payload = jnp.stack([wi_t, wi_src, wi_ts, wi_its], axis=-1)    # (W, 4)
+    xi = jnp.full((n_shards * slots, 4), -1, jnp.int32) \
         .at[slot].set(payload, mode="drop") \
-        .reshape(n_shards, slots, 3)
+        .reshape(n_shards, slots, 4)
     xf = jnp.zeros((n_shards * slots, C), jnp.float32) \
         .at[slot].set(wi_vals, mode="drop") \
         .reshape(n_shards, slots, C)

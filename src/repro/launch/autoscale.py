@@ -49,7 +49,7 @@ class ScaleEvent:
     to_shards: int
     occupancy: float            # fractional queue occupancy that triggered it
     drops: int                  # overflow-drop delta that triggered it
-    reason: str                 # "backlog" | "drops" | "idle"
+    reason: str                 # "backlog" | "drops" | "slo" | "idle"
 
 
 class Autoscaler:
@@ -64,7 +64,8 @@ class Autoscaler:
 
     def __init__(self, engine, *, min_shards: int = 1, max_shards: int = 4,
                  up: float = 0.5, down: float = 0.15, patience: int = 2,
-                 cooldown: int = 4, mesh=None):
+                 cooldown: int = 4, mesh=None, slo=None,
+                 slo_up: float = 0.05):
         if not (1 <= min_shards <= max_shards):
             raise ValueError(
                 f"need 1 <= min_shards <= max_shards, got "
@@ -80,17 +81,28 @@ class Autoscaler:
         self.patience = max(1, int(patience))
         self.cooldown = max(0, int(cooldown))
         self.mesh = mesh
+        # optional latency signal: a repro.core.slo.SLOTracker the caller
+        # feeds latency records into; an observation window whose SLO
+        # violation rate exceeds `slo_up` scales up like fresh drops do
+        self.slo = slo
+        self.slo_up = float(slo_up)
         self.events: List[ScaleEvent] = []
         self._steps = 0
         self._hot = 0               # consecutive observations over `up`
         self._cold = 0              # consecutive observations under `down`
         self._hold = 0              # cooldown observations left
         self._last_drops = self._drop_total()
+        self._last_viol, self._last_obs = self._viol_totals()
 
     # ------------------------------------------------------------- signals
     def _drop_total(self) -> int:
         c = self.engine.counters()
         return int(c["dropped_overflow"])
+
+    def _viol_totals(self):
+        if self.slo is None:
+            return 0, 0
+        return (int(self.slo.violations.sum()), int(self.slo.hist.sum()))
 
     def occupancy(self) -> float:
         """Fraction of total queue capacity currently backlogged."""
@@ -108,15 +120,21 @@ class Autoscaler:
         drops_now = self._drop_total()
         d_drops = drops_now - self._last_drops
         self._last_drops = drops_now
+        viol_now, obs_now = self._viol_totals()
+        d_viol, d_obs = viol_now - self._last_viol, obs_now - self._last_obs
+        self._last_viol, self._last_obs = viol_now, obs_now
+        slo_hot = d_obs > 0 and d_viol / d_obs > self.slo_up
         if self._hold > 0:
             self._hold -= 1
             return None
         self._hot = self._hot + 1 if occ >= self.up else 0
         self._cold = self._cold + 1 if occ <= self.down else 0
         n = self.engine.cfg.n_shards
-        if (d_drops > 0 or self._hot >= self.patience) and n < self.max_shards:
+        if (d_drops > 0 or slo_hot or self._hot >= self.patience) \
+                and n < self.max_shards:
             return self._resize(min(n * 2, self.max_shards), occ, d_drops,
-                                "drops" if d_drops > 0 else "backlog")
+                                "drops" if d_drops > 0
+                                else "slo" if slo_hot else "backlog")
         if self._cold >= self.patience and n > self.min_shards:
             return self._resize(max(n // 2, self.min_shards), occ, d_drops,
                                 "idle")

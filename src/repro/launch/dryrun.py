@@ -350,30 +350,35 @@ def _lower_engine(mesh, mode: str = "sharded",
     state_abs = eng.EngineState(
         values=sds((N, C), f32), timestamps=sds((N,), i32),
         q_sid=sds((Q,), i32), q_vals=sds((Q, C), f32), q_ts=sds((Q,), i32),
+        q_its=sds((Q,), i32),
         q_seq=sds((Q,), i32), q_valid=sds((Q,), b_), seq=sds((), i32),
         tenant_emitted=sds((T,), i32), tokens=sds((T,), i32),
         tenant_queued=sds((T,), i32), tenant_dropped_quota=sds((T,), i32),
         tenant_dropped_overflow=sds((T,), i32),
         ret_vals=sds((N, Rr, C), f32), ret_ts=sds((N, Rr), i32),
+        ret_its=sds((N, Rr), i32),
         ret_count=sds((N,), i32),
         dlq_sid=sds((D,), i32), dlq_vals=sds((D, C), f32),
-        dlq_ts=sds((D,), i32), dlq_reason=sds((D,), i32),
+        dlq_ts=sds((D,), i32), dlq_its=sds((D,), i32),
+        dlq_reason=sds((D,), i32),
         dlq_tenant=sds((D,), i32), dlq_fill=sds((), i32),
         stats={k: sds((), i32) for k in eng.STAT_KEYS})
     state_sh = eng.EngineState(
         values=row, timestamps=row, q_sid=rep, q_vals=rep, q_ts=rep,
+        q_its=rep,
         q_seq=rep, q_valid=rep, seq=rep, tenant_emitted=rep, tokens=rep,
         tenant_queued=rep, tenant_dropped_quota=rep,
         tenant_dropped_overflow=rep,
-        ret_vals=row, ret_ts=row, ret_count=row,
-        dlq_sid=rep, dlq_vals=rep, dlq_ts=rep, dlq_reason=rep,
+        ret_vals=row, ret_ts=row, ret_its=row, ret_count=row,
+        dlq_sid=rep, dlq_vals=rep, dlq_ts=rep, dlq_its=rep, dlq_reason=rep,
         dlq_tenant=rep, dlq_fill=rep,
         stats={k: rep for k in eng.STAT_KEYS})
 
     ingest_abs = eng.IngestBatch(sid=sds((B,), i32), vals=sds((B, C), f32),
-                                 ts=sds((B,), i32), valid=sds((B,), b_))
-    ingest_sh = eng.IngestBatch(*([NamedSharding(mesh, P(stream_axes))] * 4))
-    sink_sh = eng.SinkBatch(rep, rep, rep, rep)
+                                 ts=sds((B,), i32), valid=sds((B,), b_),
+                                 its=sds((B,), i32))
+    ingest_sh = eng.IngestBatch(*([NamedSharding(mesh, P(stream_axes))] * 5))
+    sink_sh = eng.SinkBatch(rep, rep, rep, rep, rep)
 
     step = eng.make_step(ecfg, jit=False)
     jf = jax.jit(step, in_shardings=(tables_sh, state_sh, ingest_sh),

@@ -56,8 +56,9 @@ class ModelBackedStreams:
         self.routes: Dict[int, _Route] = {}
         self._next_rid = 0
         self.inflight: Dict[int, _Route] = {}
+        self._rid_its: Dict[int, Optional[int]] = {}   # ingest stamp per rid
         self.completed: List[Request] = []
-        self.deferred: List[Tuple[int, np.ndarray]] = []   # (sid, vals)
+        self.deferred: List[Tuple[int, np.ndarray, Optional[int]]] = []
         self._occ: Optional[np.ndarray] = None   # host occupancy snapshot
         if watermark is not None and hasattr(batcher, "throttle"):
             # the batcher half of the hook: backlogged tenants' queued
@@ -140,11 +141,12 @@ class ModelBackedStreams:
         sid = np.asarray(sink.sid)
         vals = np.asarray(sink.vals)
         valid = np.asarray(sink.valid)
+        its = np.asarray(sink.its)
         n = 0
         for i in range(sid.shape[0]):
             if not valid[i]:
                 continue
-            n += self._submit(int(sid[i]), vals[i])
+            n += self._submit(int(sid[i]), vals[i], int(its[i]))
         return n
 
     def pump_spool(self, spool: SinkSpool, ts: int) -> int:
@@ -157,24 +159,27 @@ class ModelBackedStreams:
         self._refresh_backpressure()
         sid = np.asarray(spool.sid)
         vals = np.asarray(spool.vals)
+        its = np.asarray(spool.its)
         rnd = np.asarray(spool.rnd)
         fill = np.asarray(spool.fill)
         if sid.ndim == 1:                      # single device
             sid, vals, rnd, fill = sid[None], vals[None], rnd[None], fill[None]
+            its = its[None]
         entries = sorted((int(rnd[s, i]), s, i)
                          for s in range(sid.shape[0])
                          for i in range(int(fill[s])))
         n = 0
         for _k, s, i in entries:
-            n += self._submit(int(sid[s, i]), vals[s, i])
+            n += self._submit(int(sid[s, i]), vals[s, i], int(its[s, i]))
         return n
 
-    def _submit(self, sid: int, vals: np.ndarray) -> int:
+    def _submit(self, sid: int, vals: np.ndarray,
+                its: Optional[int] = None) -> int:
         r = self.routes.get(sid)
         if r is None:
             return 0
         if self._throttled(r.tenant):      # pump slowed: hold host-side
-            self.deferred.append((sid, np.asarray(vals)))
+            self.deferred.append((sid, np.asarray(vals), its))
             return 0
         rid = self._next_rid
         self._next_rid += 1
@@ -182,6 +187,7 @@ class ModelBackedStreams:
                       max_tokens=4, tenant=r.tenant)
         self.batcher.submit(req)
         self.inflight[rid] = r
+        self._rid_its[rid] = its
         return 1
 
     def release_deferred(self) -> int:
@@ -191,9 +197,9 @@ class ModelBackedStreams:
         self._refresh_backpressure()
         pending, self.deferred = self.deferred, []
         n = 0
-        for sid, vals in pending:
+        for sid, vals, its in pending:
             if sid in self.routes:
-                n += self._submit(sid, vals)
+                n += self._submit(sid, vals, its)
         return n
 
     def serve(self, ts: int, K: Optional[int] = None,
@@ -249,8 +255,9 @@ class ModelBackedStreams:
                         r.prompt_len, r.tenant]
                        for sid, r in sorted(self.routes.items())],
             "next_rid": self._next_rid,
-            "deferred": [[int(sid), np.asarray(vals).tolist()]
-                         for sid, vals in self.deferred],
+            "deferred": [[int(sid), np.asarray(vals).tolist(),
+                          None if its is None else int(its)]
+                         for sid, vals, its in self.deferred],
         }
 
     def restore(self, snap: Dict) -> None:
@@ -265,9 +272,12 @@ class ModelBackedStreams:
                 self.routes[sid] = _Route(sid, streams[resp_sid],
                                           prompt_len, tenant)
         self._next_rid = int(snap["next_rid"])
-        self.deferred = [(int(sid), np.asarray(vals, np.float32))
-                         for sid, vals in snap["deferred"]]
+        # pre-its snapshots carry [sid, vals] pairs: default the stamp
+        self.deferred = [(int(e[0]), np.asarray(e[1], np.float32),
+                          None if len(e) < 3 or e[2] is None else int(e[2]))
+                         for e in snap["deferred"]]
         self.inflight = {}
+        self._rid_its = {}
         self._occ = None
 
     @staticmethod
@@ -284,7 +294,10 @@ class ModelBackedStreams:
         for req in self.batcher.run_ticks(max_ticks):
             r = self.inflight.pop(req.rid)
             score = float(np.mean(req.output)) / self.batcher.cfg.vocab
-            self.engine.post(r.response_stream, [score], ts=ts + req.rid + 1)
+            # the response SU keeps the request's ingest stamp, so the
+            # end-to-end latency of a PRED pipeline includes serving time
+            self.engine.post(r.response_stream, [score], ts=ts + req.rid + 1,
+                             its=self._rid_its.pop(req.rid, None))
             done.append(req)
         self.completed += done
         return done

@@ -427,7 +427,7 @@ def test_bridge_snapshot_restore():
     assert pair is not None
     model, resp = pair
     bridge.deferred.append((model.sid, np.ones((cfg.channels,),
-                                               np.float32)))
+                                               np.float32), 3))
     bridge._next_rid = 5
 
     snap = json.loads(json.dumps(bridge.snapshot()))   # survives JSON

@@ -261,15 +261,16 @@ def test_exchange_compact_kernel_sweep(W, D, E, C):
     wi_t = rng.integers(-1, 30, W).astype(np.int32)
     wi_src = rng.integers(0, 30, W).astype(np.int32)
     wi_ts = rng.integers(-50, 50, W).astype(np.int32)
+    wi_its = rng.integers(0, 100, W).astype(np.int32)
     wi_vals = rng.standard_normal((W, C)).astype(np.float32)
     wi_vals.ravel()[rng.integers(0, W * C, 2)] = [-0.0, np.inf]
     dest = np.where(wi_t >= 0, rng.integers(0, D, W), D).astype(np.int32)
-    ref = rfr.exchange_compact_ref(*map(jnp.asarray,
-                                        (wi_t, wi_src, wi_ts, wi_vals, dest)),
-                                   D, E)
-    got = rfk.exchange_compact_call(*map(jnp.asarray,
-                                         (wi_t, wi_src, wi_ts, wi_vals, dest)),
-                                    D, E, interpret=True)
+    ref = rfr.exchange_compact_ref(
+        *map(jnp.asarray, (wi_t, wi_src, wi_ts, wi_its, wi_vals, dest)),
+        D, E)
+    got = rfk.exchange_compact_call(
+        *map(jnp.asarray, (wi_t, wi_src, wi_ts, wi_its, wi_vals, dest)),
+        D, E, interpret=True)
     for i, nm in enumerate(["xi", "xf", "x_drop"]):
         _bits_equal(nm, ref[i], got[i])
 

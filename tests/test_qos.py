@@ -93,8 +93,8 @@ def _drain_pop(cfg, items, batch, prio, tenant, weight):
     w_j = jnp.asarray(weight, jnp.int32)
     rounds = []
     while bool(state.q_valid.any()):
-        state, (p_sid, _, p_ts, p_valid) = _pop(state, prio_j, batch,
-                                                ten_j, w_j)
+        state, (p_sid, _, p_ts, _, p_valid) = _pop(state, prio_j, batch,
+                                                   ten_j, w_j)
         seqs = []
         for s, t, v in zip(np.asarray(p_sid), np.asarray(p_ts),
                            np.asarray(p_valid)):
@@ -169,7 +169,7 @@ def test_pop_all_zero_weights_is_fifo():
     state, _ = _enqueue(state, sid, jnp.zeros((8, cfg.channels)),
                         jnp.asarray([i[1] for i in items], jnp.int32),
                         jnp.ones(8, bool))
-    _, (legacy_sid, _, _, _) = _pop(state, jnp.asarray(prio), 4)
+    _, (legacy_sid, _, _, _, _) = _pop(state, jnp.asarray(prio), 4)
     assert np.asarray(legacy_sid).tolist() == [5, 1, 5, 2]
 
 

@@ -74,12 +74,12 @@ def test_pop_fifo_with_zero_priorities(scheduler):
     cfg = _cfg(queue=8, batch=2)
     state = init_state(cfg)
     state, _ = _put(state, [(7, 1.0, 1), (2, 2.0, 2), (9, 3.0, 3)])
-    state, (sid, vals, ts, valid) = _pop(state, _zero_prio(cfg), 2,
-                                         scheduler=scheduler)
+    state, (sid, vals, ts, _, valid) = _pop(state, _zero_prio(cfg), 2,
+                                            scheduler=scheduler)
     assert np.asarray(valid).all()
     assert np.asarray(sid).tolist() == [7, 2]      # insertion order, not sid
-    state, (sid2, _, _, valid2) = _pop(state, _zero_prio(cfg), 2,
-                                       scheduler=scheduler)
+    state, (sid2, _, _, _, valid2) = _pop(state, _zero_prio(cfg), 2,
+                                          scheduler=scheduler)
     assert np.asarray(sid2)[0] == 9 and bool(valid2[0])
     assert not bool(valid2[1])                     # queue exhausted
     assert int(state.q_valid.sum()) == 0
@@ -92,7 +92,7 @@ def test_pop_priority_order_lowest_first(scheduler):
     # priority[sid] = 15 - sid  ->  highest sid served first
     state = init_state(cfg)
     state, _ = _put(state, [(1, 0.0, 1), (8, 0.0, 2), (4, 0.0, 3)])
-    state, (sid, _, _, valid) = _pop(state, prio, 3, scheduler=scheduler)
+    state, (sid, _, _, _, valid) = _pop(state, prio, 3, scheduler=scheduler)
     assert np.asarray(valid).all()
     assert np.asarray(sid).tolist() == [8, 4, 1]
 
@@ -103,7 +103,7 @@ def test_pop_priority_tie_breaks_by_seq(scheduler):
     prio = jnp.zeros((cfg.n_streams,), jnp.int32).at[5].set(1)
     state = init_state(cfg)
     state, _ = _put(state, [(5, 0.0, 1), (3, 0.0, 2), (5, 0.0, 3), (2, 0.0, 4)])
-    state, (sid, _, ts, valid) = _pop(state, prio, 4, scheduler=scheduler)
+    state, (sid, _, ts, _, valid) = _pop(state, prio, 4, scheduler=scheduler)
     assert np.asarray(valid).all()
     # priority-0 items first in FIFO order, then the two sid-5 items in
     # their own enqueue (seq) order
@@ -116,8 +116,8 @@ def test_pop_then_enqueue_reuses_slots(scheduler):
     cfg = _cfg(queue=4, batch=4)
     state = init_state(cfg)
     state, _ = _put(state, [(i, 0.0, i + 1) for i in range(4)])
-    state, (_, _, _, valid) = _pop(state, _zero_prio(cfg), 2,
-                                   scheduler=scheduler)
+    state, (_, _, _, _, valid) = _pop(state, _zero_prio(cfg), 2,
+                                      scheduler=scheduler)
     assert int(np.asarray(valid).sum()) == 2
     state, dropped = _put(state, [(10, 0.0, 9), (11, 0.0, 10)])
     assert int(dropped) == 0
