@@ -29,11 +29,26 @@ import os
 import re
 import shutil
 import threading
+import zlib
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 import jax
+
+
+class CheckpointCorrupt(Exception):
+    """A checkpoint failed integrity verification: a leaf or manifest is
+    missing, truncated, unparsable, or fails its CRC — distinct from
+    ``FileNotFoundError`` (the whole step directory is gone, e.g. pruned).
+    Latest-valid readers (:func:`load_latest_valid`,
+    ``CheckpointManager.load_latest``/``restore_latest`` and
+    ``restore_engine(step=None)``) catch this and fall back to the next
+    older checkpoint; explicit-step reads surface it to the caller."""
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
 
 
 def _flatten(tree) -> List[Tuple[str, Any]]:
@@ -105,9 +120,10 @@ def save(path: str, step: int, tree, *, sync: bool = True,
                 f.flush()
                 os.fsync(f.fileno())
         manifest[key] = {"file": fname, "shape": list(arr.shape),
-                         "dtype": str(arr.dtype)}
+                         "dtype": str(arr.dtype), "crc32": _crc(arr)}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump({"step": step, "leaves": manifest, "extra": extra}, f)
+        json.dump({"step": step, "leaves": manifest, "extra": extra,
+                   "manifest_crc32": _manifest_crc(manifest)}, f)
         if sync:
             f.flush()
             os.fsync(f.fileno())
@@ -129,19 +145,105 @@ def latest_step(path: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def all_steps(path: str) -> List[int]:
+    """Every checkpoint step present under ``path``, ascending."""
+    if not os.path.isdir(path):
+        return []
+    return sorted(int(m.group(1)) for d in os.listdir(path)
+                  if (m := re.fullmatch(r"step_(\d+)", d)))
+
+
+def _manifest_crc(leaves: Dict[str, Dict]) -> int:
+    """Checksum over the manifest's leaf table itself (names, shapes,
+    dtypes, per-leaf CRCs) — catches a truncated/edited manifest even when
+    every surviving leaf file is individually intact."""
+    return zlib.crc32(
+        json.dumps(leaves, sort_keys=True).encode("utf-8"))
+
+
+def _read_manifest(d: str) -> dict:
+    """Parse + self-verify one checkpoint's manifest.  Raises
+    ``FileNotFoundError`` when the step directory is gone entirely and
+    :class:`CheckpointCorrupt` when the manifest is unreadable, truncated
+    or fails its own checksum.  Pre-checksum manifests (no
+    ``manifest_crc32``) pass without integrity cover — back-compat."""
+    if not os.path.isdir(d):
+        raise FileNotFoundError(d)
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            m = json.load(f)
+    except FileNotFoundError as e:
+        raise CheckpointCorrupt(f"{d}: manifest missing") from e
+    except (json.JSONDecodeError, OSError, UnicodeDecodeError) as e:
+        raise CheckpointCorrupt(f"{d}: manifest unreadable: {e}") from e
+    want = m.get("manifest_crc32")
+    if want is not None and _manifest_crc(m["leaves"]) != want:
+        raise CheckpointCorrupt(f"{d}: manifest checksum mismatch")
+    return m
+
+
+def _load_leaf(d: str, key: str, info: Dict) -> np.ndarray:
+    """Read + verify one leaf file; :class:`CheckpointCorrupt` on any
+    damage (missing file, truncation, npy parse failure, CRC mismatch)."""
+    try:
+        arr = np.load(os.path.join(d, info["file"]))
+    except (OSError, ValueError, EOFError) as e:
+        raise CheckpointCorrupt(f"{d}: leaf {key!r} unreadable: {e}") from e
+    if tuple(arr.shape) != tuple(info.get("shape", arr.shape)) \
+            or str(arr.dtype) != info.get("dtype", str(arr.dtype)):
+        raise CheckpointCorrupt(
+            f"{d}: leaf {key!r} shape/dtype drifted from manifest")
+    want = info.get("crc32")
+    if want is not None and _crc(arr) != want:
+        raise CheckpointCorrupt(f"{d}: leaf {key!r} checksum mismatch")
+    return arr
+
+
+def verify(path: str, step: int) -> bool:
+    """Full integrity pass over checkpoint ``step`` (manifest + every
+    leaf): True when clean, False on any damage or a missing step dir —
+    the operator-facing predicate (``load``/``restore`` raise instead)."""
+    d = os.path.join(path, f"step_{step:08d}")
+    try:
+        m = _read_manifest(d)
+        for key, info in m["leaves"].items():
+            _load_leaf(d, key, info)
+    except (CheckpointCorrupt, FileNotFoundError):
+        return False
+    return True
+
+
 def load(path: str, step: int) -> Tuple[Dict[str, np.ndarray], Optional[dict]]:
     """Read every leaf of checkpoint ``step`` without a like-tree.
 
     Returns ``(leaves, extra)`` where ``leaves`` maps each flattened key to
     its host array and ``extra`` is the dict passed to :func:`save` (or
     None).  The flat form suits consumers (like engine restore) that
-    rebuild their own structures from the keys."""
+    rebuild their own structures from the keys.  Every leaf (and the
+    manifest itself) is checksum-verified; damage raises
+    :class:`CheckpointCorrupt`."""
     d = os.path.join(path, f"step_{step:08d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        m = json.load(f)
-    leaves = {key: np.load(os.path.join(d, info["file"]))
+    m = _read_manifest(d)
+    leaves = {key: _load_leaf(d, key, info)
               for key, info in m["leaves"].items()}
     return leaves, m.get("extra")
+
+
+def load_latest_valid(path: str
+                      ) -> Tuple[Optional[int], Optional[Dict], Optional[dict]]:
+    """Newest checkpoint that passes verification: walk the steps newest
+    to oldest, skipping any that raise :class:`CheckpointCorrupt` (torn
+    write, bit-flip, truncation) or vanished mid-read.  Returns
+    ``(step, leaves, extra)``, or ``(None, None, None)`` when no valid
+    checkpoint exists — the restore primitive the self-healing supervisor
+    leans on after a crash."""
+    for step in reversed(all_steps(path)):
+        try:
+            leaves, extra = load(path, step)
+            return step, leaves, extra
+        except (CheckpointCorrupt, FileNotFoundError):
+            continue
+    return None, None, None
 
 
 def peek_extra(path: str, step: Optional[int] = None
@@ -170,14 +272,13 @@ def restore(path: str, step: int, like, *, shardings=None):
     ShapeDtypeStructs).  ``shardings``: optional matching pytree of
     NamedSharding for elastic replacement onto a new mesh."""
     d = os.path.join(path, f"step_{step:08d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)["leaves"]
+    manifest = _read_manifest(d)["leaves"]
     flat_like = _flatten(like)
     flat_sh = _flatten(shardings) if shardings is not None else None
     leaves = []
     for i, (key, leaf) in enumerate(flat_like):
         info = manifest[key]
-        arr = np.load(os.path.join(d, info["file"]))
+        arr = _load_leaf(d, key, info)
         expect = tuple(getattr(leaf, "shape", arr.shape))
         if tuple(arr.shape) != expect:
             raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {expect}")
@@ -239,34 +340,28 @@ class CheckpointManager:
         return out
 
     def restore_latest(self, like, shardings=None):
-        """Restore the newest checkpoint into the structure of ``like``;
-        returns ``(step, tree)`` or ``(None, None)`` when none exist."""
+        """Restore the newest *valid* checkpoint into the structure of
+        ``like``; returns ``(step, tree)`` or ``(None, None)`` when none
+        exist.  A torn/corrupt newest checkpoint (checksum mismatch,
+        truncated leaf) is skipped in favor of the next older valid one —
+        never a crash mid-rebuild."""
         self.wait()
         with self._lock:
-            while True:
-                step = latest_step(self.path)
-                if step is None:
-                    return None, None
+            for step in reversed(all_steps(self.path)):
                 try:
                     return step, restore(self.path, step, like,
                                          shardings=shardings)
-                except FileNotFoundError:
-                    continue    # that step vanished; re-list
+                except (CheckpointCorrupt, FileNotFoundError):
+                    continue    # torn or vanished: fall back to older
+            return None, None
 
     def load_latest(self):
         """Like :meth:`restore_latest` but with no like-tree: returns
-        ``(step, leaves, extra)`` via :func:`load`, or ``(None, None, None)``."""
+        ``(step, leaves, extra)`` via :func:`load`, or ``(None, None,
+        None)``.  Same newest-valid fallback on corruption."""
         self.wait()
         with self._lock:
-            while True:
-                step = latest_step(self.path)
-                if step is None:
-                    return None, None, None
-                try:
-                    leaves, extra = load(self.path, step)
-                    return step, leaves, extra
-                except FileNotFoundError:
-                    continue
+            return load_latest_valid(self.path)
 
     def peek_latest(self) -> Tuple[Optional[int], Optional[dict]]:
         """Manifest-only :func:`peek_extra` of the newest checkpoint,

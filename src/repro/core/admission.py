@@ -34,6 +34,14 @@ round consumes —
                          (durability plane; ``requeue_shard`` routes one
                          shard's slice on the sharded engine)
     clear_dead_letters   reset the dead-letter spool cursor after a drain
+    quarantine_stream    flip a stream's quarantined bit and purge its
+                         queued SUs to the DLQ as ``poisoned`` — the host
+                         half of the circuit breaker (fault plane)
+    unquarantine_stream  lift a quarantine and reset the breaker window
+    set_breaker          edit the engine-wide breaker knobs [W, F, ceil]
+    respool / respool_shard
+                         re-append refused dead letters to the spool and
+                         count them in ``redeliver_rejected``
 
 All ops address rows by an *index tuple*: ``(sid,)`` on a single device,
 ``(shard, local)`` against the sharded tables — the same code traces once
@@ -61,9 +69,9 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import (DLQ_REVOKED, FAIR_SCALE, INT_MAX, INT_MIN,
-                               DeviceTables, EngineState, _enqueue,
-                               dlq_append)
+from repro.core.engine import (DLQ_POISONED, DLQ_REVOKED, FAIR_SCALE,
+                               INT_MAX, INT_MIN, DeviceTables, EngineState,
+                               _enqueue, dlq_append)
 
 # token buckets refill as tokens + quota with tokens <= burst, so both
 # knobs are clipped to half the int32 range to make the sum overflow-proof
@@ -80,9 +88,12 @@ _TABLE_FILL = {
     "priority": 0, "n_channels": 1, "model_backed": False, "active": False,
 }
 # per-stream state-slice fills: last value/timestamp plus the retention
-# ring (a recycled sid must never replay its predecessor's emissions)
+# ring (a recycled sid must never replay its predecessor's emissions) and
+# the fault-plane counters (a recycled sid starts with a clean breaker)
 _STATE_FILL = {"values": 0.0, "timestamps": INT_MIN,
-               "ret_vals": 0.0, "ret_ts": 0, "ret_its": 0, "ret_count": 0}
+               "ret_vals": 0.0, "ret_ts": 0, "ret_its": 0, "ret_count": 0,
+               "quarantined": False, "fault_count": 0, "fault_epoch": 0,
+               "fault_total": 0}
 
 
 def _clear_row(tables: DeviceTables, row: Tuple) -> DeviceTables:
@@ -289,6 +300,93 @@ def set_quota(tables: DeviceTables, state: EngineState, tid, quota, burst
         burst=tables.burst.at[..., tid].set(b))
     state = state._replace(tokens=jnp.minimum(state.tokens, tables.burst))
     return tables, state
+
+
+@functools.partial(jax.jit, donate_argnums=(1,))
+def quarantine_stream(tables: DeviceTables, state: EngineState, row: Tuple,
+                      sid) -> EngineState:
+    """Quarantine stream ``sid``: flip its ``quarantined`` bit and purge
+    its queued SUs into ``stats["dropped_poisoned"]`` / the dead-letter
+    spool (reason ``poisoned``) — the same action the device-side breaker
+    takes when it trips, exposed as a host table edit.  The row's
+    registration, program and subscription edges are untouched, so
+    :func:`unquarantine_stream` restores service without re-admission.
+    Idempotent: a second call purges nothing (the queue is already
+    clean)."""
+    t_own = tables.tenant[row]
+    hit = state.q_valid & (state.q_sid == sid)
+    stats = dict(state.stats)
+    n_hit = hit.sum(axis=-1, dtype=jnp.int32)
+    stats["dropped_poisoned"] = stats["dropped_poisoned"] + n_hit
+    stats["purged"] = stats["purged"] + n_hit
+    if state.dlq_fill.ndim:         # sharded layout: per-shard spools
+        state = jax.vmap(lambda st, s_, v_, t_, m_, i_: dlq_append(
+            st, s_, v_, t_, jnp.full_like(s_, t_own), DLQ_POISONED, m_,
+            its=i_))(
+                state, state.q_sid, state.q_vals, state.q_ts, hit,
+                state.q_its)
+    else:
+        state = dlq_append(state, state.q_sid, state.q_vals, state.q_ts,
+                           jnp.full_like(state.q_sid, t_own),
+                           DLQ_POISONED, hit, its=state.q_its)
+    return state._replace(
+        quarantined=state.quarantined.at[row].set(True),
+        q_valid=state.q_valid & ~hit, stats=stats)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def unquarantine_stream(state: EngineState, row: Tuple) -> EngineState:
+    """Lift a quarantine: clear the bit and reset the breaker window
+    (``fault_count``/``fault_epoch``).  ``fault_total`` deliberately
+    survives — it is the supervisor's lifetime blame signal."""
+    return state._replace(
+        quarantined=state.quarantined.at[row].set(False),
+        fault_count=state.fault_count.at[row].set(0),
+        fault_epoch=state.fault_epoch.at[row].set(0))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def set_breaker(tables: DeviceTables, vals) -> DeviceTables:
+    """Overwrite the engine-wide breaker knobs ``[window, threshold,
+    amp_ceiling]`` — broadcast to every shard's replicated copy under the
+    sharded ``(n_shards, 3)`` layout.  The knobs are runtime data to the
+    round's fault phase, so tuning them mid-flight never retraces."""
+    v = jnp.asarray(vals, jnp.int32)
+    return tables._replace(
+        breaker=jnp.broadcast_to(v, tables.breaker.shape))
+
+
+def _respool_body(state: EngineState, sid, vals, ts, reason, tenant, its,
+                  valid) -> EngineState:
+    """Shared body of :func:`respool` / :func:`respool_shard`."""
+    stats = dict(state.stats)
+    stats["redeliver_rejected"] = stats["redeliver_rejected"] + \
+        valid.sum(dtype=jnp.int32)
+    state = dlq_append(state, sid, vals, ts, tenant, reason, valid, its=its)
+    return state._replace(stats=stats)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def respool(state: EngineState, sid, vals, ts, reason, tenant, its, valid
+            ) -> EngineState:
+    """Re-append refused dead letters behind the spool cursor, original
+    per-letter ``reason`` codes and ingest stamps preserved, counting them
+    in ``stats["redeliver_rejected"]`` — the fix for redelivery against
+    revoked/quarantined rows: the letters *stay in the spool* instead of
+    silently vanishing.  Saturates like any DLQ append (overflowed
+    letters are lost but still counted)."""
+    return _respool_body(state, sid, vals, ts, reason, tenant, its, valid)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def respool_shard(state: EngineState, shard, sid, vals, ts, reason, tenant,
+                  its, valid) -> EngineState:
+    """Sharded :func:`respool`: apply the edit to shard ``shard``'s spool
+    slice.  ``shard`` is traced — one trace serves every shard."""
+    loc = jax.tree.map(lambda x: x[shard], state)
+    loc = _respool_body(loc, sid, vals, ts, reason, tenant, its, valid)
+    return jax.tree.map(lambda full, leaf: full.at[shard].set(leaf),
+                        state, loc)
 
 
 def _requeue_body(state: EngineState, sid, vals, ts, valid, tenant, its=None

@@ -44,6 +44,21 @@ class EngineConfig:
     retention_slots: int = 0    # retained emissions per stream (0 = off)
     dlq_slots: int = 0          # dead-letter spool rows (0 = off)
 
+    # ---- fault-isolation plane (circuit breaker; docs/OPERATIONS.md) ---
+    # Per-stream poison detection rides the round as runtime data: a fault
+    # is a non-finite program output or a dispatch fanning out to more
+    # than `fault_amp_ceiling` valid work items.  A stream accumulating
+    # `fault_threshold` faults within a `fault_window`-round window trips
+    # its breaker and is quarantined on device (active mask flipped,
+    # queued SUs dead-lettered as `poisoned`).  These are *defaults*
+    # lowered into the runtime breaker table — live edits go through
+    # `StreamEngine.set_breaker` with zero retraces, so none of them is a
+    # compile-time shape.  threshold 0 disables tripping (faults are
+    # still counted); ceiling 0 disables amplification detection.
+    fault_window: int = 8       # W: rounds a fault burst may span
+    fault_threshold: int = 0    # F: faults within W that trip (0 = off)
+    fault_amp_ceiling: int = 0  # max valid fan-out per dispatch (0 = off)
+
     # ---- scheduler hot path (engine._pop) ------------------------------
     # "packed": selection pop over packed key planes — O(queue*batch), the
     #           Pallas sched_pop kernel on TPU, pure-jnp ref elsewhere.
@@ -178,6 +193,9 @@ class EngineConfig:
         assert self.sink_spool_slots >= 0
         assert self.scheduler in ("packed", "lexsort")
         assert self.checkpoint_every >= 0
+        assert self.fault_window >= 1
+        assert self.fault_threshold >= 0
+        assert self.fault_amp_ceiling >= 0
         assert self.retention_slots >= 0
         assert self.dlq_slots >= 0
         return self

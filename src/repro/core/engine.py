@@ -76,6 +76,10 @@ class DeviceTables(NamedTuple):
     weight: jnp.ndarray        # (T,) int32 fair-share weight; 0 = unshaped
     quota: jnp.ndarray         # (T,) int32 tokens refilled/round; 0 = no cap
     burst: jnp.ndarray         # (T,) int32 token-bucket capacity
+    # ---- fault plane (engine-wide, replicated per shard) ----------------
+    breaker: jnp.ndarray       # (3,) int32 [window W, threshold F, amp ceil];
+    #                            F == 0 never trips, ceil == 0 never counts
+    #                            amplification — faults still accumulate
 
     @classmethod
     def from_host(cls, t: EngineTables) -> "DeviceTables":
@@ -117,6 +121,14 @@ class EngineState(NamedTuple):
     dlq_reason: jnp.ndarray    # (D,) drop class (see DLQ_REASONS)
     dlq_tenant: jnp.ndarray    # (D,) charged tenant
     dlq_fill: jnp.ndarray      # scalar int32 spool cursor
+    # ---- fault-isolation plane (circuit breaker; always-on leaves) ------
+    quarantined: jnp.ndarray   # (N,) bool — breaker-tripped rows (row may
+    #                            still be `active`: quarantine is reversible
+    #                            without re-admission)
+    fault_count: jnp.ndarray   # (N,) int32 faults inside the current window
+    fault_epoch: jnp.ndarray   # (N,) int32 round the current window opened
+    fault_total: jnp.ndarray   # (N,) int32 lifetime faults (supervisor blame)
+    round_idx: jnp.ndarray     # scalar int32 device round counter (windows)
     stats: Dict[str, jnp.ndarray]
 
 
@@ -173,12 +185,16 @@ STAT_KEYS = (
     # scheduler removed; "purged" counts SUs removed without being served
     # (revocation queue purges, resize scale-in overflow).
     "queued_in", "popped", "purged",
+    # fault-isolation plane: SUs shed because their stream is quarantined
+    # (breaker-tripped or host `quarantine()`), and dead letters whose
+    # redelivery was refused because the stream is revoked/quarantined
+    "dropped_poisoned", "redeliver_rejected",
 )
 
 # Dead-letter drop classes: every ``dropped_*`` stat has a DLQ reason code,
 # so a drained letter names which counter it was charged to.
-DLQ_OVERFLOW, DLQ_REVOKED, DLQ_SPOOL, DLQ_QUOTA = range(4)
-DLQ_REASONS = ("overflow", "revoked", "spool", "quota")
+DLQ_OVERFLOW, DLQ_REVOKED, DLQ_SPOOL, DLQ_QUOTA, DLQ_POISONED = range(5)
+DLQ_REASONS = ("overflow", "revoked", "spool", "quota", "poisoned")
 
 
 def init_state(cfg: EngineConfig) -> EngineState:
@@ -213,6 +229,11 @@ def init_state(cfg: EngineConfig) -> EngineState:
         dlq_reason=jnp.zeros((D,), jnp.int32),
         dlq_tenant=jnp.zeros((D,), jnp.int32),
         dlq_fill=jnp.zeros((), jnp.int32),
+        quarantined=jnp.zeros((N,), bool),
+        fault_count=jnp.zeros((N,), jnp.int32),
+        fault_epoch=jnp.zeros((N,), jnp.int32),
+        fault_total=jnp.zeros((N,), jnp.int32),
+        round_idx=jnp.zeros((), jnp.int32),
         stats={k: jnp.zeros((), jnp.int32) for k in STAT_KEYS},
     )
 
@@ -442,11 +463,15 @@ def ingest_phase(state: EngineState, stats: Dict[str, jnp.ndarray],
                  quota: Optional[jnp.ndarray] = None,          # (T,)
                  burst: Optional[jnp.ndarray] = None,          # (T,)
                  fast_free: bool = False,
+                 quarantined: Optional[jnp.ndarray] = None,    # (B,) row mask
                  ) -> Tuple[EngineState, Dict[str, jnp.ndarray]]:
     """Phase 0: admit external SUs — store last-value/timestamp, enqueue for
     dispatch.  On a single device ``row == q_sid == sid``; the sharded step
     stores to shard-local rows but queues global sids.  SUs addressed to
-    revoked rows are dropped into ``dropped_revoked``.
+    revoked rows are dropped into ``dropped_revoked``; SUs addressed to
+    active-but-quarantined rows (breaker tripped, or host ``quarantine()``)
+    are dropped into ``dropped_poisoned`` and dead-lettered as ``poisoned``
+    so ``unquarantine`` + ``redeliver`` can bring them back.
 
     With the QoS args, per-tenant ingest quotas are enforced first: each
     tenant's token bucket refills by ``quota[t]`` tokens per round up to
@@ -456,7 +481,9 @@ def ingest_phase(state: EngineState, stats: Dict[str, jnp.ndarray],
     neither stored nor enqueued, so an over-quota tenant cannot crowd the
     queue.  ``quota[t] == 0`` (the default) means unlimited — the
     pre-quota behavior bit-exactly."""
-    arrive = ingest.valid & active
+    if quarantined is None:
+        quarantined = jnp.zeros_like(active)
+    arrive = ingest.valid & active & ~quarantined
     if tenant_of_row is None:
         i_live = arrive
     else:
@@ -498,6 +525,10 @@ def ingest_phase(state: EngineState, stats: Dict[str, jnp.ndarray],
     stats["dropped_revoked"] += (ingest.valid & ~active).sum(dtype=jnp.int32)
     state = dlq_append(state, q_sid, ingest.vals, ingest.ts, tenant_of_row,
                        DLQ_REVOKED, ingest.valid & ~active, its=ingest.its)
+    i_poison = ingest.valid & active & quarantined
+    stats["dropped_poisoned"] += i_poison.sum(dtype=jnp.int32)
+    state = dlq_append(state, q_sid, ingest.vals, ingest.ts, tenant_of_row,
+                       DLQ_POISONED, i_poison, its=ingest.its)
     stats["ingest_stale"] += (i_live & ~i_keep).sum(dtype=jnp.int32)
     stats["ingest_coalesced"] += (i_keep & ~i_win).sum(dtype=jnp.int32)
     state, dropped = _enqueue(state, q_sid, ingest.vals, ingest.ts, i_win,
@@ -589,6 +620,88 @@ def tenant_occupancy(state: EngineState, tenant_by_sid: jnp.ndarray,
 
 
 # --------------------------------------------------------------------------
+# fault-isolation plane — shared by the fused, staged and sharded rounds
+# --------------------------------------------------------------------------
+
+def fault_events(breaker: jnp.ndarray,
+                 badf: jnp.ndarray,        # (W,) non-finite VM results
+                 wi_valid: jnp.ndarray,    # (W,) live work-item lanes
+                 t_row: jnp.ndarray,       # (W,) target row per lane
+                 fan: jnp.ndarray,         # (B,) valid fan-out per event
+                 e_valid: jnp.ndarray,     # (B,) live popped events
+                 e_row: jnp.ndarray,       # (B,) source row per event
+                 n_rows: int) -> jnp.ndarray:
+    """Fold one round's two fault classes into a per-row event mask:
+
+    * **non-finite** — a program produced NaN/Inf this round, charged to
+      the *target* row that ran the bytecode (``badf`` is pre-masked VM
+      output; lanes are gated by ``wi_valid`` exactly like the
+      ``nonfinite`` stat, so counts and faults always agree);
+    * **amplification** — a popped SU fanned out to more than
+      ``breaker[2]`` valid work items, charged to the *source* row whose
+      out-degree did it (ceiling 0 disables the class).
+
+    Both scatters are any-reductions: a row faults at most once per round
+    no matter how many lanes misbehaved, which is what makes the window
+    counters path-independent (fused == staged == sharded)."""
+    nf_row = jnp.zeros((n_rows,), bool).at[
+        jnp.where(badf & wi_valid, t_row, n_rows)].set(True, mode="drop")
+    amp = (breaker[2] > 0) & e_valid & (fan > breaker[2])
+    amp_row = jnp.zeros((n_rows,), bool).at[
+        jnp.where(amp, e_row, n_rows)].set(True, mode="drop")
+    return nf_row | amp_row
+
+
+def fault_phase(state: EngineState, stats: Dict[str, jnp.ndarray],
+                breaker: jnp.ndarray,       # (3,) int32 [W, F, amp ceiling]
+                fault_evt: jnp.ndarray,     # (N,) per-row fault events
+                active: jnp.ndarray,        # (N,) real active mask
+                tenant_of_row: jnp.ndarray,  # (N,) owning tenant per row
+                q_row: jnp.ndarray,         # (Q,) row per queue slot
+                ) -> Tuple[EngineState, Dict[str, jnp.ndarray]]:
+    """Advance the per-stream circuit breaker one round and quarantine the
+    rows that tripped — all runtime data, traced once.
+
+    Window state machine (per row): the first fault opens a W-round window
+    anchored at ``fault_epoch``; further faults inside it increment
+    ``fault_count``; a fault after expiry restarts the window at 1; a
+    fault-free round past expiry decays the count to 0.  When an active,
+    not-yet-quarantined row reaches ``count >= F`` (F > 0) it trips:
+    ``quarantined`` flips on device and every queued SU of that row is
+    purged to the DLQ as ``poisoned`` this same round (later arrivals are
+    shed at the ingest gate).  ``fault_total`` accumulates forever — the
+    supervisor's blame signal — and ``round_idx`` is the window clock."""
+    W, F = breaker[0], breaker[1]
+    rid = state.round_idx
+    in_win = (rid - state.fault_epoch) < W
+    restart = fault_evt & (~in_win | (state.fault_count == 0))
+    count = jnp.where(
+        fault_evt,
+        jnp.where(restart, 1, state.fault_count + 1),
+        jnp.where(in_win, state.fault_count, 0)).astype(jnp.int32)
+    epoch = jnp.where(restart, rid, state.fault_epoch)
+    trip = (F > 0) & (count >= F) & active & ~state.quarantined
+    quarantined = state.quarantined | trip
+    state = state._replace(
+        quarantined=quarantined,
+        fault_count=count,
+        fault_epoch=epoch,
+        fault_total=state.fault_total + fault_evt.astype(jnp.int32),
+        round_idx=rid + 1,
+    )
+    # purge queued SUs of quarantined rows (idempotent: hit slots go
+    # invalid, and the ingest/pop gates keep new ones out while tripped)
+    hit = state.q_valid & quarantined[q_row]
+    n_hit = hit.sum(dtype=jnp.int32)
+    stats["dropped_poisoned"] += n_hit
+    stats["purged"] += n_hit
+    state = dlq_append(state, state.q_sid, state.q_vals, state.q_ts,
+                       tenant_of_row[q_row], DLQ_POISONED, hit,
+                       its=state.q_its)
+    return state._replace(q_valid=state.q_valid & ~hit), stats
+
+
+# --------------------------------------------------------------------------
 # stage 1 — subscriber dispatching (jnp reference; Pallas kernel optional)
 # --------------------------------------------------------------------------
 
@@ -638,8 +751,10 @@ def process_work_items(
     On a single device ``rows == t_sid`` index the global tables/state; the
     sharded engine passes shard-local table rows plus the all-gathered
     by-sid value/timestamp snapshot, so both engines evaluate identical
-    Listing-2 semantics.  Returns ``(new_vals, ts_out, live, keep, counts)``
-    where counts holds the stage-3 stat increments.
+    Listing-2 semantics.  Returns ``(new_vals, ts_out, live, keep, counts,
+    badf)`` where counts holds the stage-3 stat increments and ``badf``
+    flags work items whose VM result was non-finite (pre-``wi_valid`` —
+    mask it like the ``nonfinite`` count does) for the fault plane.
     """
     W = t_sid.shape[0]
     M, C, R = cfg.max_in, cfg.channels, cfg.n_regs
@@ -682,7 +797,7 @@ def process_work_items(
         "filtered": (live & keep_ts & ~(pref & postf)).sum(dtype=jnp.int32),
         "nonfinite": ((~finite).any(axis=-1) & wi_valid).sum(dtype=jnp.int32),
     }
-    return new_vals, ts_out, live, keep, counts
+    return new_vals, ts_out, live, keep, counts, (~finite).any(axis=-1)
 
 
 # --------------------------------------------------------------------------
@@ -731,9 +846,15 @@ def make_step(
                                         tables.active[i_sid], N,
                                         tables.tenant[i_sid],
                                         tables.quota, tables.burst,
-                                        fast_free=True)
+                                        fast_free=True,
+                                        quarantined=state.quarantined[i_sid])
 
             # ---- stages 1-3 fused: pop, fan-out, fetch+VM, window gate --
+            # quarantined rows ride the kernel's existing active gate (no
+            # signature change): the *effective* mask keeps them from
+            # dispatching or winning; the real mask is re-read outside so
+            # revoked and poisoned drops stay separately accounted
+            eff_active = tables.active & ~state.quarantined
             prio_slot = tables.priority[state.q_sid]
             t_slot = jnp.clip(tables.tenant[state.q_sid], 0, T - 1)
             w_slot = tables.weight[t_slot]
@@ -742,7 +863,7 @@ def make_step(
                              w_slot, state.q_sid, state.q_vals, state.q_ts,
                              B, tables.out_table, tables.in_table,
                              tables.progs, tables.consts,
-                             tables.is_composite, tables.active,
+                             tables.is_composite, eff_active,
                              state.values, state.timestamps, layout)
             # the ingest stamps of the popped slots ride outside the kernel:
             # `take` is the same slot selection the staged _pop returns, so
@@ -751,11 +872,20 @@ def make_step(
             state = state._replace(
                 q_valid=state.q_valid.at[take].set(False))
             stats["popped"] += e_pop.sum(dtype=jnp.int32)
-            # events whose stream was revoked while queued drop here
-            stats["dropped_revoked"] += (e_pop & ~e_act).sum(dtype=jnp.int32)
+            # events whose stream was revoked/quarantined while queued drop
+            # here (split so triage can tell a torn-down tenant from a
+            # breaker-tripped one)
+            e_row = jnp.clip(e_sid, 0, N - 1)
+            e_real = tables.active[e_row]
+            e_poison = e_pop & e_real & state.quarantined[e_row]
+            stats["dropped_revoked"] += (e_pop & ~e_real).sum(dtype=jnp.int32)
             state = dlq_append(state, e_sid, e_vals, e_ts,
-                               tables.tenant[jnp.clip(e_sid, 0, N - 1)],
-                               DLQ_REVOKED, e_pop & ~e_act, its=e_its)
+                               tables.tenant[e_row],
+                               DLQ_REVOKED, e_pop & ~e_real, its=e_its)
+            stats["dropped_poisoned"] += e_poison.sum(dtype=jnp.int32)
+            state = dlq_append(state, e_sid, e_vals, e_ts,
+                               tables.tenant[e_row],
+                               DLQ_POISONED, e_poison, its=e_its)
             new_vals, ts_out, live, keep, keep_ts, passf, badf = applied
             stats["processed"] += live.sum(dtype=jnp.int32)
             stats["discarded_stale"] += (live & ~keep_ts).sum(dtype=jnp.int32)
@@ -772,6 +902,14 @@ def make_step(
                                                 ts_out, keep, N,
                                                 fast_free=True,
                                                 wi_its=wi_its)
+
+            # ---- fault plane: breaker window + device auto-quarantine ---
+            fan = (wi_t.reshape(B, F) >= 0).sum(axis=1, dtype=jnp.int32)
+            fault_evt = fault_events(tables.breaker, badf, wi_t >= 0, t,
+                                     fan, e_pop & e_act, e_row, N)
+            state, stats = fault_phase(
+                state, stats, tables.breaker, fault_evt, tables.active,
+                tables.tenant, jnp.clip(state.q_sid, 0, N - 1))
             state = state._replace(
                 stats=stats,
                 tenant_queued=tenant_occupancy(state, tables.tenant,
@@ -791,20 +929,28 @@ def make_step(
         state, stats = ingest_phase(state, stats, ingest, i_sid, i_sid,
                                     tables.active[i_sid], N,
                                     tables.tenant[i_sid],
-                                    tables.quota, tables.burst)
+                                    tables.quota, tables.burst,
+                                    quarantined=state.quarantined[i_sid])
 
         # ---- pop this round's events (weighted-fair across tenants) -----
         state, (e_sid, e_vals, e_ts, e_its, e_pop) = _pop(
             state, tables.priority, B, tables.tenant, tables.weight,
             cfg.scheduler)
         stats["popped"] += e_pop.sum(dtype=jnp.int32)
-        # events whose stream was revoked while queued drop here
-        e_act = tables.active[jnp.clip(e_sid, 0, N - 1)]
+        # events whose stream was revoked/quarantined while queued drop here
+        e_row = jnp.clip(e_sid, 0, N - 1)
+        e_real = tables.active[e_row]
+        e_act = e_real & ~state.quarantined[e_row]
         e_valid = e_pop & e_act
-        stats["dropped_revoked"] += (e_pop & ~e_act).sum(dtype=jnp.int32)
+        e_poison = e_pop & e_real & state.quarantined[e_row]
+        stats["dropped_revoked"] += (e_pop & ~e_real).sum(dtype=jnp.int32)
         state = dlq_append(state, e_sid, e_vals, e_ts,
-                           tables.tenant[jnp.clip(e_sid, 0, N - 1)],
-                           DLQ_REVOKED, e_pop & ~e_act, its=e_its)
+                           tables.tenant[e_row],
+                           DLQ_REVOKED, e_pop & ~e_real, its=e_its)
+        stats["dropped_poisoned"] += e_poison.sum(dtype=jnp.int32)
+        state = dlq_append(state, e_sid, e_vals, e_ts,
+                           tables.tenant[e_row],
+                           DLQ_POISONED, e_poison, its=e_its)
 
         # ---- stage 1: subscriber dispatching ----------------------------
         # The engine applies the stale check in process_work_items'
@@ -822,8 +968,12 @@ def make_step(
         t = jnp.clip(wi_t, 0, N - 1)
 
         # ---- stages 2 + 3: fetch, transform, filter ----------------------
-        new_vals, ts_out, live, keep, counts = process_work_items(
-            cfg, tables, t, t, wi_src, wi_vals, wi_ts, wi_valid,
+        # the effective active mask (real & ~quarantined) gates the live
+        # verdict, so a quarantined *target* cannot run or win either —
+        # exactly the mask the fused kernel saw
+        new_vals, ts_out, live, keep, counts, badf = process_work_items(
+            cfg, tables._replace(active=tables.active & ~state.quarantined),
+            t, t, wi_src, wi_vals, wi_ts, wi_valid,
             state.values, state.timestamps)
         for k, v in counts.items():
             stats[k] = stats[k] + v
@@ -832,6 +982,14 @@ def make_step(
         state, stats, sink = store_and_emit(cfg, tables, state, stats,
                                             t, t, wi_src, new_vals, ts_out,
                                             keep, N, wi_its=wi_its)
+
+        # ---- fault plane: breaker window + device auto-quarantine --------
+        fan = (wi_t.reshape(B, F) >= 0).sum(axis=1, dtype=jnp.int32)
+        fault_evt = fault_events(tables.breaker, badf, wi_valid, t,
+                                 fan, e_valid, e_row, N)
+        state, stats = fault_phase(
+            state, stats, tables.breaker, fault_evt, tables.active,
+            tables.tenant, jnp.clip(state.q_sid, 0, N - 1))
         state = state._replace(
             stats=stats,
             tenant_queued=tenant_occupancy(state, tables.tenant,
@@ -1580,13 +1738,13 @@ class StreamEngine:
     def rewire(self) -> None:
         """Re-lower the registry after subscribe()/new streams — still no
         recompilation (same-shaped tables).  The per-tenant QoS tables
-        (weight/quota/burst) are preserved: they are placement-independent
-        data the registry does not mirror."""
+        (weight/quota/burst) and the breaker knobs are preserved: they are
+        placement-independent data the registry does not mirror."""
         prio = np.asarray(self.tables.priority)
         self.tables = DeviceTables.from_host(
             self.registry.build_tables(prio))._replace(
                 weight=self.tables.weight, quota=self.tables.quota,
-                burst=self.tables.burst)
+                burst=self.tables.burst, breaker=self.tables.breaker)
         self._refresh_fusable()
 
     # ----------------------------------------------------- tenant QoS plane
@@ -1618,6 +1776,75 @@ class StreamEngine:
             self.tables, self.state, self._tid(tenant),
             np.int32(quota), np.int32(b))
         self._sync_admitted()
+
+    # ------------------------------------------------- fault-isolation plane
+    def set_breaker(self, window: Optional[int] = None,
+                    threshold: Optional[int] = None,
+                    amp_ceiling: Optional[int] = None) -> None:
+        """Tune the circuit breaker *live* — one jitted table edit, zero
+        retraces (the knobs are runtime data like the QoS tables).  A
+        stream accumulating ``threshold`` faults (non-finite program
+        output, or dispatch fan-out over ``amp_ceiling``) within a
+        ``window``-round span is auto-quarantined on device.
+        ``threshold=0`` disarms tripping (faults still count);
+        ``amp_ceiling=0`` disarms amplification detection.  Omitted knobs
+        keep their current values."""
+        from repro.core import admission
+        cur = np.asarray(self.tables.breaker).reshape(-1, 3)[0]
+        w = cur[0] if window is None else int(window)
+        f = cur[1] if threshold is None else int(threshold)
+        c = cur[2] if amp_ceiling is None else int(amp_ceiling)
+        assert w >= 1 and f >= 0 and c >= 0
+        self.tables = admission.set_breaker(
+            self.tables, np.asarray([w, f, c], np.int32))
+        self._sync_admitted()
+
+    def quarantine(self, stream) -> None:
+        """Quarantine a stream by hand (the breaker's trip action, host-
+        triggered): its quarantined bit flips, queued SUs purge to the DLQ
+        as ``poisoned``, and the ingest/pop gates shed everything addressed
+        to it until :meth:`unquarantine`.  Unlike :meth:`revoke_stream` the
+        row keeps its registration, program and subscriptions — quarantine
+        is reversible without re-admission.  One jitted edit, zero
+        retraces; idempotent."""
+        from repro.core import admission
+        sid = stream.sid if hasattr(stream, "sid") else int(stream)
+        self.state = admission.quarantine_stream(
+            self.tables, self.state, self._table_row(sid), np.int32(sid))
+        self._sync_admitted()
+
+    def unquarantine(self, stream) -> None:
+        """Lift a stream's quarantine and reset its breaker window
+        (``fault_count``/``fault_epoch`` zero; the lifetime
+        ``fault_total`` survives for supervisor blame).  The stream
+        resumes exactly where its table row left off; its dead-lettered
+        SUs come back through :meth:`redeliver`."""
+        from repro.core import admission
+        sid = stream.sid if hasattr(stream, "sid") else int(stream)
+        self.state = admission.unquarantine_stream(
+            self.state, self._table_row(sid))
+        self._sync_admitted()
+
+    def fault_counters(self) -> Dict[str, np.ndarray]:
+        """The fault plane's per-stream counters as by-sid host arrays:
+        ``quarantined`` (bool), ``fault_count`` (faults in the current
+        breaker window) and ``fault_total`` (lifetime faults — the
+        supervisor's blame signal).  Gathered across shards on the sharded
+        engine."""
+        out = {}
+        for key, field in (("quarantined", "quarantined"),
+                           ("fault_count", "fault_count"),
+                           ("fault_total", "fault_total")):
+            a = np.asarray(getattr(self.state, field))
+            if a.ndim == 2:             # sharded: (S, L) -> by sid
+                a = a.reshape(-1)[self.plan.sid_to_flat]
+            out[key] = a
+        return out
+
+    def is_quarantined(self, stream) -> bool:
+        """Whether ``stream``'s row is currently quarantined."""
+        sid = stream.sid if hasattr(stream, "sid") else int(stream)
+        return bool(self.state.quarantined[self._table_row(sid)])
 
     def tenant_backlog(self, tenant=None):
         """Per-tenant pending-SU queue occupancy after the last round —
@@ -1685,13 +1912,34 @@ class StreamEngine:
     def _install_snapshot(self, arrays: Dict[str, np.ndarray],
                           meta: dict) -> None:
         """Overwrite this (freshly built) engine with a snapshot's tables,
-        state and backlog — the restore half of :meth:`snapshot`."""
-        self.tables = DeviceTables(**{
-            f: jnp.asarray(arrays[f"tables/{f}"])
-            for f in DeviceTables._fields})
-        st = {f: jnp.asarray(arrays[f"state/{f}"])
+        state and backlog — the restore half of :meth:`snapshot`.
+        Pre-fault-plane snapshots default the breaker table from the
+        config and the fault leaves/stats to zero (nothing quarantined),
+        so old checkpoints stay restorable."""
+        brk = arrays.get("tables/breaker")
+        if brk is None:
+            brk = np.array([self.cfg.fault_window, self.cfg.fault_threshold,
+                            self.cfg.fault_amp_ceiling], np.int32)
+            if arrays["tables/active"].ndim == 2:
+                brk = np.tile(brk[None], (arrays["tables/active"].shape[0], 1))
+        self.tables = DeviceTables(**dict(
+            {f: jnp.asarray(arrays[f"tables/{f}"])
+             for f in DeviceTables._fields if f != "breaker"},
+            breaker=jnp.asarray(brk)))
+        row_shape = arrays["state/timestamps"].shape
+        fault_fill = {
+            "quarantined": np.zeros(row_shape, bool),
+            "fault_count": np.zeros(row_shape, np.int32),
+            "fault_epoch": np.zeros(row_shape, np.int32),
+            "fault_total": np.zeros(row_shape, np.int32),
+            "round_idx": np.zeros(np.asarray(arrays["state/seq"]).shape,
+                                  np.int32),
+        }
+        st = {f: jnp.asarray(arrays[f"state/{f}"]
+                             if f"state/{f}" in arrays else fault_fill[f])
               for f in EngineState._fields if f != "stats"}
-        st["stats"] = {k: jnp.asarray(arrays[f"state/stats/{k}"])
+        stat0 = np.zeros_like(np.asarray(arrays["state/stats/ingested"]))
+        st["stats"] = {k: jnp.asarray(arrays.get(f"state/stats/{k}", stat0))
                        for k in STAT_KEYS}
         self.state = EngineState(**st)
         p_sid, p_vals, p_ts = (arrays["pending/sid"], arrays["pending/vals"],
@@ -1775,19 +2023,65 @@ class StreamEngine:
         already stored when it dropped, so it re-enqueues through the
         jitted requeue edit, bypassing the phase-0 stale gate so
         historical timestamps survive.  Letters whose stream is no longer
-        registered are skipped; re-enqueues that overflow the queue drop
-        (and dead-letter) again.  Returns the number submitted."""
+        admittable — revoked *or* still quarantined — are refused: they
+        stay in the spool (re-appended through the jitted respool edit)
+        and are counted in ``stats["redeliver_rejected"]``, so an operator
+        who redelivers before lifting a quarantine loses nothing and sees
+        the refusal in the counters.  Re-enqueues that overflow the queue
+        drop (and dead-letter) again.  Returns the number submitted."""
         if letters is None:
             letters = self.dead_letters(clear=True)
-        live = [lt for lt in letters
-                if 0 <= lt.sid < len(self.registry.streams)
-                and self.registry.streams[lt.sid] is not None]
+        qmask = self.fault_counters()["quarantined"]
+        live, rejected = [], []
+        for lt in letters:
+            registered = (0 <= lt.sid < len(self.registry.streams)
+                          and self.registry.streams[lt.sid] is not None)
+            if registered and not bool(qmask[lt.sid]):
+                live.append(lt)
+            else:
+                rejected.append(lt)
         for lt in live:
             if lt.reason == "quota":
                 self.post(lt.sid, lt.vals, lt.ts, its=lt.its)
         self._requeue_batch([(lt.sid, lt.vals, lt.ts, lt.tenant, lt.its)
                              for lt in live if lt.reason != "quota"])
+        self._respool_rejected(rejected)
         return len(live)
+
+    def _respool_rejected(self, letters: List[DeadLetter]) -> None:
+        """Put refused dead letters back in the spool (original reason and
+        stamps preserved) and count them — one padded jitted edit per
+        chunk, same static width as ``_requeue_batch`` so redelivery churn
+        never retraces."""
+        if not letters:
+            return
+        W = max(self.cfg.retention_slots, self.cfg.dlq_slots, 1)
+        C = self.cfg.channels
+        for ofs in range(0, len(letters), W):
+            chunk = letters[ofs:ofs + W]
+            sid = np.zeros((W,), np.int32)
+            vals = np.zeros((W, C), np.float32)
+            ts = np.zeros((W,), np.int32)
+            reason = np.zeros((W,), np.int32)
+            tenant = np.zeros((W,), np.int32)
+            its = np.zeros((W,), np.int32)
+            valid = np.zeros((W,), bool)
+            for i, lt in enumerate(chunk):
+                sid[i], vals[i], ts[i] = lt.sid, lt.vals, lt.ts
+                reason[i] = DLQ_REASONS.index(lt.reason)
+                tenant[i], its[i], valid[i] = lt.tenant, lt.its, True
+            self._apply_respool(sid, vals, ts, reason, tenant, its, valid)
+
+    def _apply_respool(self, sid, vals, ts, reason, tenant, its,
+                       valid) -> None:
+        """Hook: one padded respool edit (the sharded engine routes each
+        letter to its owner shard here)."""
+        from repro.core import admission
+        self.state = admission.respool(
+            self.state, jnp.asarray(sid), jnp.asarray(vals),
+            jnp.asarray(ts), jnp.asarray(reason), jnp.asarray(tenant),
+            jnp.asarray(its), jnp.asarray(valid))
+        self._sync_admitted()
 
     def _replay_retained(self, src) -> int:
         """Re-enqueue ``src``'s retained emissions oldest-first — the
@@ -1955,7 +2249,13 @@ def restore_engine(source, *, step: Optional[int] = None, mesh=None,
     an M-shard engine (or a single-device one, ``n_shards=1``) — the same
     :func:`~repro.distributed.stream_sharding.reshard_snapshot` mapping
     ``StreamEngine.resize`` uses, which makes this path the resize
-    primitive's differential oracle."""
+    primitive's differential oracle.
+
+    Torn checkpoints: with ``step=None`` a corrupt newest checkpoint
+    (checksum mismatch, truncated leaf) is *skipped*, falling back to the
+    next older valid one — the contract the self-healing supervisor leans
+    on.  An explicitly requested ``step`` still raises
+    :class:`~repro.checkpoint.ckpt.CheckpointCorrupt` on damage."""
     if isinstance(source, tuple):
         arrays, meta = source
     else:
@@ -1971,10 +2271,11 @@ def restore_engine(source, *, step: Optional[int] = None, mesh=None,
         else:
             path = os.fspath(source)
             if step is None:
-                step = _ckpt.latest_step(path)
+                step, arrays, meta = _ckpt.load_latest_valid(path)
                 if step is None:
                     return None
-            arrays, meta = _ckpt.load(path, step)
+            else:
+                arrays, meta = _ckpt.load(path, step)
     if n_shards is not None or partition is not None:
         from repro.distributed.stream_sharding import reshard_snapshot
         cfg0 = EngineConfig(**meta["registry"]["cfg"])

@@ -98,6 +98,11 @@ class EngineTables:
     weight: np.ndarray         # (T,) int32 fair-share weight, 0 = unshaped
     quota: np.ndarray          # (T,) int32 ingest tokens/round, 0 = no cap
     burst: np.ndarray          # (T,) int32 token-bucket capacity
+    breaker: np.ndarray        # (3,) int32 circuit breaker [W, F, amp_ceil];
+    #                            F == 0 disarms tripping, ceil == 0 disarms
+    #                            amplification detection.  Runtime data like
+    #                            the QoS tables: edited live via
+    #                            ``StreamEngine.set_breaker``.
 
 
 class Registry:
@@ -404,6 +409,9 @@ class Registry:
             weight=np.zeros((T,), np.int32),
             quota=np.zeros((T,), np.int32),
             burst=np.zeros((T,), np.int32),
+            breaker=np.array([self.cfg.fault_window,
+                              self.cfg.fault_threshold,
+                              self.cfg.fault_amp_ceiling], np.int32),
         )
 
     # ---------------------------------------------------------- durability

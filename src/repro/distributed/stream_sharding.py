@@ -64,12 +64,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import admission
 from repro.core.config import EngineConfig
-from repro.core.engine import (DLQ_OVERFLOW, DLQ_REVOKED, INT_MIN, STAT_KEYS,
+from repro.core.engine import (DLQ_OVERFLOW, DLQ_POISONED, DLQ_REVOKED,
+                               INT_MIN, STAT_KEYS,
                                DeviceTables, EngineState, IngestBatch,
                                IngestRing, SinkBatch, SinkSpool, StreamEngine,
                                _pop, _stage_ring, dlq_append,
-                               fanout_reference, ingest_phase,
-                               process_work_items, scan_rounds,
+                               fanout_reference, fault_events, fault_phase,
+                               ingest_phase, process_work_items, scan_rounds,
                                store_and_emit, tenant_occupancy)
 from repro.core.registry import EngineTables, Registry
 
@@ -164,6 +165,7 @@ def shard_tables(tables: EngineTables, plan: ShardPlan) -> EngineTables:
         weight=np.tile(tables.weight[None], (S, 1)),
         quota=np.tile(tables.quota[None], (S, 1)),
         burst=np.tile(tables.burst[None], (S, 1)),
+        breaker=np.tile(tables.breaker[None], (S, 1)),
     )
 
 
@@ -243,6 +245,11 @@ def sharded_init_state(cfg: EngineConfig, plan: ShardPlan) -> EngineState:
         dlq_reason=jnp.zeros((S, D), jnp.int32),
         dlq_tenant=jnp.zeros((S, D), jnp.int32),
         dlq_fill=jnp.zeros((S,), jnp.int32),
+        quarantined=jnp.zeros((S, L), bool),
+        fault_count=jnp.zeros((S, L), jnp.int32),
+        fault_epoch=jnp.zeros((S, L), jnp.int32),
+        fault_total=jnp.zeros((S, L), jnp.int32),
+        round_idx=jnp.zeros((S,), jnp.int32),
         stats={k: jnp.zeros((S,), jnp.int32) for k in STAT_KEYS},
     )
 
@@ -252,6 +259,8 @@ def sharded_init_state(cfg: EngineConfig, plan: ShardPlan) -> EngineState:
 # --------------------------------------------------------------------------
 
 _QOS_FIELDS = ("weight", "quota", "burst")
+# replicated (per-shard copy) table planes: QoS plus the breaker config row
+_REPL_FIELDS = _QOS_FIELDS + ("breaker",)
 
 
 def reshard_snapshot(arrays, meta, n_shards: int,
@@ -326,12 +335,26 @@ def reshard_snapshot(arrays, meta, n_shards: int,
         def tot(x):
             return np.array(x)   # copy: totals are mutated below
 
-    tab = {f: (qos if f in _QOS_FIELDS else by_sid)(arrays[f"tables/{f}"])
-           for f in DeviceTables._fields}
+    def tab_leaf(f):
+        src = arrays.get(f"tables/{f}")
+        if src is None:     # snapshot predates the fault plane: cfg defaults
+            return np.array([cfg.fault_window, cfg.fault_threshold,
+                             cfg.fault_amp_ceiling], np.int32)
+        return (qos if f in _REPL_FIELDS else by_sid)(src)
+
+    tab = {f: tab_leaf(f) for f in DeviceTables._fields}
     tenant_flat = tab["tenant"].astype(np.int64)
     per_sid = {f: by_sid(arrays[f"state/{f}"])
                for f in ("values", "timestamps",
                          "ret_vals", "ret_ts", "ret_its", "ret_count")}
+    # fault-plane per-stream leaves (absent in pre-fault-plane snapshots)
+    for f, dt in (("quarantined", bool), ("fault_count", np.int32),
+                  ("fault_epoch", np.int32), ("fault_total", np.int32)):
+        src = arrays.get(f"state/{f}")
+        per_sid[f] = by_sid(src) if src is not None \
+            else np.zeros((N,), dt)
+    r_idx = np.asarray(arrays.get("state/round_idx", 0))
+    round_idx = np.int32(r_idx.max() if r_idx.ndim else r_idx)
 
     # queued SUs in canonical (shard-major, FIFO) order
     q_sid, q_vals = lead(arrays["state/q_sid"]), lead(arrays["state/q_vals"])
@@ -379,6 +402,14 @@ def reshard_snapshot(arrays, meta, n_shards: int,
     ret_ts[plan.sid_to_flat] = per_sid["ret_ts"]
     ret_its[plan.sid_to_flat] = per_sid["ret_its"]
     ret_count[plan.sid_to_flat] = per_sid["ret_count"]
+    quarantined = np.zeros((F2,), bool)
+    f_count = np.zeros((F2,), np.int32)
+    f_epoch = np.zeros((F2,), np.int32)
+    f_total = np.zeros((F2,), np.int32)
+    quarantined[plan.sid_to_flat] = per_sid["quarantined"]
+    f_count[plan.sid_to_flat] = per_sid["fault_count"]
+    f_epoch[plan.sid_to_flat] = per_sid["fault_epoch"]
+    f_total[plan.sid_to_flat] = per_sid["fault_total"]
 
     nq_sid = np.zeros((S2, Q), np.int32)
     nq_vals = np.zeros((S2, Q, C), np.float32)
@@ -450,6 +481,13 @@ def reshard_snapshot(arrays, meta, n_shards: int,
         "state/ret_ts": ret_ts.reshape(S2, L2, Rr),
         "state/ret_its": ret_its.reshape(S2, L2, Rr),
         "state/ret_count": ret_count.reshape(S2, L2),
+        # every shard carries the same round counter (each increments once
+        # per round), so migrated fault windows stay anchored correctly
+        "state/quarantined": quarantined.reshape(S2, L2),
+        "state/fault_count": f_count.reshape(S2, L2),
+        "state/fault_epoch": f_epoch.reshape(S2, L2),
+        "state/fault_total": f_total.reshape(S2, L2),
+        "state/round_idx": np.full((S2,), round_idx, np.int32),
         "state/dlq_sid": nd_sid, "state/dlq_vals": nd_vals,
         "state/dlq_ts": nd_ts, "state/dlq_its": nd_its,
         "state/dlq_reason": nd_reason,
@@ -541,7 +579,8 @@ def make_shard_round(
                                     tables.active[l_sid], n_local,
                                     tables.tenant[l_sid],
                                     tables.quota, tables.burst,
-                                    fast_free=fused)
+                                    fast_free=fused,
+                                    quarantined=state.quarantined[l_sid])
 
         # ---- pop this round's events (weighted-fair; global sids) -------
         state, (e_sid, e_vals, e_ts, e_its, e_pop) = _pop(
@@ -550,13 +589,19 @@ def make_shard_round(
         stats["popped"] += e_pop.sum(dtype=jnp.int32)
         e_loc = jnp.clip(gmap.sid_to_local[jnp.clip(e_sid, 0, N - 1)],
                          0, n_local - 1)
-        # events whose stream was revoked while queued drop here
+        # events whose stream was revoked (or quarantined) while queued
+        # drop here; the two classes are accounted separately
         e_act = tables.active[e_loc]
-        e_valid = e_pop & e_act
+        e_poison = e_pop & e_act & state.quarantined[e_loc]
+        e_valid = e_pop & e_act & ~state.quarantined[e_loc]
         stats["dropped_revoked"] += (e_pop & ~e_act).sum(dtype=jnp.int32)
         state = dlq_append(state, e_sid, e_vals, e_ts,
                            tenant_by_sid[jnp.clip(e_sid, 0, N - 1)],
                            DLQ_REVOKED, e_pop & ~e_act, its=e_its)
+        stats["dropped_poisoned"] += e_poison.sum(dtype=jnp.int32)
+        state = dlq_append(state, e_sid, e_vals, e_ts,
+                           tenant_by_sid[jnp.clip(e_sid, 0, N - 1)],
+                           DLQ_POISONED, e_poison, its=e_its)
 
         # ---- post-ingest snapshot: the lock-free global view ------------
         vals_all = jax.lax.all_gather(state.values, AXIS)
@@ -632,11 +677,14 @@ def make_shard_round(
         r_loc = jnp.clip(gmap.sid_to_local[rt_safe], 0, n_local - 1)
 
         # ---- stages 2 + 3 (shared with the single-device engine) --------
+        # quarantined rows are masked out of the effective active plane, so
+        # a poisoned stream neither stores nor emits while tripped
+        eff_active = tables.active & ~state.quarantined
         if fused:
             new_vals, ts_out, live, keep, keep_ts, passf, badf = \
                 apply_programs(layout, tables.in_table, tables.progs,
                                tables.consts, tables.is_composite,
-                               tables.active, r_loc, rt_safe, r_src,
+                               eff_active, r_loc, rt_safe, r_src,
                                r_vals, r_ts, r_valid,
                                values_by_sid, ts_by_sid)
             stats["processed"] += live.sum(dtype=jnp.int32)
@@ -646,9 +694,9 @@ def make_shard_round(
                 (live & keep_ts & ~passf).sum(dtype=jnp.int32)
             stats["nonfinite"] += (badf & r_valid).sum(dtype=jnp.int32)
         else:
-            new_vals, ts_out, live, keep, counts = process_work_items(
-                cfg, tables, r_loc, rt_safe, r_src, r_vals, r_ts, r_valid,
-                values_by_sid, ts_by_sid)
+            new_vals, ts_out, live, keep, counts, badf = process_work_items(
+                cfg, tables._replace(active=eff_active), r_loc, rt_safe,
+                r_src, r_vals, r_ts, r_valid, values_by_sid, ts_by_sid)
             for k, v in counts.items():
                 stats[k] = stats[k] + v
 
@@ -658,6 +706,19 @@ def make_shard_round(
                                             r_loc, r_t, r_src, new_vals,
                                             ts_out, keep, n_local,
                                             fast_free=fused, wi_its=r_its)
+
+        # ---- fault plane: breaker window + device auto-quarantine -------
+        # amplification is detected at the dispatch site (the source shard
+        # owns the popped sid); non-finite results are detected after the
+        # exchange on the shard owning the target row — each fault lands
+        # on its row's owner, so the breaker state never needs collectives
+        fan = (wi_t.reshape(B, F) >= 0).sum(axis=1, dtype=jnp.int32)
+        fault_evt = fault_events(tables.breaker, badf, r_valid, r_loc,
+                                 fan, e_valid, e_loc, n_local)
+        q_row = jnp.clip(gmap.sid_to_local[jnp.clip(state.q_sid, 0, N - 1)],
+                         0, n_local - 1)
+        state, stats = fault_phase(state, stats, tables.breaker, fault_evt,
+                                   tables.active, tables.tenant, q_row)
         state = state._replace(
             stats=stats,
             tenant_queued=tenant_occupancy(state, tenant_by_sid,
@@ -1167,13 +1228,31 @@ class ShardedStreamEngine(StreamEngine):
                 self.state.ret_its).reshape(F_old, Rr)[old.sid_to_flat]
             rc[new_plan.sid_to_flat] = np.asarray(
                 self.state.ret_count).reshape(-1)[old.sid_to_flat]
+            # the breaker's per-sid books move with their rows too — a
+            # quarantine must stick to its stream across a re-placement
+            qr = np.zeros((S * L,), bool)
+            fcn = np.zeros((S * L,), np.int32)
+            fen = np.zeros((S * L,), np.int32)
+            ftn = np.zeros((S * L,), np.int32)
+            qr[new_plan.sid_to_flat] = np.asarray(
+                self.state.quarantined).reshape(-1)[old.sid_to_flat]
+            fcn[new_plan.sid_to_flat] = np.asarray(
+                self.state.fault_count).reshape(-1)[old.sid_to_flat]
+            fen[new_plan.sid_to_flat] = np.asarray(
+                self.state.fault_epoch).reshape(-1)[old.sid_to_flat]
+            ftn[new_plan.sid_to_flat] = np.asarray(
+                self.state.fault_total).reshape(-1)[old.sid_to_flat]
             self.state = jax.device_put(self.state._replace(
                 values=jnp.asarray(v.reshape(S, L, C)),
                 timestamps=jnp.asarray(ts.reshape(S, L)),
                 ret_vals=jnp.asarray(rv.reshape(S, L, Rr, C)),
                 ret_ts=jnp.asarray(rt.reshape(S, L, Rr)),
                 ret_its=jnp.asarray(ri.reshape(S, L, Rr)),
-                ret_count=jnp.asarray(rc.reshape(S, L))), self._shard)
+                ret_count=jnp.asarray(rc.reshape(S, L)),
+                quarantined=jnp.asarray(qr.reshape(S, L)),
+                fault_count=jnp.asarray(fcn.reshape(S, L)),
+                fault_epoch=jnp.asarray(fen.reshape(S, L)),
+                fault_total=jnp.asarray(ftn.reshape(S, L))), self._shard)
             if L != old.n_local:    # step closures are shaped by n_local
                 self._compiled_for(
                     self._layout_key(new_plan),
@@ -1276,4 +1355,19 @@ class ShardedStreamEngine(StreamEngine):
                 jnp.asarray(vals), jnp.asarray(ts),
                 jnp.asarray(valid & (owner == s)), jnp.asarray(tenant),
                 its=jnp.asarray(its))
+        self._sync_admitted()
+
+    def _apply_respool(self, sid, vals, ts, reason, tenant, its,
+                       valid) -> None:
+        """Route each refused dead letter back to its owner shard's spool
+        (one :func:`admission.respool_shard` edit per shard touched; the
+        shard index is traced, so churn stays at one trace total)."""
+        owner = self.plan.sid_to_shard[
+            np.clip(sid, 0, self.cfg.n_streams - 1)]
+        for s in sorted(set(owner[valid].tolist())):
+            self.state = admission.respool_shard(
+                self.state, jnp.int32(s), jnp.asarray(sid),
+                jnp.asarray(vals), jnp.asarray(ts), jnp.asarray(reason),
+                jnp.asarray(tenant), jnp.asarray(its),
+                jnp.asarray(valid & (owner == s)))
         self._sync_admitted()

@@ -1,0 +1,238 @@
+"""Checkpoint-backed self-healing supervisor for the stream engine.
+
+The missing production layer the DSP elasticity survey calls *integrated*
+fault tolerance: not a bolt-on restart script but a driver that owns the
+run loop, watches every superstep, and composes the primitives the repo
+already has — atomic checksummed checkpoints with newest-valid fallback
+(:mod:`repro.checkpoint.ckpt`), bit-exact restore
+(:func:`repro.core.engine.restore_engine`), per-stream fault counters and
+the quarantine plane (the device circuit breaker) — into an automated
+recovery story:
+
+* **detect** — a superstep that raises (e.g. a chaos
+  :class:`~repro.launch.chaos.ShardKill`) is a *crash*; one that exceeds
+  ``step_budget_s`` wall-clock is a *stall* (both become incidents);
+* **restore** — rebuild from the newest *valid* checkpoint (torn/corrupt
+  ones are skipped by the checksum plane) with bounded retries under
+  exponential backoff;
+* **replay** — re-drive the deterministic feed from the restored step to
+  the failure point, so the recovered engine is bit-identical to an
+  undisturbed twin (the property ``benchmarks/chaos.py`` verifies);
+* **blame** — read the breaker's lifetime ``fault_total`` counters after
+  every incident and attribute the failure to the streams that faulted;
+* **escalate** — a stream blamed in ``escalate_after`` distinct incidents
+  is force-quarantined (the host-triggered trip), so a tenant that keeps
+  slipping under the in-window breaker threshold still loses service
+  before it takes the run down again;
+* **log** — every incident is a structured :class:`Incident` record
+  (JSON-able via :meth:`SuperviseReport.to_json`), because a fault story
+  without an audit trail is not operable.
+
+The supervisor drives *supersteps*, the same quantum the checkpoint
+cadence (``cfg.checkpoint_every``) counts, so "restore + replay" is an
+exact prefix-replay — the feed callback must be a pure function of the
+step index (post the same SUs for step ``i`` every time it is called).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Incident:
+    """One detected failure and what recovery did about it."""
+    step: int                   # superstep index the failure surfaced at
+    kind: str                   # "crash" | "stall"
+    detail: str                 # exception repr / stall wall-time
+    restored_step: int = -1     # checkpoint step recovery restored (-1: none)
+    retries: int = 0            # restore attempts consumed
+    replayed_steps: int = 0     # supersteps re-driven after restore
+    downtime_s: float = 0.0     # detect -> recovered wall-clock (MTTR term)
+    blamed: List[int] = dataclasses.field(default_factory=list)
+    escalated: List[int] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class SuperviseReport:
+    """Outcome of one supervised run."""
+    steps: int
+    incidents: List[Incident]
+    recovered: bool             # every incident ended in a live engine
+    engine: object = None       # the (possibly rebuilt) engine reference
+
+    @property
+    def mttr_s(self) -> float:
+        """Mean time to recovery across incidents (0 when none)."""
+        if not self.incidents:
+            return 0.0
+        return float(np.mean([i.downtime_s for i in self.incidents]))
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "steps": self.steps,
+            "recovered": self.recovered,
+            "mttr_s": self.mttr_s,
+            "incidents": [dataclasses.asdict(i) for i in self.incidents],
+        }, indent=2)
+
+
+class Supervisor:
+    """Watchdog + recovery driver around one engine.
+
+    ``feed(engine, step)`` posts step ``step``'s SUs — it must be
+    deterministic in ``step`` (replay calls it again for the same index).
+    ``chaos(engine, step)`` (optional) runs injections *before* the feed;
+    it is NOT called during replay — injected process-death doesn't
+    re-occur while recovering from it, but everything the feed posted
+    (including poison SUs) is re-posted bit-identically.
+
+    The engine must checkpoint into ``ckpt_path`` (the supervisor attaches
+    a manager via ``checkpoint_to`` if none is attached yet; set
+    ``cfg.checkpoint_every`` to the cadence)."""
+
+    def __init__(self, engine, ckpt_path: str, *,
+                 feed: Optional[Callable] = None,
+                 chaos: Optional[Callable] = None,
+                 K: Optional[int] = None,
+                 step_budget_s: float = float("inf"),
+                 max_retries: int = 3,
+                 backoff0_s: float = 0.05,
+                 backoff_mult: float = 2.0,
+                 blame_faults: int = 1,
+                 escalate_after: int = 2,
+                 keep: int = 3,
+                 mesh=None):
+        self.engine = engine
+        self.ckpt_path = ckpt_path
+        self.feed = feed
+        self.chaos = chaos
+        self.K = K or engine.cfg.superstep
+        self.step_budget_s = step_budget_s
+        self.max_retries = max_retries
+        self.backoff0_s = backoff0_s
+        self.backoff_mult = backoff_mult
+        self.blame_faults = blame_faults
+        self.escalate_after = escalate_after
+        self.mesh = mesh
+        self.incidents: List[Incident] = []
+        self._blame_counts: Dict[int, int] = {}
+        if engine._ckpt is None:
+            engine.checkpoint_to(ckpt_path, keep=keep)
+
+    # ------------------------------------------------------------ plumbing
+    def _drive(self, step: int, *, replay: bool) -> None:
+        """One superstep: chaos (live only) -> feed -> compiled run."""
+        if self.chaos is not None and not replay:
+            self.chaos(self.engine, step)
+        if self.feed is not None:
+            self.feed(self.engine, step)
+        self.engine.superstep(self.K)
+
+    def _restore(self, inc: Incident) -> None:
+        """Bounded-retry restore from the newest valid checkpoint, with
+        exponential backoff between attempts.  Raises the last error when
+        every attempt fails (the run is then genuinely down)."""
+        from repro.core.engine import restore_engine
+        last: Optional[BaseException] = None
+        for attempt in range(self.max_retries):
+            inc.retries = attempt + 1
+            if attempt:
+                time.sleep(self.backoff0_s
+                           * self.backoff_mult ** (attempt - 1))
+            try:
+                eng = restore_engine(self.ckpt_path, mesh=self.mesh)
+            except Exception as e:        # torn dir listing, device loss...
+                last = e
+                continue
+            if eng is None:               # no valid checkpoint at all
+                last = RuntimeError(
+                    f"no valid checkpoint under {self.ckpt_path}")
+                continue
+            eng.checkpoint_to(self.ckpt_path)
+            self.engine = eng
+            inc.restored_step = eng._steps_done
+            return
+        raise RuntimeError(
+            f"recovery failed after {self.max_retries} attempts: {last}"
+        ) from last
+
+    def _assign_blame(self, inc: Incident) -> None:
+        """Blame the streams whose lifetime fault counters crossed
+        ``blame_faults``; force-quarantine any blamed in
+        ``escalate_after`` distinct incidents."""
+        fc = self.engine.fault_counters()
+        blamed = np.nonzero(fc["fault_total"] >= self.blame_faults)[0]
+        inc.blamed = [int(s) for s in blamed]
+        for sid in inc.blamed:
+            n = self._blame_counts.get(sid, 0) + 1
+            self._blame_counts[sid] = n
+            if n >= self.escalate_after and not bool(fc["quarantined"][sid]):
+                self.engine.quarantine(sid)
+                inc.escalated.append(sid)
+
+    # ------------------------------------------------------------ run loop
+    def step(self, step: int) -> Optional[Incident]:
+        """Drive superstep ``step`` under the watchdog.  Returns the
+        incident when a failure was detected (and recovered), else None."""
+        t0 = time.monotonic()
+        try:
+            self._drive(step, replay=False)
+            wall = time.monotonic() - t0
+            if wall <= self.step_budget_s:
+                return None
+            inc = Incident(step=step, kind="stall",
+                           detail=f"superstep took {wall:.3f}s "
+                                  f"(budget {self.step_budget_s:.3f}s)")
+        except Exception as e:
+            inc = Incident(step=step, kind="crash", detail=repr(e))
+        # ---- recover: restore newest valid, replay the feed prefix ------
+        # log first: a recovery that itself fails must still leave the
+        # incident in the audit trail
+        self.incidents.append(inc)
+        self._restore(inc)
+        for s in range(self.engine._steps_done, step + 1):
+            self._drive(s, replay=True)
+            inc.replayed_steps += 1
+        self._assign_blame(inc)
+        inc.downtime_s = time.monotonic() - t0
+        return inc
+
+    def run(self, n_steps: int, start: int = 0) -> SuperviseReport:
+        """Drive ``n_steps`` supervised supersteps.  Every failure is
+        recovered in-line; an unrecoverable one (no valid checkpoint,
+        retries exhausted) propagates after being logged."""
+        step = start
+        try:
+            while step < start + n_steps:
+                self.step(step)
+                step += 1
+        except Exception:
+            self.incidents[-1:] = self.incidents[-1:]   # keep the log
+            report = SuperviseReport(steps=step - start,
+                                     incidents=self.incidents,
+                                     recovered=False, engine=self.engine)
+            self.last_report = report
+            raise
+        report = SuperviseReport(steps=n_steps, incidents=self.incidents,
+                                 recovered=True, engine=self.engine)
+        self.last_report = report
+        return report
+
+
+def supervised_run(engine, ckpt_path: str, n_steps: int, *,
+                   feed: Optional[Callable] = None,
+                   chaos: Optional[Callable] = None,
+                   **kw) -> SuperviseReport:
+    """Canonical supervised drive loop (mirror of
+    :func:`repro.launch.autoscale.autoscaled_run`): wrap ``engine`` in a
+    :class:`Supervisor` and run ``n_steps`` supersteps.  The returned
+    report's ``engine`` field is the live engine — possibly a *different
+    object* than the input if a recovery rebuilt it (same contract as
+    ``restore_engine``)."""
+    sup = Supervisor(engine, ckpt_path, feed=feed, chaos=chaos, **kw)
+    return sup.run(n_steps)

@@ -60,6 +60,8 @@ class ModelBackedStreams:
         self.completed: List[Request] = []
         self.deferred: List[Tuple[int, np.ndarray, Optional[int]]] = []
         self._occ: Optional[np.ndarray] = None   # host occupancy snapshot
+        self._qmask: Optional[np.ndarray] = None  # host quarantine snapshot
+        self.dropped_quarantined = 0   # emissions dropped at the bridge
         if watermark is not None and hasattr(batcher, "throttle"):
             # the batcher half of the hook: backlogged tenants' queued
             # requests wait for a decode slot until they drain
@@ -79,8 +81,24 @@ class ModelBackedStreams:
         return int(self._occ[tenant]) > self.watermark
 
     def _refresh_backpressure(self) -> None:
-        """Drop the occupancy snapshot (the engine may have advanced)."""
+        """Drop the occupancy + quarantine snapshots (the engine may have
+        advanced)."""
         self._occ = None
+        self._qmask = None
+
+    def _quarantined(self, sid: int) -> bool:
+        """True when the circuit breaker has quarantined ``sid`` — read
+        from a host snapshot taken at most once per pump/drain burst (the
+        same one-readback pattern as :meth:`_throttled`).  Emissions from
+        a quarantined source already in the spool or the deferred list are
+        poison-adjacent by definition: they were produced before the trip
+        landed, so the bridge drops them instead of spending model slots
+        on them."""
+        qm = self._qmask
+        if qm is None:
+            qm = self._qmask = np.asarray(
+                self.engine.fault_counters()["quarantined"])
+        return 0 <= sid < qm.shape[0] and bool(qm[sid])
 
     def route(self, model_stream, response_stream, prompt_len: int = 8):
         """Emissions of ``model_stream`` become LM requests; completions are
@@ -178,6 +196,9 @@ class ModelBackedStreams:
         r = self.routes.get(sid)
         if r is None:
             return 0
+        if self._quarantined(sid):         # breaker tripped on the source
+            self.dropped_quarantined += 1
+            return 0
         if self._throttled(r.tenant):      # pump slowed: hold host-side
             self.deferred.append((sid, np.asarray(vals), its))
             return 0
@@ -192,8 +213,10 @@ class ModelBackedStreams:
 
     def release_deferred(self) -> int:
         """Re-try emissions deferred by backpressure; those whose tenant is
-        still over the watermark re-defer (and revoked routes drop).
-        Returns the number actually submitted."""
+        still over the watermark re-defer, while revoked routes and
+        sources quarantined since the deferral drop (the latter counted in
+        ``dropped_quarantined``; one ``fault_counters`` readback covers the
+        whole burst).  Returns the number actually submitted."""
         self._refresh_backpressure()
         pending, self.deferred = self.deferred, []
         n = 0
@@ -240,6 +263,7 @@ class ModelBackedStreams:
             if sid < len(streams) and streams[sid] is not None
             and streams[self._sid_of(r.response_stream)] is not None}
         self._occ = None
+        self._qmask = None
 
     # ------------------------------------------------- durability & replay
     def snapshot(self) -> Dict:
@@ -279,6 +303,7 @@ class ModelBackedStreams:
         self.inflight = {}
         self._rid_its = {}
         self._occ = None
+        self._qmask = None
 
     @staticmethod
     def _sid_of(stream) -> int:

@@ -299,9 +299,13 @@ def test_dlq_captures_revoked_queue_purge(n_shards):
     letters = eng.dead_letters(clear=False)
     assert [(l.sid, l.reason, l.ts, float(l.vals[0]), l.tenant)
             for l in letters] == [(mid.sid, "revoked", 50, 7.0, 0)]
-    # drain clears; dead sid is skipped by redelivery
+    # redelivery refuses the dead sid — the letter *stays* in the spool
+    # (re-appended, original reason preserved) and the refusal is counted
     assert eng.redeliver() == 0
-    assert eng.dead_letters() == []
+    assert eng.counters()["redeliver_rejected"] == 1
+    kept = eng.dead_letters(clear=False)
+    assert [(l.sid, l.reason, l.ts, float(l.vals[0]), l.tenant)
+            for l in kept] == [(mid.sid, "revoked", 50, 7.0, 0)]
 
 
 def test_dlq_captures_revoked_ingest():

@@ -329,12 +329,14 @@ def _check_ref_vs_staged(c):
         j(values), j(timestamps))
 
     new_vals, ts_out, live, keep, keep_ts, passf, badf = fused
-    s_new_vals, s_ts_out, s_live, s_keep, counts = staged
+    s_new_vals, s_ts_out, s_live, s_keep, counts, s_badf = staged
     np.testing.assert_array_equal(np.asarray(new_vals).view(np.int32),
                                   np.asarray(s_new_vals).view(np.int32))
     np.testing.assert_array_equal(np.asarray(ts_out), np.asarray(s_ts_out))
     np.testing.assert_array_equal(np.asarray(live), np.asarray(s_live))
     np.testing.assert_array_equal(np.asarray(keep), np.asarray(s_keep))
+    # the poison detector itself is part of the differential contract
+    np.testing.assert_array_equal(np.asarray(badf), np.asarray(s_badf))
     assert int(counts["processed"]) == int(live.sum())
     assert int(counts["discarded_stale"]) == int((live & ~keep_ts).sum())
     assert int(counts["filtered"]) == int((live & keep_ts & ~passf).sum())
